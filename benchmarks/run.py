@@ -1,0 +1,297 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows:
+  table6  copy-detection + truth-finding quality vs PAIRWISE   (Table VI)
+  table7  execution time + improvement cascade                 (Table VII)
+  table8  INCREMENTAL/HYBRID per-round ratio + pass-1 %        (Table VIII)
+  table9  sampling strategies                                  (Table IX)
+  table10 time ratio vs FAGININPUT                             (Table X)
+  fig2    single-round algorithms: computations + time         (Fig. 2)
+  fig3    index orderings: BYCONTRIBUTION/BYPROVIDER/RANDOM    (Fig. 3)
+  lm      token-throughput smoke of the training substrate
+
+Run:  PYTHONPATH=src python -m benchmarks.run [table6 table7 ...]
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from benchmarks.datasets import BENCH_SPECS, SMALL, load, pairwise_mode
+from repro.core import (
+    ClaimsDataset,
+    CopyConfig,
+    bound_detect,
+    bucketed_index_detect,
+    fagin_input,
+    hybrid_detect,
+    incremental_detect,
+    index_detect_exact,
+    make_incremental_state,
+    pair_f_measure,
+    pairwise_detect,
+    sample_by_cell,
+    sample_by_item,
+    scale_sample,
+    truth_finding,
+)
+from repro.core.bucketed import pad_buckets
+from repro.core.index import InvertedIndex, bucketize, build_index
+from repro.core.truthfind import fusion_accuracy
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+ROWS = []
+
+
+def emit(name: str, value, derived=""):
+    ROWS.append((name, value, derived))
+    print(f"{name},{value},{derived}", flush=True)
+
+
+def _pairwise_time(name, sc, p):
+    """Full or 10%-extrapolated PAIRWISE wall time."""
+    if pairwise_mode(name) == "full":
+        res = pairwise_detect(sc.dataset, p, CFG)
+        return res.wall_time_s, res
+    D = sc.dataset.n_items
+    sub_idx = np.arange(0, D, 10)
+    sub = sc.dataset.subset_items(sub_idx)
+    res = pairwise_detect(sub, p[:, sub_idx], CFG)
+    return res.wall_time_s * (D / len(sub_idx)), None
+
+
+# ---------------------------------------------------------------------------
+
+def table6():
+    """Copy-detection P/R/F + truth-finding agreement vs PAIRWISE."""
+    for name in SMALL:
+        sc, p = load(name)
+        ref = pairwise_detect(sc.dataset, p, CFG)
+        truth = ref.copying_pairs()
+        ref_fusion = truth_finding(sc.dataset, CFG, detector="pairwise",
+                                   max_rounds=5)
+
+        methods = {
+            "sample1": lambda: _sampled(sc, p, sample_by_item(
+                sc.dataset, 0.1, seed=1)),
+            "index": lambda: bucketed_index_detect(sc.dataset, p, CFG),
+            "hybrid": lambda: hybrid_detect(sc.dataset, p, CFG),
+            "scalesample": lambda: _sampled(sc, p, scale_sample(
+                sc.dataset, 0.1, min_per_source=4, seed=1)),
+        }
+        for m, fn in methods.items():
+            res = fn()
+            prec, rec, f = pair_f_measure(res.copying_pairs(), truth)
+            emit(f"table6/{name}/{m}/precision", round(prec, 3))
+            emit(f"table6/{name}/{m}/recall", round(rec, 3))
+            emit(f"table6/{name}/{m}/f_measure", round(f, 3))
+        # truth-finding agreement: accuracy variance vs pairwise fusion
+        fus = truth_finding(sc.dataset, CFG, detector="hybrid", max_rounds=5)
+        acc_var = float(np.abs(fus.accuracy - ref_fusion.accuracy).mean())
+        fusion_acc = fusion_accuracy(fus, sc.dataset, sc.true_values)
+        emit(f"table6/{name}/hybrid/accuracy_variance", round(acc_var, 4))
+        emit(f"table6/{name}/hybrid/fusion_accuracy", round(fusion_acc, 3))
+
+
+def _sampled(sc, p, items):
+    sub = sc.dataset.subset_items(items)
+    return bucketed_index_detect(sub, p[:, items], CFG)
+
+
+def table7():
+    """Execution time cascade (PAIRWISE → … → SCALESAMPLE)."""
+    for name in BENCH_SPECS:
+        sc, p = load(name)
+        t_pair, _ = _pairwise_time(name, sc, p)
+        mode = pairwise_mode(name)
+        emit(f"table7/{name}/pairwise/seconds", round(t_pair, 3),
+             "extrapolated_from_10pct" if mode == "extrapolate" else "measured")
+
+        t0 = time.perf_counter()
+        items = sample_by_item(sc.dataset, 0.1, seed=1)
+        _sampled(sc, p, items)
+        t_sample1 = time.perf_counter() - t0
+        emit(f"table7/{name}/sample1/seconds", round(t_sample1, 3),
+             f"improvement={1 - t_sample1 / t_pair:.1%}")
+
+        res = bucketed_index_detect(sc.dataset, p, CFG)
+        emit(f"table7/{name}/index/seconds", round(res.wall_time_s, 3),
+             f"improvement={1 - res.wall_time_s / t_pair:.1%}")
+        t_prev = res.wall_time_s
+
+        res = hybrid_detect(sc.dataset, p, CFG)
+        emit(f"table7/{name}/hybrid/seconds", round(res.wall_time_s, 3),
+             f"improvement={1 - res.wall_time_s / max(t_prev, 1e-9):.1%}")
+        t_prev = res.wall_time_s
+
+        # incremental round (state built once = rounds 1–2 cost, then deltas)
+        _, state = make_incremental_state(sc.dataset, p, CFG)
+        rng = np.random.default_rng(0)
+        p2 = np.clip(p + np.where(p > 0, rng.normal(0, 0.005, p.shape), 0),
+                     1e-3, 0.999).astype(np.float32)
+        res = incremental_detect(sc.dataset, p2, CFG, state)
+        emit(f"table7/{name}/incremental/seconds", round(res.wall_time_s, 3),
+             f"improvement={1 - res.wall_time_s / max(t_prev, 1e-9):.1%}")
+
+        t0 = time.perf_counter()
+        items = scale_sample(sc.dataset, 0.1, min_per_source=4, seed=1)
+        _sampled(sc, p, items)
+        t_ss = time.perf_counter() - t0
+        emit(f"table7/{name}/scalesample/seconds", round(t_ss, 3),
+             f"total_improvement={1 - t_ss / t_pair:.2%}")
+
+
+def table8():
+    """INCREMENTAL vs HYBRID per round + pass-1 settlement."""
+    for name in SMALL:
+        sc, p = load(name)
+        hyb = hybrid_detect(sc.dataset, p, CFG)
+        _, state = make_incremental_state(sc.dataset, p, CFG)
+        rng = np.random.default_rng(1)
+        pk = p
+        for rnd in range(3, 6):
+            pk = np.clip(pk + np.where(pk > 0, rng.normal(0, 0.004, pk.shape), 0),
+                         1e-3, 0.999).astype(np.float32)
+            res = incremental_detect(sc.dataset, pk, CFG, state)
+            ratio = res.wall_time_s / max(hyb.wall_time_s, 1e-9)
+            emit(f"table8/{name}/round{rnd}/time_ratio", round(ratio, 4),
+                 f"pass1_settled={state.pass1_settled:.1%}")
+
+
+def table9():
+    """Sampling strategies at matched rates."""
+    for name in SMALL:
+        sc, p = load(name)
+        ref = pairwise_detect(sc.dataset, p, CFG)
+        truth = ref.copying_pairs()
+        idx_ss = scale_sample(sc.dataset, 0.1, min_per_source=4, seed=1)
+        rate_items = len(idx_ss) / sc.dataset.n_items
+        cells = sc.dataset.provided_mask[:, idx_ss].sum() / sc.dataset.provided_mask.sum()
+        strategies = {
+            "scalesample": idx_ss,
+            "byitem": sample_by_item(sc.dataset, rate_items, seed=1),
+            "bycell": sample_by_cell(sc.dataset, cells, seed=1),
+        }
+        for s_name, items in strategies.items():
+            res = _sampled(sc, p, items)
+            prec, rec, f = pair_f_measure(res.copying_pairs(), truth)
+            emit(f"table9/{name}/{s_name}/f_measure", round(f, 3),
+                 f"prec={prec:.2f} rec={rec:.2f}")
+
+
+def table10():
+    """HYBRID / INCREMENTAL time as a ratio of FAGININPUT generation."""
+    for name in SMALL:
+        sc, p = load(name)
+        idx = build_index(sc.dataset, p, CFG)
+        *_, t_fagin = fagin_input(sc.dataset, p, CFG, index=idx)
+        hyb = hybrid_detect(sc.dataset, p, CFG, index=idx)
+        emit(f"table10/{name}/hybrid/ratio",
+             round(hyb.wall_time_s / max(t_fagin, 1e-9), 3),
+             f"fagin={t_fagin:.3f}s")
+        _, state = make_incremental_state(sc.dataset, p, CFG)
+        rng = np.random.default_rng(2)
+        p2 = np.clip(p + np.where(p > 0, rng.normal(0, 0.005, p.shape), 0),
+                     1e-3, 0.999).astype(np.float32)
+        inc = incremental_detect(sc.dataset, p2, CFG, state)
+        emit(f"table10/{name}/incremental/ratio",
+             round(inc.wall_time_s / max(t_fagin, 1e-9), 3))
+
+
+def fig2():
+    """Single-round algorithms: computations and wall time."""
+    for name in SMALL:
+        sc, p = load(name)
+        idx = build_index(sc.dataset, p, CFG)
+        algos = {
+            "index": lambda: bucketed_index_detect(sc.dataset, p, CFG, index=idx),
+            "bound": lambda: bound_detect(sc.dataset, p, CFG, index=idx),
+            "bound+": lambda: bound_detect(sc.dataset, p, CFG, index=idx,
+                                           use_timers=True),
+            "hybrid": lambda: hybrid_detect(sc.dataset, p, CFG, index=idx),
+        }
+        for a, fn in algos.items():
+            fn()                                  # warm-up (JIT compile)
+            res = fn()
+            emit(f"fig2/{name}/{a}/computations", res.counter.total,
+                 f"seconds={res.wall_time_s:.3f}")
+
+
+def fig3():
+    """Entry orderings: BYCONTRIBUTION (ours) vs BYPROVIDER vs RANDOM."""
+    for name in SMALL:
+        sc, p = load(name)
+        base = build_index(sc.dataset, p, CFG)
+        orders = {
+            "bycontribution": np.arange(base.n_entries),
+            "byprovider": np.argsort(base.V.sum(axis=0), kind="stable"),
+            "random": np.random.default_rng(0).permutation(base.n_entries),
+        }
+        for o_name, order in orders.items():
+            idx = InvertedIndex(
+                V=np.ascontiguousarray(base.V[:, order]),
+                entry_item=base.entry_item[order],
+                entry_value=base.entry_value[order],
+                entry_p=base.entry_p[order],
+                entry_score=base.entry_score[order],
+                ebar_start=base.n_entries if o_name != "bycontribution"
+                else base.ebar_start,
+                l_counts=base.l_counts,
+                items_per_source=base.items_per_source,
+            )
+            bound_detect(sc.dataset, p, CFG, index=idx, use_timers=True)
+            res = bound_detect(sc.dataset, p, CFG, index=idx, use_timers=True)
+            emit(f"fig3/{name}/{o_name}/computations", res.counter.total,
+                 f"seconds={res.wall_time_s:.3f}")
+
+
+def lm():
+    """Training-substrate throughput smoke (tiny llama on CPU)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import Model
+    from repro.optim import adamw
+    from repro.optim.schedule import warmup_cosine
+    from repro.runtime.train_loop import init_train_state, make_train_step
+
+    cfg = get_config("llama3.2-1b").reduced(d_model=64, d_ff=128, vocab=256)
+    model = Model(cfg)
+    opt = adamw()
+    step = jax.jit(make_train_step(model, opt, warmup_cosine(1e-3, 5, 100)))
+    state = init_train_state(model, opt, jax.random.PRNGKey(0))
+    B, S = 8, 128
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 256, (B, S)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 256, (B, S)), jnp.int32)}
+    state, _ = step(state, batch)                     # compile
+    t0 = time.perf_counter()
+    n = 10
+    for _ in range(n):
+        state, m = step(state, batch)
+    jax.block_until_ready(m["loss"])
+    dt = (time.perf_counter() - t0) / n
+    emit("lm/train_step/us_per_call", round(dt * 1e6, 1),
+         f"tokens_per_s={B * S / dt:.0f}")
+
+
+# default order: cheapest first so partial runs still cover most tables
+TABLES = {
+    "lm": lm, "fig2": fig2, "fig3": fig3, "table8": table8, "table9": table9,
+    "table10": table10, "table6": table6, "table7": table7,
+}
+
+
+def main() -> None:
+    which = sys.argv[1:] or list(TABLES)
+    print("name,value,derived")
+    for w in which:
+        t0 = time.perf_counter()
+        TABLES[w]()
+        print(f"# {w} done in {time.perf_counter() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

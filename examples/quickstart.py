@@ -1,0 +1,59 @@
+"""Quickstart: the paper's motivating example end to end.
+
+Builds the inverted index of Table III, runs every detection algorithm, and
+iterates truth finding until the NY.Albany flip (Table II) happens.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (
+    CopyConfig,
+    bound_detect,
+    bucketed_index_detect,
+    build_index,
+    index_detect_exact,
+    pairwise_detect,
+    truth_finding,
+)
+from repro.data.claims import motivating_example, motivating_value_probs
+
+cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+ds = motivating_example()
+p = motivating_value_probs(ds)
+
+print("=== Inverted index (Table III) ===")
+idx = build_index(ds, p, cfg)
+for e in range(idx.n_entries):
+    name = ds.value_names[(int(idx.entry_item[e]), int(idx.entry_value[e]))]
+    tail = "  (Ē)" if e >= idx.ebar_start else ""
+    provs = ",".join(f"S{s}" for s in idx.providers(e))
+    print(f"  {name:<14} P={idx.entry_p[e]:.2f}  score={idx.entry_score[e]:.2f}"
+          f"  providers=[{provs}]{tail}")
+
+print("\n=== Detection (all algorithms agree) ===")
+for name, fn in [("PAIRWISE", pairwise_detect),
+                 ("INDEX(exact)", index_detect_exact),
+                 ("INDEX(bucketed)", bucketed_index_detect),
+                 ("BOUND", bound_detect)]:
+    res = fn(ds, p, cfg)
+    pairs = sorted(res.copying_pairs())
+    c = res.counter
+    print(f"  {name:<16} copying={[(f'S{i}', f'S{j}') for i, j in pairs]} "
+          f"computations={c.total}")
+
+print("\n=== Iterative truth finding (Table II) ===")
+fus = truth_finding(ds, cfg, detector="hybrid", max_rounds=8,
+                    track_history=True)
+print(f"  converged in {fus.rounds} rounds")
+print("  final accuracies:",
+      " ".join(f"S{i}={a:.2f}" for i, a in enumerate(fus.accuracy)))
+groups = fus.groups
+for e in range(len(fus.p_entry)):
+    d = groups.entry_item[e]
+    provs = np.nonzero(groups.V_all[:, e])[0]
+    vname = ds.value_names.get((int(d), int(ds.values[provs[0], d])))
+    if vname in ("NY.Albany", "NY.NewYork", "NJ.Trenton", "NJ.Atlantic"):
+        print(f"  P({vname}) = {fus.p_entry[e]:.2f}")
+print("\nNY.Albany beats NY.NewYork because S2–S4's shared false values "
+      "mark them as copiers, discounting their votes — the paper's core claim.")

@@ -1,0 +1,47 @@
+"""End-to-end scalable fusion on a Book-CS-scale synthetic dataset:
+PAIRWISE vs INDEX vs HYBRID vs INCREMENTAL — quality identical, time falls
+by orders of magnitude (the paper's Tables VI + VII in one script).
+
+  PYTHONPATH=src python examples/truth_finding_e2e.py [--sources N] [--items N]
+"""
+import argparse
+import time
+
+import numpy as np
+
+from repro.core import CopyConfig, pair_f_measure, truth_finding
+from repro.core.truthfind import fusion_accuracy
+from repro.data.claims import SyntheticSpec, synthetic_claims
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--sources", type=int, default=400)
+ap.add_argument("--items", type=int, default=2000)
+ap.add_argument("--rounds", type=int, default=6)
+args = ap.parse_args()
+
+cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+spec = SyntheticSpec(n_sources=args.sources, n_items=args.items,
+                     coverage="book", n_cliques=args.sources // 40 + 3,
+                     clique_size=3, clique_items=14, seed=0)
+sc = synthetic_claims(spec)
+print(f"dataset: {args.sources} sources × {args.items} items, "
+      f"{len(sc.copies)} planted copying pairs")
+
+results = {}
+for detector in ("pairwise", "index", "hybrid", "incremental"):
+    t0 = time.time()
+    fus = truth_finding(sc.dataset, cfg, detector=detector,
+                        max_rounds=args.rounds)
+    dt = time.time() - t0
+    acc = fusion_accuracy(fus, sc.dataset, sc.true_values)
+    planted = {(min(a, b), max(a, b)) for a, b in sc.copy_edges}
+    det = fus.detection.copying_pairs()
+    rec = len(det & planted) / len(planted)
+    results[detector] = (dt, fus.detect_time_s, acc, rec)
+    print(f"  {detector:<12} total={dt:6.1f}s detect={fus.detect_time_s:6.1f}s "
+          f"fusion_acc={acc:.3f} planted_recall={rec:.2f} rounds={fus.rounds}")
+
+base = results["pairwise"][1]
+for d, (_, dt, _, _) in results.items():
+    if d != "pairwise":
+        print(f"  {d}: copy-detection time ↓ {1 - dt / base:.1%} vs PAIRWISE")

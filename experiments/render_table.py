@@ -1,0 +1,39 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables."""
+import json
+import sys
+
+
+def render(path, mesh_filter="single"):
+    r = json.load(open(path))
+    lines = []
+    hdr = (f"| {'arch':<22} | {'shape':<11} | {'compute s':>9} | {'memory s':>9} "
+           f"| {'collect s':>9} | bottleneck | {'useful':>6} | {'GB/dev':>7} |")
+    lines.append(hdr)
+    lines.append("|" + "-" * (len(hdr) - 2) + "|")
+    for k in sorted(r):
+        v = r[k]
+        arch, shape, mesh = k.split("|")
+        if mesh != mesh_filter:
+            continue
+        if v.get("status") == "skipped":
+            lines.append(f"| {arch:<22} | {shape:<11} | {'—':>9} | {'—':>9} "
+                         f"| {'—':>9} | N/A (skip) | {'—':>6} | {'—':>7} |")
+            continue
+        if v.get("status") != "ok":
+            lines.append(f"| {arch:<22} | {shape:<11} | {v['status']} |")
+            continue
+        gb = v.get("analytic_gb", {}).get("total",
+                                          v.get("memory", {}).get("per_device_gb", 0))
+        lines.append(
+            f"| {arch:<22} | {shape:<11} | {v['compute_s']:>9.3f} "
+            f"| {v['memory_s']:>9.3f} | {v['collective_s']:>9.3f} "
+            f"| {v['bottleneck']:<10} | {v.get('useful_flops_ratio', 0):>6.3f} "
+            f"| {gb:>7.2f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    path = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun.json"
+    for mesh in ("single", "multi"):
+        print(f"\n### {mesh}-pod mesh\n")
+        print(render(path, mesh))

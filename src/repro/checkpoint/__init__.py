@@ -1,0 +1,7 @@
+from repro.checkpoint.checkpoint import (
+    CheckpointManager,
+    load_checkpoint,
+    save_checkpoint,
+)
+
+__all__ = ["CheckpointManager", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,14 @@
+"""grok-1-314b [moe] — 8 experts, top-2. [hf:xai-org/grok-1; unverified].
+
+Adafactor (factored second moment) keeps optimizer state within HBM at
+314B params on 256 chips — see DESIGN.md §5.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b", family="moe",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=32768, vocab_size=131072,
+    n_experts=8, top_k=2, mlp_type="swiglu",
+    optimizer="adafactor",
+)

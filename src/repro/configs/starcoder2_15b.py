@@ -1,0 +1,10 @@
+"""starcoder2-15b [dense] — GQA, RoPE, GELU MLP w/ bias convention.
+[arXiv:2402.19173; hf]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="starcoder2-15b", family="dense",
+    n_layers=40, d_model=6144, n_heads=48, n_kv_heads=4,
+    d_ff=24576, vocab_size=49152,
+    mlp_type="gelu", qkv_bias=True, rope_theta=100000.0,
+)

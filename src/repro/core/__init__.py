@@ -1,0 +1,33 @@
+"""Core library: the paper's copy-detection algorithms in JAX.
+
+Public API:
+  CopyConfig, ClaimsDataset, DetectionResult    — data model
+  pairwise_detect                               — exhaustive baseline (§II-B)
+  build_index, bucketize                        — inverted index (§III)
+  index_detect_exact, bucketed_index_detect     — INDEX (§III)
+  bound_detect, hybrid_detect                   — BOUND/BOUND+/HYBRID (§IV)
+  make_incremental_state, incremental_detect    — INCREMENTAL (§V)
+  truth_finding                                 — iterative fusion driver
+  sample_by_item, sample_by_cell, scale_sample  — sampling (§VI)
+  fagin_input                                   — NRA baseline (Table X)
+"""
+from repro.core.bound import bound_detect, hybrid_detect
+from repro.core.bucketed import bucketed_index_detect, index_detect_exact
+from repro.core.fagin import fagin_input
+from repro.core.incremental import incremental_detect, make_incremental_state
+from repro.core.index import build_index, bucketize
+from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
+from repro.core.scoring import pairwise_detect
+from repro.core.truthfind import fusion_accuracy, truth_finding
+from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult, pair_f_measure
+
+__all__ = [
+    "CopyConfig", "ClaimsDataset", "DetectionResult", "pair_f_measure",
+    "pairwise_detect", "build_index", "bucketize",
+    "index_detect_exact", "bucketed_index_detect",
+    "bound_detect", "hybrid_detect",
+    "make_incremental_state", "incremental_detect",
+    "truth_finding", "fusion_accuracy",
+    "sample_by_item", "sample_by_cell", "scale_sample",
+    "fagin_input",
+]

@@ -1,0 +1,221 @@
+"""BOUND / BOUND+ / HYBRID (§IV) — early-terminating detection.
+
+TPU adaptation (DESIGN.md §2.2): the paper terminates per pair mid-scan; we
+terminate at *bucket* granularity. After each score-ordered bucket we evaluate
+the paper's bounds for all active pairs at once:
+
+  C^min = C⁰ + (l − n₀)·ln(1−s)                                  (Eq. 9)
+  C^max = C⁰ + (h − n₀)·ln(1−s) + (l − h)·M                      (Eq. 10)
+    h = clip(max(n(S1)·l/|D̄(S1)|, n(S2)·l/|D̄(S2)|), n₀, l)
+    M = exact max score of the unscanned suffix (m_suffix)
+
+and freeze pairs that cross θ_cp = ln β/α (copying) or fall below
+θ_ind = ln β/2α (no-copying). Frozen pairs stop accumulating C⁰/n₀ (their
+values at the decision point are what INCREMENTAL's bookkeeping needs),
+while the total shared-value count n keeps counting (the paper's |Ē⋈|).
+
+BOUND+ re-check timers (§IV-B) are implemented faithfully per pair: after a
+failed copying check, C^min is not re-evaluated until n₀ grew by
+T^min = ⌈(θ_cp − max C^min)/(M − ln(1−s))⌉; after a failed no-copying check,
+C^max is not re-evaluated until (h − n₀) grew by T₀^max.
+
+HYBRID applies bounds only to pairs sharing more than ``l_threshold`` items
+(default 16, the paper's empirical crossover).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bucketed import PaddedBuckets, pad_buckets
+from repro.core.index import InvertedIndex, bucketize, build_index
+from repro.core.scoring import (
+    decide_copying,
+    pair_scores_subset,
+    posterior_independence,
+    score_same,
+)
+from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult
+from repro.utils.counters import ComputeCounter
+
+
+@dataclass
+class BoundState:
+    """Post-scan per-pair state (all (S,S) numpy), consumed by INCREMENTAL."""
+
+    c0: np.ndarray             # C⁰→ at decision point (== final for undecided)
+    n0: np.ndarray             # shared values seen at decision point
+    n_full: np.ndarray         # total shared values (all buckets)
+    decided: np.ndarray        # int8: +1 copying, −1 no-copying, 0 till Step IV
+    dec_bucket: np.ndarray     # bucket index of the decision (K if undecided)
+    considered: np.ndarray     # co-occur outside Ē
+    c_hat: np.ndarray          # Ĉ→ = C⁰_dec + (l − n)·ln(1−s)  (§V preparation)
+
+
+@partial(jax.jit, static_argnames=("s", "n", "theta_cp", "theta_ind",
+                                   "ln1ms", "ebar_bucket", "use_timers"))
+def _bound_scan(v_ksw, p_hat, m_suffix, acc, l_counts, d_src, considered,
+                boundable, s, n, theta_cp, theta_ind, ln1ms, ebar_bucket,
+                use_timers):
+    K, S, _ = v_ksw.shape
+    f_a1 = acc[:, None]
+    f_a2 = acc[None, :]
+    lf = l_counts.astype(jnp.float32)
+
+    def body(carry, xs):
+        (c0, n0, n_full, nscan, decided, dec_bucket,
+         min_due, max_due, ve, bc) = carry
+        v_k, p_k, m_next, k = xs
+
+        count = jnp.dot(v_k, v_k.T, preferred_element_type=jnp.float32)
+        active = (decided == 0) & considered
+        f = score_same(p_k, f_a1, f_a2, s, n)
+
+        upd = active.astype(jnp.float32) * count
+        c0 = c0 + f * upd
+        n0 = n0 + upd
+        n_full = n_full + count * considered
+        nscan = nscan + jnp.sum(v_k, axis=1)
+        ve = ve + jnp.sum(jnp.triu(upd, 1))
+
+        # ---- bounds (Eqs. 9–10) -----------------------------------------
+        c_min_f = c0 + (lf - n0) * ln1ms
+        c_min = jnp.maximum(c_min_f, c_min_f.T)
+        h_raw = jnp.maximum(
+            nscan[:, None] * lf / jnp.maximum(d_src[:, None], 1.0),
+            nscan[None, :] * lf / jnp.maximum(d_src[None, :], 1.0),
+        )
+        h = jnp.clip(h_raw, n0, lf)
+        c_max_f = c0 + (h - n0) * ln1ms + (lf - h) * m_next
+        c_max = jnp.maximum(c_max_f, c_max_f.T)
+
+        checkable = active & boundable
+        if use_timers:
+            check_min = checkable & (n0 >= min_due)
+            check_max = checkable & ((h - n0) >= max_due)
+        else:
+            check_min = checkable
+            check_max = checkable
+        bc = bc + jnp.sum(jnp.triu(check_min, 1)) + jnp.sum(jnp.triu(check_max, 1))
+
+        cp = check_min & (c_min >= theta_cp)
+        ind = check_max & (c_max < theta_ind) & (c_max.T < theta_ind) & ~cp
+
+        if use_timers:
+            denom = jnp.maximum(m_next - ln1ms, 1e-6)
+            t_min = jnp.ceil((theta_cp - c_min) / denom)
+            min_due = jnp.where(check_min & ~cp, n0 + t_min, min_due)
+            t0_max = jnp.ceil((c_max - theta_ind) / denom)
+            max_due = jnp.where(check_max & ~ind, (h - n0) + t0_max, max_due)
+
+        newly = jnp.where(cp, 1, jnp.where(ind, -1, 0)).astype(jnp.int8)
+        decided = jnp.where((decided == 0) & (newly != 0), newly, decided)
+        dec_bucket = jnp.where((dec_bucket == K) & (newly != 0), k, dec_bucket)
+
+        return (c0, n0, n_full, nscan, decided, dec_bucket,
+                min_due, max_due, ve, bc), None
+
+    zero = jnp.zeros((S, S), jnp.float32)
+    init = (zero, zero, zero, jnp.zeros((S,), jnp.float32),
+            jnp.zeros((S, S), jnp.int8), jnp.full((S, S), K, jnp.int32),
+            zero, zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    xs = (v_ksw, p_hat, m_suffix[1:], jnp.arange(K))
+    carry, _ = jax.lax.scan(body, init, xs)
+    return carry
+
+
+def bound_detect(
+    ds: ClaimsDataset,
+    p_claim: np.ndarray,
+    cfg: CopyConfig,
+    n_buckets: int = 64,
+    use_timers: bool = False,          # False = BOUND, True = BOUND+
+    l_threshold: int = 0,              # >0 = HYBRID (INDEX for small-overlap pairs)
+    rescore_margin: float = 1.0,
+    index: InvertedIndex | None = None,
+    padded: PaddedBuckets | None = None,
+    return_state: bool = False,
+):
+    """BOUND (§IV-A), BOUND+ (§IV-B, use_timers), HYBRID (l_threshold=16)."""
+    t0 = time.perf_counter()
+    idx = index if index is not None else build_index(ds, p_claim, cfg)
+    if padded is None:
+        padded = pad_buckets(bucketize(idx, n_buckets))
+    S = ds.n_sources
+    K = padded.n_buckets
+    acc = jnp.asarray(ds.accuracy, jnp.float32)
+    l_counts = jnp.asarray(idx.l_counts)
+    d_src = jnp.asarray(idx.items_per_source, jnp.float32)
+
+    # considered = co-occurrence outside Ē (one matmul)
+    v_out = jnp.asarray(idx.V[:, : idx.ebar_start], jnp.bfloat16)
+    n_out = np.array(jnp.dot(v_out, v_out.T, preferred_element_type=jnp.float32))
+    considered = n_out > 0.5
+    np.fill_diagonal(considered, False)
+
+    boundable = idx.l_counts > l_threshold
+    np.fill_diagonal(boundable, False)
+
+    (c0, n0, n_full, _nscan, decided, dec_bucket, _md, _xd, ve, bc) = _bound_scan(
+        padded.v_ksw, padded.p_hat, padded.m_suffix, acc, l_counts, d_src,
+        jnp.asarray(considered), jnp.asarray(boundable),
+        cfg.s, cfg.n, cfg.theta_cp, cfg.theta_ind, cfg.ln_1ms,
+        padded.ebar_bucket, use_timers,
+    )
+    c0, n0 = np.array(c0), np.array(n0)
+    n_full = np.array(n_full)
+    decided = np.array(decided)
+    dec_bucket = np.array(dec_bucket)
+
+    lf = idx.l_counts.astype(np.float32)
+    # Step IV for still-active pairs (n0 == n_full there): C→ = C^min
+    c_fwd = np.where(considered, c0 + (lf - n0) * cfg.ln_1ms, 0.0).astype(np.float32)
+    np.fill_diagonal(c_fwd, 0.0)
+
+    # Ĉ for incremental bookkeeping (§V preparation step)
+    c_hat = np.where(considered, c0 + (lf - n_full) * cfg.ln_1ms, 0.0).astype(np.float32)
+
+    active = (decided == 0) & considered
+    z = np.log(cfg.alpha / cfg.beta) + np.logaddexp(c_fwd, c_fwd.T)
+    near = active & (np.abs(z) < rescore_margin) & np.triu(np.ones((S, S), bool), 1)
+    pi, pj = np.nonzero(near)
+    if len(pi):
+        c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
+        c_fwd[pj, pi] = pair_scores_subset(ds, p_claim, cfg, pj, pi)
+
+    step4 = np.array(decide_copying(jnp.asarray(c_fwd), jnp.asarray(c_fwd.T), cfg))
+    copying = np.where(decided != 0, decided > 0, step4) & considered
+    pr_ind = np.array(posterior_independence(jnp.asarray(c_fwd), jnp.asarray(c_fwd.T), cfg))
+    pr_ind = np.where(considered, pr_ind, 1.0)
+    pr_ind = np.where(decided > 0, np.minimum(pr_ind, 0.5), pr_ind)
+    pr_ind = np.where(decided < 0, np.maximum(pr_ind, 0.5), pr_ind)
+    np.fill_diagonal(pr_ind, 1.0)
+    np.fill_diagonal(copying, False)
+
+    iu = np.triu_indices(S, 1)
+    n_pairs = int(considered[iu].sum())
+    counter = ComputeCounter(
+        pairs_considered=n_pairs,
+        shared_values_examined=int(ve),
+        score_computations=2 * int(ve) + 2 * n_pairs + 2 * len(pi),
+        bound_computations=2 * int(bc),
+        index_entries=idx.n_entries,
+    )
+    result = DetectionResult(c_fwd=c_fwd, pr_independent=pr_ind, copying=copying,
+                             counter=counter, wall_time_s=time.perf_counter() - t0)
+    if return_state:
+        state = BoundState(c0=c0, n0=n0, n_full=n_full, decided=decided,
+                           dec_bucket=dec_bucket, considered=considered, c_hat=c_hat)
+        return result, state
+    return result
+
+
+def hybrid_detect(ds, p_claim, cfg, n_buckets: int = 64, **kw):
+    """HYBRID: INDEX semantics for pairs sharing ≤16 items, BOUND+ beyond."""
+    return bound_detect(ds, p_claim, cfg, n_buckets=n_buckets,
+                        use_timers=True, l_threshold=16, **kw)

@@ -1,0 +1,172 @@
+"""Distributed copy detection — pair-space 2D sharding over a TPU mesh.
+
+The paper's §VIII names two parallelization opportunities ("per entry" and
+"per pair of sources"). We realize both with shard_map on the production
+mesh (launch/mesh.py):
+
+  * the S×S pair space is tiled 2D: C-block rows over the ``data`` axis and
+    columns over the ``model`` axis (a SUMMA-like decomposition — each
+    device owns one (rows × cols) tile of C);
+  * the entry dimension E (the reduction) is sharded over the ``pod`` axis;
+    each pod accumulates partial co-occurrence counts over its entry shard
+    and a single psum("pod") combines them — one all-reduce of S²/device
+    floats per bucket group, overlapping pods' compute.
+
+The incidence matrix V is passed twice with different shardings (row-block
+copy and column-block copy); XLA lays each out once per device — there is no
+gather of the full V anywhere.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.scoring import score_same
+from repro.core.types import CopyConfig
+
+
+def _local_pair_scores(vr, vc, acc_r, acc_c, p_hat, s, n, has_pod):
+    """Per-device: C_same→ tile + shared-count tile over the local entry shard.
+
+    vr: (S_r, K, w) row-block incidence (entry shard local)
+    vc: (S_c, K, w) column-block incidence
+    """
+    f_a1 = acc_r[:, None]
+    f_a2 = acc_c[None, :]
+
+    def body(carry, xs):
+        c_same, n_cnt = carry
+        vr_k, vc_k, p_k = xs
+        if vr_k.dtype == jnp.int8:
+            # int8 incidence (§Perf H3): halves HBM traffic vs bf16; the MXU
+            # accumulates 0/1 products exactly in int32
+            count = jnp.dot(vr_k, vc_k.T,
+                            preferred_element_type=jnp.int32).astype(jnp.float32)
+        else:
+            count = jnp.dot(vr_k, vc_k.T, preferred_element_type=jnp.float32)
+        # p is constant within a bucket ⇒ any local representative works
+        f = score_same(p_k[0], f_a1, f_a2, s, n)
+        return (c_same + f * count, n_cnt + count), None
+
+    S_r, K, w = vr.shape
+    S_c = vc.shape[0]
+    # the accumulators are device-varying over the pair-tile axes — mark them
+    varying = ("data", "model") + (("pod",) if has_pod else ())
+    zero = jax.lax.pcast(jnp.zeros((S_r, S_c), jnp.float32), varying, to="varying")
+    (c_same, n_cnt), _ = jax.lax.scan(
+        body, (zero, zero), (jnp.moveaxis(vr, 1, 0), jnp.moveaxis(vc, 1, 0), p_hat))
+    if has_pod:
+        c_same = jax.lax.psum(c_same, "pod")
+        n_cnt = jax.lax.psum(n_cnt, "pod")
+    return c_same, n_cnt
+
+
+def distributed_pair_scores_lowerable(mesh: Mesh, n_sources: int, K: int,
+                                      width: int, cfg: CopyConfig,
+                                      dtype=jnp.bfloat16):
+    """Shapes-only variant for the dry-run: returns a Lowered without ever
+    materializing the (K, S, w) incidence tensor (which at 1M-source scale
+    would be hundreds of GB on the host)."""
+    has_pod = "pod" in mesh.axis_names
+    if has_pod:
+        width += (-width) % mesh.shape["pod"]
+    e_axis = "pod" if has_pod else None
+    spec_r = P("data", None, e_axis)
+    spec_c = P("model", None, e_axis)
+    out_spec = P("data", "model")
+    shard_fn = jax.jit(
+        jax.shard_map(
+            partial(_local_pair_scores, s=cfg.s, n=cfg.n, has_pod=has_pod),
+            mesh=mesh,
+            in_specs=(spec_r, spec_c, P("data"), P("model"),
+                      P(None, e_axis) if has_pod else P(None, None)),
+            out_specs=(out_spec, out_spec),
+        ),
+        in_shardings=(
+            NamedSharding(mesh, spec_r), NamedSharding(mesh, spec_c),
+            NamedSharding(mesh, P("data")), NamedSharding(mesh, P("model")),
+            NamedSharding(mesh, P(None, e_axis) if has_pod else P(None, None)),
+        ),
+        out_shardings=(NamedSharding(mesh, out_spec),
+                       NamedSharding(mesh, out_spec)),
+    )
+    v_sds = jax.ShapeDtypeStruct((n_sources, K, width), dtype)
+    acc_sds = jax.ShapeDtypeStruct((n_sources,), jnp.float32)
+    p_sds = jax.ShapeDtypeStruct((K, width), jnp.float32)
+    return shard_fn.lower(v_sds, v_sds, acc_sds, acc_sds, p_sds)
+
+
+def distributed_pair_scores(
+    mesh: Mesh,
+    v_ksw: np.ndarray,          # (K, S, w) bucketed incidence (bf16/f32)
+    p_hat: np.ndarray,          # (K,)
+    acc: np.ndarray,            # (S,)
+    cfg: CopyConfig,
+):
+    """Lowerable distributed C_same→/count computation.
+
+    Returns a jitted function-of-nothing whose output shardings tile C over
+    (data, model); call ``.lower().compile()`` for the dry-run or execute on
+    a real mesh. Entry (bucket-width) dim is sharded over 'pod' when present.
+    """
+    has_pod = "pod" in mesh.axis_names
+    K, S, w = v_ksw.shape
+
+    # pad the entry width to a multiple of the pod axis (zero columns are
+    # inert: they contribute 0 to every co-occurrence count)
+    if has_pod:
+        pods = mesh.shape["pod"]
+        w_pad = (-w) % pods
+        if w_pad:
+            v_ksw = np.pad(np.asarray(v_ksw), ((0, 0), (0, 0), (0, w_pad)))
+            w += w_pad
+
+    # (S, K, w) layouts so the S dim is leading for row/col sharding
+    v_skw = jnp.asarray(np.moveaxis(np.asarray(v_ksw), 0, 1))
+    acc = jnp.asarray(acc, jnp.float32)
+    p_hat_a = jnp.asarray(p_hat, jnp.float32)
+
+    e_axis = "pod" if has_pod else None
+    spec_r = P("data", None, e_axis)
+    spec_c = P("model", None, e_axis)
+    out_spec = P("data", "model")
+
+    shard_fn = jax.jit(
+        jax.shard_map(
+            partial(_local_pair_scores, s=cfg.s, n=cfg.n, has_pod=has_pod),
+            mesh=mesh,
+            in_specs=(spec_r, spec_c, P("data"), P("model"),
+                      P(None, e_axis) if has_pod else P(None, None)),
+            out_specs=(out_spec, out_spec),
+        ),
+        in_shardings=(
+            NamedSharding(mesh, spec_r), NamedSharding(mesh, spec_c),
+            NamedSharding(mesh, P("data")), NamedSharding(mesh, P("model")),
+            NamedSharding(mesh, P(None, e_axis) if has_pod else P(None, None)),
+        ),
+        out_shardings=(NamedSharding(mesh, out_spec), NamedSharding(mesh, out_spec)),
+    )
+
+    # p_hat must broadcast per (K, w_local) — expand to (K, w) so the entry
+    # shard picks the right representative for its slice
+    p_kw = jnp.broadcast_to(p_hat_a[:, None], (K, w))
+
+    def run():
+        return shard_fn(v_skw, v_skw, acc, acc, p_kw)
+
+    def lower():
+        args = (
+            jax.ShapeDtypeStruct(v_skw.shape, v_skw.dtype),
+            jax.ShapeDtypeStruct(v_skw.shape, v_skw.dtype),
+            jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+            jax.ShapeDtypeStruct(acc.shape, acc.dtype),
+            jax.ShapeDtypeStruct((K, w), jnp.float32),
+        )
+        return shard_fn.lower(*args)
+
+    run.lower = lower
+    return run

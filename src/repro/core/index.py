@@ -1,0 +1,229 @@
+"""The specialized inverted index (§III, Definition 3.2).
+
+One entry per *shared* value D.v (≥ 2 providers), carrying
+
+  * P(E)  — probability the value is true,
+  * C(E)  — contribution score M̂(D.v), the maximum possible pair
+            contribution, computable from only the extreme-accuracy
+            providers (Proposition 3.1),
+  * S̄(E) — the provider set, stored as a column of the source×entry
+            incidence matrix V.
+
+Entries are sorted in decreasing C(E) (the BYCONTRIBUTION order of §VI-C);
+the low-score suffix Ē (Σ C(E) < ln β/2α) can never flip a pair to copying
+on its own, so pairs that co-occur only inside Ē are skipped.
+
+Index construction is host-side NumPy (the paper: "index building has a much
+lower complexity, O(|S||D|)", and costs ~.9% of PAIRWISE); all detection
+compute on top of it is JAX.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from repro.core.scoring import score_same_np
+from repro.core.types import ClaimsDataset, CopyConfig
+
+
+@dataclass
+class InvertedIndex:
+    """Entries sorted by decreasing contribution score."""
+
+    V: np.ndarray              # (S, E) uint8 incidence, columns in score order
+    entry_item: np.ndarray     # (E,) int32 — D_E
+    entry_value: np.ndarray    # (E,) int32 — v_E (per-item value id)
+    entry_p: np.ndarray        # (E,) float32 — P(E)
+    entry_score: np.ndarray    # (E,) float32 — C(E) = M̂(D_E.v_E), non-increasing
+    ebar_start: int            # entries [ebar_start:] form Ē
+    l_counts: np.ndarray       # (S, S) int32 — shared-item counts l(S1,S2)
+    items_per_source: np.ndarray  # (S,) int32 — |D̄(S)|
+
+    @property
+    def n_entries(self) -> int:
+        return self.V.shape[1]
+
+    @property
+    def n_sources(self) -> int:
+        return self.V.shape[0]
+
+    def providers(self, e: int) -> np.ndarray:
+        return np.nonzero(self.V[:, e])[0]
+
+
+def entry_contribution_score(
+    p: float, provider_accs: np.ndarray, cfg: CopyConfig
+) -> float:
+    """Proposition 3.1 — M̂(D.v) from the extreme-accuracy providers.
+
+    Case 1 (A_min ≤ 1/(1 + nP/(1−P))):       S1 = max-acc,   S2 = min-acc
+    Case 2 (else, P < .5):                    S1 = 2nd-min,   S2 = min-acc
+    Case 3 (else):                            S1 = min-acc,   S2 = 2nd-min
+    """
+    accs = np.sort(np.asarray(provider_accs, dtype=np.float64))
+    a_min, a_second, a_max = accs[0], accs[min(1, len(accs) - 1)], accs[-1]
+    p = float(p)
+    threshold = 1.0 / (1.0 + cfg.n * p / max(1.0 - p, 1e-12))
+    if a_min <= threshold:
+        a1, a2 = a_max, a_min
+    elif p < 0.5:
+        a1, a2 = a_second, a_min
+    else:
+        a1, a2 = a_min, a_second
+    return float(score_same_np(p, a1, a2, cfg.s, cfg.n))
+
+
+def _entry_scores_vectorized(
+    p: np.ndarray, a_min: np.ndarray, a_second: np.ndarray, a_max: np.ndarray,
+    cfg: CopyConfig,
+) -> np.ndarray:
+    """Vectorized Prop 3.1 over all entries."""
+    threshold = 1.0 / (1.0 + cfg.n * p / np.maximum(1.0 - p, 1e-12))
+    case1 = a_min <= threshold
+    case2 = (~case1) & (p < 0.5)
+    a1 = np.where(case1, a_max, np.where(case2, a_second, a_min))
+    a2 = np.where(case1, a_min, np.where(case2, a_min, a_second))
+    return score_same_np(p.astype(np.float64), a1, a2, cfg.s, cfg.n).astype(np.float32)
+
+
+def build_index(
+    ds: ClaimsDataset,
+    p_claim: np.ndarray,
+    cfg: CopyConfig,
+    max_entries: Optional[int] = None,
+) -> InvertedIndex:
+    """Build the inverted index for a claims dataset.
+
+    p_claim[s, d] is the truth probability of the value s provides on d
+    (identical across providers of the same value).
+    """
+    values = ds.values
+    S, D = values.shape
+    prov = values >= 0
+
+    # --- group claims by (item, value): vectorized via a composite key -----
+    max_v = int(values.max()) + 1 if values.size and values.max() >= 0 else 1
+    key = values.astype(np.int64) * 0  # placeholder
+    key = np.where(prov, np.arange(D, dtype=np.int64)[None, :] * max_v + values, -1)
+    flat_key = key.ravel()
+    claim_src = np.repeat(np.arange(S, dtype=np.int32), D)
+    valid = flat_key >= 0
+    flat_key, claim_src = flat_key[valid], claim_src[valid]
+    flat_p = p_claim.ravel()[valid].astype(np.float32)
+
+    order = np.argsort(flat_key, kind="stable")
+    flat_key, claim_src, flat_p = flat_key[order], claim_src[order], flat_p[order]
+    uniq_key, starts, counts = np.unique(flat_key, return_index=True, return_counts=True)
+
+    shared = counts >= 2                       # Def. 3.2: ≥ 2 providers
+    e_keys = uniq_key[shared]
+    e_starts = starts[shared]
+    e_counts = counts[shared]
+    E = len(e_keys)
+
+    entry_item = (e_keys // max_v).astype(np.int32)
+    entry_value = (e_keys % max_v).astype(np.int32)
+    entry_p = flat_p[e_starts]
+
+    # incidence matrix + extreme provider accuracies per entry
+    V = np.zeros((S, E), dtype=np.uint8)
+    a_min = np.empty(E, dtype=np.float64)
+    a_second = np.empty(E, dtype=np.float64)
+    a_max = np.empty(E, dtype=np.float64)
+    acc = ds.accuracy.astype(np.float64)
+    for e in range(E):
+        srcs = claim_src[e_starts[e]: e_starts[e] + e_counts[e]]
+        V[srcs, e] = 1
+        a = np.sort(acc[srcs])
+        a_min[e], a_second[e], a_max[e] = a[0], a[1], a[-1]
+
+    entry_score = _entry_scores_vectorized(entry_p, a_min, a_second, a_max, cfg)
+
+    # sort entries by decreasing contribution score
+    order = np.argsort(-entry_score, kind="stable")
+    V = np.ascontiguousarray(V[:, order])
+    entry_item = entry_item[order]
+    entry_value = entry_value[order]
+    entry_p = entry_p[order]
+    entry_score = entry_score[order]
+
+    # Ē — maximal low-score suffix with Σ C(E) < ln(β/2α)
+    pos_scores = np.maximum(entry_score, 0.0)
+    suffix_sum = np.cumsum(pos_scores[::-1])[::-1]
+    below = suffix_sum < cfg.theta_ind
+    ebar_start = int(np.argmax(below)) if below.any() else E
+
+    prov64 = prov.astype(np.int64)
+    l_counts = (prov64 @ prov64.T).astype(np.int32)
+
+    return InvertedIndex(
+        V=V,
+        entry_item=entry_item,
+        entry_value=entry_value,
+        entry_p=entry_p,
+        entry_score=entry_score,
+        ebar_start=ebar_start,
+        l_counts=l_counts,
+        items_per_source=prov.sum(axis=1).astype(np.int32),
+    )
+
+
+@dataclass
+class BucketedIndex:
+    """Score-ordered index partitioned into K contiguous buckets.
+
+    Bucket k covers entry columns [starts[k], starts[k+1]), all approximated
+    with a single representative truth probability p̂_k (geometric mean).
+    M̂_suffix[k] = max entry score at or after bucket k (the "next unscanned
+    entry" bound M of Eq. 10, exact because entries are score-sorted).
+    """
+
+    index: InvertedIndex
+    starts: np.ndarray        # (K+1,) int32
+    p_hat: np.ndarray         # (K,) float32
+    m_suffix: np.ndarray      # (K+1,) float32; m_suffix[K] = 0
+    ebar_bucket: int          # first bucket that lies fully inside Ē
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.p_hat)
+
+
+def bucketize(index: InvertedIndex, n_buckets: int = 64) -> BucketedIndex:
+    """Partition score-sorted entries into ~equal buckets on p-coherence.
+
+    Buckets are contiguous in score order, so processing buckets in order is
+    the paper's BYCONTRIBUTION scan at coarser granularity. Bucket boundaries
+    are chosen on quantiles of ln p so that within-bucket p spread is small.
+    """
+    E = index.n_entries
+    if E == 0:
+        return BucketedIndex(index, np.zeros(1, np.int32), np.zeros(0, np.float32),
+                             np.zeros(1, np.float32), 0)
+    K = min(n_buckets, E)
+    # contiguous equal-count split in score order
+    bounds = np.linspace(0, E, K + 1).round().astype(np.int32)
+    bounds = np.unique(bounds)
+    K = len(bounds) - 1
+    p_hat = np.empty(K, dtype=np.float32)
+    logp = np.log(np.clip(index.entry_p, 1e-9, 1.0))
+    for k in range(K):
+        p_hat[k] = float(np.exp(logp[bounds[k]: bounds[k + 1]].mean()))
+    # ensure Ē boundary is also a bucket boundary so the Ē-skip rule is exact
+    if 0 < index.ebar_start < E and index.ebar_start not in bounds:
+        bounds = np.sort(np.unique(np.append(bounds, index.ebar_start)))
+        K = len(bounds) - 1
+        p_hat = np.empty(K, dtype=np.float32)
+        for k in range(K):
+            p_hat[k] = float(np.exp(logp[bounds[k]: bounds[k + 1]].mean()))
+    m_suffix = np.zeros(K + 1, dtype=np.float32)
+    # true suffix max (exact for any entry ordering, incl. the RANDOM /
+    # BYPROVIDER ablations of §VI-C)
+    for k in range(K - 1, -1, -1):
+        blk_max = float(index.entry_score[bounds[k]: bounds[k + 1]].max())
+        m_suffix[k] = max(blk_max, m_suffix[k + 1])
+    ebar_bucket = int(np.searchsorted(bounds, index.ebar_start))
+    return BucketedIndex(index=index, starts=bounds, p_hat=p_hat,
+                         m_suffix=m_suffix, ebar_bucket=ebar_bucket)

@@ -1,0 +1,67 @@
+"""Sampling strategies (§VI-A, §VI-E).
+
+BYITEM (SAMPLE1)   — uniform random item columns at a fixed rate.
+BYCELL (SAMPLE2)   — add random items until the fraction of non-empty cells
+                     reaches a target.
+SCALESAMPLE        — random items at a rate, but guarantee at least N=4
+                     sampled items per source when possible; this is what
+                     keeps copy-detection F-measure high on long-tail data
+                     (Table IX).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.types import ClaimsDataset
+
+
+def sample_by_item(ds: ClaimsDataset, rate: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    D = ds.n_items
+    k = max(int(round(rate * D)), 1)
+    return np.sort(rng.choice(D, size=k, replace=False))
+
+
+def sample_by_cell(ds: ClaimsDataset, cell_fraction: float, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    prov = ds.provided_mask
+    total_cells = int(prov.sum())
+    target = cell_fraction * total_cells
+    perm = rng.permutation(ds.n_items)
+    cells_per_item = prov.sum(axis=0)
+    csum = np.cumsum(cells_per_item[perm])
+    k = int(np.searchsorted(csum, target)) + 1
+    return np.sort(perm[:k])
+
+
+def scale_sample(
+    ds: ClaimsDataset, rate: float, min_per_source: int = 4, seed: int = 0
+) -> np.ndarray:
+    """SCALESAMPLE: ≥ ``min_per_source`` items per source, then fill to rate."""
+    rng = np.random.default_rng(seed)
+    S, D = ds.values.shape
+    prov = ds.provided_mask
+    chosen = np.zeros(D, dtype=bool)
+    counts = np.zeros(S, dtype=np.int64)
+
+    # pass 1: cover low-coverage sources first
+    order = np.argsort(prov.sum(axis=1))
+    for s in order:
+        need = min_per_source - counts[s]
+        if need <= 0:
+            continue
+        avail = np.nonzero(prov[s] & ~chosen)[0]
+        if avail.size == 0:
+            continue
+        take = rng.choice(avail, size=min(need, avail.size), replace=False)
+        chosen[take] = True
+        counts += prov[:, take].sum(axis=1)
+
+    # pass 2: random fill to the requested item rate
+    target = max(int(round(rate * D)), int(chosen.sum()))
+    remaining = np.nonzero(~chosen)[0]
+    extra = target - int(chosen.sum())
+    if extra > 0 and remaining.size:
+        take = rng.choice(remaining, size=min(extra, remaining.size), replace=False)
+        chosen[take] = True
+    return np.nonzero(chosen)[0]

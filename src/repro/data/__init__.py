@@ -1,0 +1,7 @@
+from repro.data.claims import (
+    motivating_example,
+    motivating_value_probs,
+    synthetic_claims,
+)
+
+__all__ = ["motivating_example", "motivating_value_probs", "synthetic_claims"]

@@ -1,0 +1,79 @@
+"""The paper's technique as a data-layer feature: copy-detection-derived
+source weights and duplication discounts for LM training corpora.
+
+Pipeline: documents are hashed into (item, value) claims — each document
+span is a data item, the span's content hash is the value — so sources that
+re-host the same documents share values exactly like the paper's sources
+share attribute values. Truth finding then yields per-source accuracies and
+pairwise copy probabilities, which become:
+
+  * source_weight(s)  = accuracy(s)            (low-quality sources sampled less)
+  * doc_weight(d)     = 1 / (1 + #copiers of d's providing clique)
+                        (mass of a document split across its re-hosters)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import CopyConfig, truth_finding
+from repro.core.types import ClaimsDataset
+from repro.data.tokens import TokenCorpus
+
+
+def corpus_to_claims(corpus: TokenCorpus, span: int = 16) -> ClaimsDataset:
+    """Content-hash each document's spans into claims.
+
+    item = (topic, span index); value = hash of the span's tokens. Sources
+    rendering the same topic independently disagree wherever either one
+    corrupted a token (the value domain per item is effectively the paper's
+    n false values); a copier re-hosting the original's rendering matches
+    *exactly* on corrupted spans too — precisely the paper's sharing-false-
+    values signal."""
+    items = {}
+    claims = {}
+    for di, doc in enumerate(corpus.docs):
+        s = int(corpus.doc_source[di])
+        t = int(corpus.doc_topic[di])
+        for sp in range(len(doc) // span):
+            item_id = items.setdefault((t, sp), len(items))
+            val = hash(doc[sp * span: (sp + 1) * span].tobytes()) & 0x7FFFFFFF
+            claims[(s, item_id)] = val
+    S = len(corpus.source_accuracy)
+    D = len(items)
+    values = -np.ones((S, D), dtype=np.int64)
+    for (s, item_id), val in claims.items():
+        values[s, item_id] = val
+    # compress values per item to small ids
+    out = -np.ones((S, D), dtype=np.int32)
+    for d in range(D):
+        vals = values[:, d]
+        uniq = {v: i for i, v in enumerate(sorted(set(vals[vals >= 0])))}
+        for s in range(S):
+            if vals[s] >= 0:
+                out[s, d] = uniq[vals[s]]
+    return ClaimsDataset(values=out,
+                         accuracy=np.full(S, 0.8, np.float32))
+
+
+def fusion_weights(corpus: TokenCorpus, cfg: CopyConfig | None = None,
+                   detector: str = "hybrid"):
+    """→ (source_weights (S,), doc_weights (n_docs,), fusion result)."""
+    cfg = cfg or CopyConfig(alpha=0.1, s=0.8, n=100.0)
+    ds = corpus_to_claims(corpus)
+    res = truth_finding(ds, cfg, detector=detector, max_rounds=6)
+
+    src_w = np.clip(res.accuracy, 0.05, None).astype(np.float64)
+
+    # duplication discount: documents re-hosted by a copier clique share mass
+    copying = res.detection.copying
+    n_dup = np.zeros(len(corpus.docs))
+    seen: dict = {}
+    for di, doc in enumerate(corpus.docs):
+        key = hash(doc.tobytes())
+        seen.setdefault(key, []).append(di)
+    for key, dis in seen.items():
+        if len(dis) > 1:
+            for di in dis:
+                n_dup[di] = len(dis) - 1
+    doc_w = 1.0 / (1.0 + n_dup)
+    return src_w, doc_w, res

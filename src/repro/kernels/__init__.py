@@ -1,0 +1,3 @@
+from repro.kernels.ops import copyscore, flash_attention
+
+__all__ = ["copyscore", "flash_attention"]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the bucketed copy-score accumulation (DESIGN.md §2.1).
+
+The hot loop of scalable copy detection is
+
+    C_same→[i,j] = Σ_e V[i,e]·V[j,e]·f→(A_i, A_j, p_e)
+    n[i,j]       = Σ_e V[i,e]·V[j,e]
+
+with entries pre-sorted so that every contiguous block of ``block_e`` entries
+shares one representative probability p̂ (bucket-aligned padding done by
+``ops.copyscore``). Within a block the pair score f→ is constant per (i,j),
+so each grid step is ONE (block_i × block_e) @ (block_e × block_j) MXU matmul
+plus one VPU elementwise combine — arithmetic intensity ≈ block_e FLOPs/byte
+on the C tiles instead of the O(1) a naive gather implementation would get.
+
+Grid: (S/bi, S/bj, E/be) with the entry dimension innermost so the C/n tiles
+live in VMEM across the whole reduction (revisited-output accumulation).
+
+VMEM budget per step (defaults bi=bj=128, be=512, bf16 V):
+  V_i, V_j tiles:   2 · 128·512·2 B = 256 KiB
+  C, n accum tiles: 2 · 128·128·4 B = 128 KiB
+  A_i, A_j, p̂:      ~1 KiB                         → ≈ 0.4 MiB ≪ 16 MiB VMEM.
+MXU work per step: 128·512·128 MACs with both matmul dims multiples of 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _copyscore_kernel(p_ref, vi_ref, vj_ref, ai_ref, aj_ref,
+                      c_ref, n_ref, *, s: float, n_false: float):
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+
+    vi = vi_ref[...]                                   # (bi, be)
+    vj = vj_ref[...]                                   # (bj, be)
+    count = jax.lax.dot_general(
+        vi, vj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,            # MXU, f32 accumulation
+    )                                                  # (bi, bj)
+
+    p = p_ref[0, 0]
+    a1 = ai_ref[...].astype(jnp.float32)               # (bi, 1) copier accuracy
+    a2 = aj_ref[...].astype(jnp.float32).reshape(1, -1)  # (1, bj) source accuracy
+    pr_src = p * a2 + (1.0 - p) * (1.0 - a2)
+    pr_ind = p * a1 * a2 + (1.0 - p) * (1.0 - a1) * (1.0 - a2) / n_false
+    f = jnp.log(1.0 - s + s * pr_src / pr_ind)         # Eq. (6), per pair
+
+    c_ref[...] += f * count
+    n_ref[...] += count
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("s", "n_false", "block_i", "block_j", "block_e", "interpret"),
+)
+def copyscore_pallas(
+    v: jnp.ndarray,          # (S, E) incidence, bf16/f32; E % block_e == 0
+    p_blk: jnp.ndarray,      # (E // block_e,) representative p̂ per entry block
+    acc: jnp.ndarray,        # (S,) source accuracies, f32
+    *,
+    s: float,
+    n_false: float,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_e: int = 512,
+    interpret: bool = False,
+):
+    """Returns (C_same→ (S,S) f32, n (S,S) f32). S must divide by the blocks."""
+    S, E = v.shape
+    assert S % block_i == 0 and S % block_j == 0, (S, block_i, block_j)
+    assert E % block_e == 0, (E, block_e)
+    n_e = E // block_e
+
+    p2 = p_blk.reshape(n_e, 1).astype(jnp.float32)
+    a2 = acc.reshape(S, 1).astype(jnp.float32)
+
+    grid = (S // block_i, S // block_j, n_e)
+    kernel = functools.partial(_copyscore_kernel, s=float(s), n_false=float(n_false))
+    c, n = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j, e: (e, 0)),            # p̂
+            pl.BlockSpec((block_i, block_e), lambda i, j, e: (i, e)),  # V rows
+            pl.BlockSpec((block_j, block_e), lambda i, j, e: (j, e)),  # V cols
+            pl.BlockSpec((block_i, 1), lambda i, j, e: (i, 0)),      # A_i
+            pl.BlockSpec((block_j, 1), lambda i, j, e: (j, 0)),      # A_j
+        ],
+        out_specs=[
+            pl.BlockSpec((block_i, block_j), lambda i, j, e: (i, j)),
+            pl.BlockSpec((block_i, block_j), lambda i, j, e: (i, j)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((S, S), jnp.float32),
+            jax.ShapeDtypeStruct((S, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(p2, v, v, a2, a2)
+    return c, n

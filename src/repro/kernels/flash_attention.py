@@ -1,0 +1,273 @@
+"""Flash attention (fwd + bwd) as Pallas TPU kernels.
+
+Used by the LM stack for training and prefill. Supports:
+  * causal masking,
+  * sliding-window attention (hymba's SWA layers),
+  * GQA/MQA — k/v blocks are indexed through head_q // group so kv heads are
+    never materialized per q head in the forward pass.
+
+Tiling: q blocks (block_q × head_dim) stream against k/v blocks
+(block_k × head_dim) with the online-softmax running (m, l, acc) state held
+in VMEM scratch across the innermost k grid dimension. Both matmul dims are
+multiples of the MXU tile for head_dim ∈ {64, 128, 256}.
+
+VMEM per step (block_q = block_k = 128, D = 128, bf16):
+  q,k,v,o tiles ≈ 4·128·128·2 B = 128 KiB; scratch acc 64 KiB; ≪ 16 MiB.
+
+Backward follows the standard two-kernel split (dq over k-blocks; dk/dv over
+q-blocks) with the forward's logsumexp as residual; dk/dv are produced per
+q-head and group-summed outside (GQA).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _visible(qi, ki, block_q, block_k, causal, window):
+    """Is any (q, k) pair in this block pair unmasked?"""
+    ok = jnp.bool_(True)
+    if causal:
+        ok &= (qi + 1) * block_q - 1 >= ki * block_k
+    if window is not None:
+        ok &= qi * block_q - ((ki + 1) * block_k - 1) < window
+    return ok
+
+
+def _block_mask(qi, ki, block_q, block_k, causal, window):
+    qids = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kids = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= qids >= kids
+    if window is not None:
+        mask &= (qids - kids) < window
+    return mask
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _fwd_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                m_scr, l_scr, acc_scr,
+                *, sm_scale, causal, window, block_q, block_k, n_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    @pl.when(_visible(qi, ki, block_q, block_k, causal, window))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, d)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        mask = _block_mask(qi, ki, block_q, block_k, causal, window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        l_scr[...] = l_scr[...] * alpha + p.sum(axis=1, keepdims=True)
+        v = v_ref[0, 0].astype(jnp.float32)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        l = l_scr[...]
+        safe_l = jnp.where(l > 0.0, l, 1.0)
+        o_ref[0, 0] = (acc_scr[...] / safe_l).astype(o_ref.dtype)
+        lse_ref[0, 0] = (m_scr[...] + jnp.log(safe_l))[:, 0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_fwd(q, k, v, *, causal=True, sm_scale=None, window=None,
+                        block_q=128, block_k=128, interpret=False):
+    """q (B,Hq,Sq,D); k,v (B,Hkv,Sk,D). Returns (o, lse)."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    n_q = Sq // block_q
+    n_k = Sk // block_k
+
+    kernel = functools.partial(
+        _fwd_kernel, sm_scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k)
+
+    grid = (B * Hq, n_q, n_k)
+    o, lse = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda g, qi, ki: (g // Hq, g % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda g, qi, ki: (g // Hq, (g % Hq) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda g, qi, ki: (g // Hq, (g % Hq) // group, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda g, qi, ki: (g // Hq, g % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, block_q),
+                         lambda g, qi, ki: (g // Hq, g % Hq, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct(q.shape, q.dtype),
+            jax.ShapeDtypeStruct((B, Hq, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse
+
+
+# ---------------------------------------------------------------------------
+# backward
+# ---------------------------------------------------------------------------
+
+def _bwd_dq_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref, dq_ref,
+                   *, sm_scale, causal, window, block_q, block_k):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_ref[...] = jnp.zeros_like(dq_ref)
+
+    @pl.when(_visible(qi, ki, block_q, block_k, causal, window))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        mask = _block_mask(qi, ki, block_q, block_k, causal, window)
+        p = jnp.where(mask, jnp.exp(s - lse), 0.0)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * sm_scale
+        dq_ref[0, 0] += jax.lax.dot(ds, k, preferred_element_type=jnp.float32
+                                    ).astype(dq_ref.dtype)
+
+
+def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
+                    dk_ref, dv_ref,
+                    *, sm_scale, causal, window, block_q, block_k):
+    ki = pl.program_id(1)
+    qi = pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_ref[...] = jnp.zeros_like(dk_ref)
+        dv_ref[...] = jnp.zeros_like(dv_ref)
+
+    @pl.when(_visible(qi, ki, block_q, block_k, causal, window))
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)
+        k = k_ref[0, 0].astype(jnp.float32)
+        v = v_ref[0, 0].astype(jnp.float32)
+        do = do_ref[0, 0].astype(jnp.float32)
+        lse = lse_ref[0, 0][:, None]
+        delta = delta_ref[0, 0][:, None]
+
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * sm_scale
+        mask = _block_mask(qi, ki, block_q, block_k, causal, window)
+        p = jnp.where(mask, jnp.exp(s - lse), 0.0)     # (bq, bk)
+        dv_ref[0, 0] += jax.lax.dot_general(
+            p, do, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dv_ref.dtype)
+        dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - delta) * sm_scale               # (bq, bk)
+        dk_ref[0, 0] += jax.lax.dot_general(
+            ds, q, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32).astype(dk_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "sm_scale", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, sm_scale=None,
+                        window=None, block_q=128, block_k=128, interpret=False):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    n_q, n_k = Sq // block_q, Sk // block_k
+    delta = jnp.sum(do.astype(jnp.float32) * o.astype(jnp.float32), axis=-1)
+
+    q_spec = pl.BlockSpec((1, 1, block_q, D), lambda g, a, b: (g // Hq, g % Hq, 0, 0))
+    common = dict(sm_scale=scale, causal=causal, window=window,
+                  block_q=block_q, block_k=block_k)
+
+    dq = pl.pallas_call(
+        functools.partial(_bwd_dq_kernel, **common),
+        grid=(B * Hq, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda g, qi, ki: (g // Hq, g % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda g, qi, ki: (g // Hq, (g % Hq) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda g, qi, ki: (g // Hq, (g % Hq) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda g, qi, ki: (g // Hq, g % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda g, qi, ki: (g // Hq, g % Hq, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda g, qi, ki: (g // Hq, g % Hq, qi)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D), lambda g, qi, ki: (g // Hq, g % Hq, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, jnp.float32),
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    # dk/dv per q-head, then group-sum → kv heads (GQA)
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_bwd_dkv_kernel, **common),
+        grid=(B * Hq, n_k, n_q),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D), lambda g, ki, qi: (g // Hq, g % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda g, ki, qi: (g // Hq, (g % Hq) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda g, ki, qi: (g // Hq, (g % Hq) // group, ki, 0)),
+            pl.BlockSpec((1, 1, block_q, D), lambda g, ki, qi: (g // Hq, g % Hq, qi, 0)),
+            pl.BlockSpec((1, 1, block_q), lambda g, ki, qi: (g // Hq, g % Hq, qi)),
+            pl.BlockSpec((1, 1, block_q), lambda g, ki, qi: (g // Hq, g % Hq, qi)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, block_k, D), lambda g, ki, qi: (g // Hq, g % Hq, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, D), lambda g, ki, qi: (g // Hq, g % Hq, ki, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hq, Sk, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hq, Sk, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, do, lse, delta)
+
+    dk = dk_h.reshape(B, Hkv, group, Sk, D).sum(axis=2)
+    dv = dv_h.reshape(B, Hkv, group, Sk, D).sum(axis=2)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)

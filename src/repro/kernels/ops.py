@@ -1,0 +1,146 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``copyscore``      — pads sources/entries to block multiples, dispatches to
+                     the Pallas kernel (TPU) or its jnp oracle (CPU/dry-run).
+``flash_attention``— differentiable (custom_vjp) flash attention; dispatches
+                     to the Pallas kernels on TPU, interpret mode in tests,
+                     and the jnp reference on CPU otherwise.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref as kref
+from repro.kernels.copyscore import copyscore_pallas
+from repro.kernels.flash_attention import flash_attention_bwd, flash_attention_fwd
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+# ---------------------------------------------------------------------------
+# copyscore
+# ---------------------------------------------------------------------------
+
+def pad_for_copyscore(v: np.ndarray, p_blk: np.ndarray, block_i: int,
+                      block_e: int, bucket_sizes=None):
+    """Pad the incidence matrix to kernel block multiples.
+
+    If ``bucket_sizes`` is given (entries grouped by representative p), each
+    bucket is padded independently to a ``block_e`` multiple so every entry
+    block has one p̂; otherwise entries must already be block-aligned.
+    Zero columns/rows are inert. Returns (v_pad, p_blk_pad, S_orig).
+    """
+    S, E = v.shape
+    if bucket_sizes is not None:
+        cols, pb = [], []
+        off = 0
+        for k, size in enumerate(bucket_sizes):
+            blk = v[:, off: off + size]
+            pad = (-size) % block_e
+            if pad:
+                blk = np.pad(blk, ((0, 0), (0, pad)))
+            cols.append(blk)
+            pb.extend([p_blk[k]] * (blk.shape[1] // block_e))
+            off += size
+        v = np.concatenate(cols, axis=1) if cols else v
+        p_blk = np.asarray(pb, dtype=np.float32)
+    s_pad = (-S) % block_i
+    if s_pad:
+        v = np.pad(v, ((0, s_pad), (0, 0)))
+    return v, p_blk, S
+
+
+def copyscore(
+    v,                      # (S, E) incidence (entries block-aligned in p)
+    p_blk,                  # (E // block_e,) representative p̂ per block
+    acc,                    # (S,) accuracies
+    *,
+    s: float,
+    n_false: float,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_e: int = 512,
+    impl: str = "auto",     # auto | pallas | interpret | ref
+):
+    """C_same→ and shared counts over the whole index. See copyscore.py."""
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl == "ref":
+        return kref.copyscore_ref(jnp.asarray(v), jnp.asarray(p_blk),
+                                  jnp.asarray(acc), s=s, n_false=n_false,
+                                  block_e=block_e)
+    S = v.shape[0]
+    pad = (-S) % block_i
+    if pad:
+        v = jnp.pad(jnp.asarray(v), ((0, pad), (0, 0)))
+        acc = jnp.pad(jnp.asarray(acc), (0, pad), constant_values=0.5)
+    c, n = copyscore_pallas(
+        jnp.asarray(v), jnp.asarray(p_blk), jnp.asarray(acc),
+        s=s, n_false=n_false, block_i=block_i, block_j=block_j,
+        block_e=block_e, interpret=(impl == "interpret"))
+    return c[:S, :S], n[:S, :S]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (differentiable)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp,
+                   nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, sm_scale, window, block_q, block_k, interpret):
+    o, _ = flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale,
+                               window=window, block_q=block_q,
+                               block_k=block_k, interpret=interpret)
+    return o
+
+
+def _flash_fwd(q, k, v, causal, sm_scale, window, block_q, block_k, interpret):
+    o, lse = flash_attention_fwd(q, k, v, causal=causal, sm_scale=sm_scale,
+                                 window=window, block_q=block_q,
+                                 block_k=block_k, interpret=interpret)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(causal, sm_scale, window, block_q, block_k, interpret,
+               res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = flash_attention_bwd(
+        q, k, v, o, lse, do, causal=causal, sm_scale=sm_scale, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, sm_scale=None, window=None,
+                    block_q=128, block_k=128, impl="auto"):
+    """Differentiable attention. q (B,Hq,S,D); k,v (B,Hkv,S,D).
+
+    impl: auto → Pallas on TPU, jnp reference elsewhere;
+          pallas / interpret / ref force a path (tests use interpret).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    if impl in ("ref", "reference"):
+        if q.shape[2] >= 8192:
+            # long sequences: O(chunk·S) memory instead of O(S²)
+            return kref.attention_chunked(q, k, v, causal=causal,
+                                          sm_scale=sm_scale, window=window)
+        return kref.attention_ref(q, k, v, causal=causal, sm_scale=sm_scale,
+                                  window=window)
+    if impl == "chunked":
+        return kref.attention_chunked(q, k, v, causal=causal,
+                                      sm_scale=sm_scale, window=window)
+    if impl == "chunked_unroll":
+        return kref.attention_chunked(q, k, v, causal=causal,
+                                      sm_scale=sm_scale, window=window,
+                                      unroll=True)
+    return _flash(q, k, v, causal, sm_scale, window, block_q, block_k,
+                  impl == "interpret")

@@ -1,0 +1,124 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function has identical semantics (including block-constant
+approximations) to its kernel so tests can assert allclose.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# copyscore
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("s", "n_false", "block_e"))
+def copyscore_ref(v, p_blk, acc, *, s, n_false, block_e=512):
+    """Block-constant-p copy-score accumulation; oracle for copyscore_pallas."""
+    S, E = v.shape
+    n_e = E // block_e
+    vf = v.astype(jnp.float32).reshape(S, n_e, block_e)
+    a1 = acc.astype(jnp.float32)[:, None]
+    a2 = acc.astype(jnp.float32)[None, :]
+
+    def body(carry, xs):
+        c, n = carry
+        v_k, p_k = xs                                  # (S, be), scalar
+        count = jnp.dot(v_k, v_k.T, preferred_element_type=jnp.float32)
+        pr_src = p_k * a2 + (1.0 - p_k) * (1.0 - a2)
+        pr_ind = p_k * a1 * a2 + (1.0 - p_k) * (1.0 - a1) * (1.0 - a2) / n_false
+        f = jnp.log(1.0 - s + s * pr_src / pr_ind)
+        return (c + f * count, n + count), None
+
+    init = (jnp.zeros((S, S), jnp.float32), jnp.zeros((S, S), jnp.float32))
+    (c, n), _ = jax.lax.scan(body, init, (jnp.moveaxis(vf, 1, 0),
+                                          p_blk.astype(jnp.float32)))
+    return c, n
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+def attention_chunked(q, k, v, *, causal=True, sm_scale=None, window=None,
+                      chunk=2048, unroll=False):
+    """Flash-style attention in pure XLA: scan over q chunks so peak memory
+    is O(chunk·S) instead of O(S²). Numerically ≡ attention_ref. ``unroll``
+    inlines the chunk loop (used by the dry-run probes so cost_analysis
+    counts every chunk — XLA tallies a while body once).
+
+    Memory design (EXPERIMENTS.md §Perf H1): kv heads are never repeated to
+    q heads (grouped einsum over the GQA group dim), k/v stay in their input
+    dtype with f32 accumulation, and sliding-window layers slice only the
+    window+chunk keys each q chunk can see instead of all S of them.
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    Sk = k.shape[2]
+    n_chunks = Sq // chunk
+    assert Sq % chunk == 0, (Sq, chunk)
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    qc = jnp.moveaxis(qg.reshape(B, Hkv, group, n_chunks, chunk, D), 3, 0)
+    kwin = min(window + chunk, Sk) if window is not None else Sk
+
+    def one_chunk(_, qi_pair):
+        qi, ci = qi_pair                                   # (B,Hkv,g,chunk,D)
+        q_pos = ci * chunk + jnp.arange(chunk)[:, None]
+        if window is not None:
+            start = jnp.clip(ci * chunk + chunk - kwin, 0, Sk - kwin)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, kwin, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, kwin, axis=2)
+            k_pos = start + jnp.arange(kwin)[None, :]
+        else:
+            ks, vs = k, v
+            k_pos = jnp.arange(Sk)[None, :]
+        logits = jnp.einsum("bhgqd,bhkd->bhgqk", qi, ks,
+                            preferred_element_type=jnp.float32) * scale
+        mask = jnp.ones(q_pos.shape[:1] + k_pos.shape[1:], bool)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window is not None:
+            mask &= (q_pos - k_pos) < window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vs.astype(jnp.float32))
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_chunk, None,
+                           (qc, jnp.arange(n_chunks)),
+                           unroll=n_chunks if unroll else 1)
+    # (n_chunks, B, Hkv, g, chunk, D) → (B, Hq, Sq, D)
+    outs = jnp.moveaxis(outs, 0, 3)
+    return outs.reshape(B, Hq, Sq, D)
+
+
+def attention_ref(q, k, v, *, causal=True, sm_scale=None, window=None):
+    """Reference attention. q (B,Hq,S,D); k,v (B,Hkv,S,D) with Hq % Hkv == 0.
+
+    window (int): sliding-window size — key j visible from query i iff
+    0 ≤ i − j < window (combined with causal).
+    """
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Hkv, group, Sq, D)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    Sk = k.shape[2]
+    qi = jnp.arange(Sq)[:, None]
+    kj = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qi >= kj
+    if window is not None:
+        mask &= (qi - kj) < window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, Sq, D).astype(q.dtype)

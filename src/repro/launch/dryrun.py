@@ -1,0 +1,336 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^^ MUST precede every other import: jax locks the device count on first
+# backend init. These two lines are the whole reason this file exists as the
+# dry-run entry point — do not move them.
+
+"""Multi-pod dry-run: .lower().compile() every (arch × shape × mesh) cell.
+
+For each cell we build the real jitted program (train_step with optimizer
+update and grad accumulation, or the one-token serve_step with its KV/SSM
+caches), lower it against ShapeDtypeStruct stand-ins (zero allocation),
+compile it for the production mesh, and extract:
+
+  * memory_analysis()  — proves the per-device footprint fits a v5e,
+  * cost_analysis()    — FLOPs / bytes for §Roofline,
+  * HLO collective sizes — the collective roofline term.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --out experiments/dryrun.json
+  python -m repro.launch.dryrun --copyscore --mesh multi     # paper workload
+"""
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import (
+    analyze_compiled,
+    count_params,
+    model_flops_for,
+)
+from repro.models import Model
+from repro.optim import OPTIMIZERS
+from repro.optim.schedule import warmup_cosine
+from repro.runtime.sharding import _dims_tree_specs, spec_for
+from repro.runtime.train_loop import make_train_step, train_state_dims
+
+
+def _named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def _batch_axes(mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def build_train(cfg, shape, mesh):
+    """→ (lowered, chips, model_flops)."""
+    model = Model(cfg)
+    optimizer = OPTIMIZERS[cfg.optimizer]()
+    dp = int(np.prod([mesh.shape[a] for a in _batch_axes(mesh)]))
+    # one sequence per data shard per microbatch; accumulate to global batch
+    grad_accum = max(shape.global_batch // dp, 1)
+    micro = shape.global_batch // grad_accum
+
+    lr_fn = warmup_cosine(3e-4, 100, 10_000)
+    step = make_train_step(model, optimizer, lr_fn, grad_accum=grad_accum)
+
+    state_shapes = jax.eval_shape(
+        lambda k: {"params": model.init(k),
+                   "opt": optimizer.init(model.init(k)),
+                   "step": jnp.zeros((), jnp.int32)},
+        jax.random.PRNGKey(0))
+    state_specs = _dims_tree_specs(state_shapes,
+                                   train_state_dims(model, optimizer),
+                                   mesh, "param")
+
+    ba = _batch_axes(mesh)
+    def tok_spec(t):
+        lead = () if grad_accum == 1 else (None,)
+        return P(*lead, ba, *(None,) * (t.ndim - len(lead) - 1))
+
+    bshape = ((grad_accum, micro, shape.seq_len) if grad_accum > 1
+              else (micro, shape.seq_len))
+    batch_shapes = {"tokens": jax.ShapeDtypeStruct(bshape, jnp.int32),
+                    "labels": jax.ShapeDtypeStruct(bshape, jnp.int32)}
+    if cfg.cond_len:
+        cshape = ((grad_accum, micro, cfg.cond_len, cfg.cond_dim)
+                  if grad_accum > 1 else (micro, cfg.cond_len, cfg.cond_dim))
+        batch_shapes["cond"] = jax.ShapeDtypeStruct(cshape, jnp.bfloat16)
+    batch_specs = {k: tok_spec(v) for k, v in batch_shapes.items()}
+
+    jitted = jax.jit(
+        step,
+        in_shardings=(_named(state_specs, mesh), _named(batch_specs, mesh)),
+        out_shardings=(_named(state_specs, mesh), None),
+        donate_argnums=(0,),
+    )
+    lowered = jitted.lower(state_shapes, batch_shapes)
+    total, active = count_params(state_shapes["params"],
+                                 active_expert_frac=(cfg.top_k / cfg.n_experts
+                                                     if cfg.n_experts else 1.0))
+    mf = model_flops_for(cfg, shape, total, active)
+    from repro.launch.roofline import sharded_bytes
+    state_gb = sharded_bytes(state_shapes, state_specs, mesh) / 2**30
+    # live working set ≈ state (params+opt, donated/aliased) + grads (bf16-ish
+    # f32) + per-microbatch activations under remat (~8 residual-sized bufs/layer depth 1)
+    act_gb = (micro * shape.seq_len * cfg.d_model * 4 * 8) / 2**30 / \
+        max(np.prod([mesh.shape[a] for a in _batch_axes(mesh)]), 1)
+    grads_gb = sharded_bytes(state_shapes["params"],
+                             state_specs["params"], mesh) / 2**30
+    return lowered, mesh.size, mf, {"grad_accum": grad_accum,
+                                    "total_params": total,
+                                    "active_params": active,
+                                    "analytic_gb": {
+                                        "state": round(state_gb, 2),
+                                        "grads": round(grads_gb, 2),
+                                        "activations": round(act_gb, 2),
+                                        "total": round(state_gb + grads_gb
+                                                       + act_gb, 2)}}
+
+
+def build_serve(cfg, shape, mesh, prefill=False):
+    model = Model(cfg)
+    B = shape.global_batch
+
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = _dims_tree_specs(param_shapes, model.param_dims(), mesh, "param")
+    ba = _batch_axes(mesh)
+
+    total, active = count_params(param_shapes,
+                                 active_expert_frac=(cfg.top_k / cfg.n_experts
+                                                     if cfg.n_experts else 1.0))
+    mf = model_flops_for(cfg, shape, total, active)
+
+    if prefill:
+        def prefill_step(params, tokens, cond=None):
+            return model.prefill(params, tokens, cond=cond)
+
+        args = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+        specs = {"tokens": P(ba, None)}
+        if cfg.cond_len:
+            args["cond"] = jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.cond_dim),
+                                                jnp.bfloat16)
+            specs["cond"] = P(ba, None, None)
+        jitted = jax.jit(prefill_step,
+                         in_shardings=(_named(p_specs, mesh),
+                                       *(_named(specs[k], mesh) for k in args)),
+                         )
+        lowered = jitted.lower(param_shapes, *args.values())
+        return lowered, mesh.size, mf, {"total_params": total,
+                                        "active_params": active}
+
+    cache_shapes = jax.eval_shape(lambda: model.init_cache(B, shape.seq_len))
+    c_specs = _dims_tree_specs(cache_shapes, model.cache_dims(), mesh, "act")
+
+    def serve_step(params, cache, tokens, pos, cond=None):
+        return model.decode_step(params, cache, tokens, pos, cond=cond)
+
+    tok_sds = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_spec = spec_for(("batch",), (B,), mesh, kind="act")
+    in_sh = [_named(p_specs, mesh), _named(c_specs, mesh),
+             NamedSharding(mesh, tok_spec), NamedSharding(mesh, P())]
+    args = [param_shapes, cache_shapes, tok_sds, pos_sds]
+    if cfg.cond_len:
+        cond_sds = jax.ShapeDtypeStruct((B, cfg.cond_len, cfg.cond_dim),
+                                        jnp.bfloat16)
+        cond_spec = spec_for(("batch", "seq", "dm"),
+                             cond_sds.shape, mesh, kind="act")
+        in_sh.append(NamedSharding(mesh, cond_spec))
+        args.append(cond_sds)
+
+    jitted = jax.jit(serve_step, in_shardings=tuple(in_sh),
+                     donate_argnums=(1,))
+    lowered = jitted.lower(*args)
+    return lowered, mesh.size, mf, {"total_params": total,
+                                    "active_params": active}
+
+
+def build_copyscore(mesh, n_sources=1_048_576 // 8, n_entries=2_097_152 // 4,
+                    n_buckets=16):
+    """The paper's own workload on the production mesh (DESIGN.md §5):
+    distributed bucketed pair scoring, entries sharded over pods.
+    int8 incidence + K=16 buckets per §Perf H3 (9.73 s → 0.48 s memory term)."""
+    from repro.core.distributed import distributed_pair_scores_lowerable
+    from repro.core.types import CopyConfig
+
+    K = n_buckets
+    w = n_entries // K
+    lowered = distributed_pair_scores_lowerable(mesh, n_sources, K, w,
+                                                CopyConfig(), dtype=jnp.int8)
+    flops = 2.0 * n_sources * n_sources * n_entries    # useful matmul flops
+    return lowered, mesh.size, flops, {"n_sources": n_sources,
+                                       "n_entries": n_entries,
+                                       "n_buckets": K}
+
+
+def run_cell(arch, shape_name, mesh_kind):
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    if arch == "copyscore":
+        lowered, chips, mf, extra = build_copyscore(mesh)
+    else:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ok, why = shape_applicable(cfg, shape)
+        if not ok:
+            return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                    "status": "skipped", "reason": why}
+        if shape.kind == "train":
+            lowered, chips, mf, extra = build_train(cfg, shape, mesh)
+        elif shape.kind == "prefill":
+            lowered, chips, mf, extra = build_serve(cfg, shape, mesh, prefill=True)
+        else:
+            lowered, chips, mf, extra = build_serve(cfg, shape, mesh)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    result = analyze_compiled(compiled, chips, model_flops=mf)
+
+    # the artifact proves compile-coherence and provides memory_analysis; the
+    # roofline *rate* terms come from trip-count-exact probes (probes.py)
+    result["artifact_raw"] = {k: result[k] for k in
+                              ("flops_per_device", "hbm_bytes_per_device",
+                               "collective_bytes_per_device")}
+    if arch == "copyscore":
+        # the bucket scan body is tallied once; scale flops/bytes by K
+        # (the cross-pod psum sits outside the loop — counted once, correct)
+        K = extra.get("n_buckets", 64)
+        result["flops_per_device"] *= K
+        result["hbm_bytes_per_device"] *= K
+    else:
+        from repro.launch.probes import probe_cell_terms
+        probe = probe_cell_terms(get_config(arch), SHAPES[shape_name], mesh,
+                                 grad_accum=extra.get("grad_accum"))
+        result.update({k: probe[k] for k in
+                       ("flops_per_device", "hbm_bytes_per_device",
+                        "collective_bytes_per_device")})
+        result["per_kind_terms"] = probe["per_kind"]
+    # recompute the three terms from the corrected rates
+    from repro.launch.roofline import Roofline
+    rl = Roofline(result["flops_per_device"], result["hbm_bytes_per_device"],
+                  result["collective_bytes_per_device"],
+                  model_flops=mf).finalize(chips)
+    result.update({"compute_s": rl.compute_s, "memory_s": rl.memory_s,
+                   "collective_s": rl.collective_s,
+                   "bottleneck": rl.bottleneck,
+                   "useful_flops_ratio": rl.useful_flops_ratio})
+    result.update({"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "chips": chips, "status": "ok",
+                   "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+                   **extra})
+    return result
+
+
+def all_cells():
+    for arch in ARCH_IDS:
+        for shape_name in SHAPES:
+            yield arch, shape_name
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--copyscore", action="store_true",
+                    help="dry-run the paper's distributed copy-score workload")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--timeout", type=int, default=1800)
+    args = ap.parse_args()
+
+    if args.all:
+        # subprocess per cell: isolates compiler memory, resumable
+        results = {}
+        if args.out and os.path.exists(args.out):
+            results = json.load(open(args.out))
+        cells = [(a, s, m) for a, s in all_cells() for m in ("single", "multi")]
+        cells += [("copyscore", "pairscore", m) for m in ("single", "multi")]
+        for arch, shape_name, mesh_kind in cells:
+            key = f"{arch}|{shape_name}|{mesh_kind}"
+            if key in results and results[key].get("status") in ("ok", "skipped"):
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--mesh", mesh_kind]
+            cmd += (["--copyscore"] if arch == "copyscore"
+                    else ["--arch", arch, "--shape", shape_name])
+            print(f"[dryrun] {key} ...", flush=True)
+            try:
+                proc = subprocess.run(cmd, capture_output=True, text=True,
+                                      timeout=args.timeout,
+                                      env={**os.environ, "PYTHONPATH": "src"})
+                line = [l for l in proc.stdout.splitlines()
+                        if l.startswith("CELLRESULT")]
+                if proc.returncode == 0 and line:
+                    results[key] = json.loads(line[0][len("CELLRESULT"):])
+                else:
+                    results[key] = {"arch": arch, "shape": shape_name,
+                                    "mesh": mesh_kind, "status": "error",
+                                    "error": (proc.stderr or proc.stdout)[-2000:]}
+            except subprocess.TimeoutExpired:
+                results[key] = {"arch": arch, "shape": shape_name,
+                                "mesh": mesh_kind, "status": "timeout"}
+            if args.out:
+                os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+                json.dump(results, open(args.out, "w"), indent=1)
+            st = results[key].get("status")
+            print(f"[dryrun] {key}: {st}", flush=True)
+        n_ok = sum(1 for r in results.values() if r.get("status") == "ok")
+        print(f"[dryrun] done: {n_ok}/{len(results)} ok")
+        return
+
+    if args.copyscore:
+        result = run_cell("copyscore", "pairscore", args.mesh)
+    else:
+        result = run_cell(args.arch, args.shape, args.mesh)
+    if result.get("status") == "ok":
+        mem = result.get("memory", {})
+        print(f"memory_analysis: args={mem.get('argument_bytes', 0) / 2**30:.2f} GiB "
+              f"temp={mem.get('temp_bytes', 0) / 2**30:.2f} GiB "
+              f"peak={mem.get('peak_bytes', 0) / 2**30:.2f} GiB per device")
+        print(f"cost_analysis: flops/device={result['flops_per_device']:.3e} "
+              f"bytes/device={result['hbm_bytes_per_device']:.3e} "
+              f"collective bytes/device={result['collective_bytes_per_device']:.3e}")
+        print(f"roofline terms (s): compute={result['compute_s']:.4f} "
+              f"memory={result['memory_s']:.4f} "
+              f"collective={result['collective_s']:.4f} "
+              f"→ {result['bottleneck']}-bound")
+    print("CELLRESULT" + json.dumps(result))
+
+
+if __name__ == "__main__":
+    main()

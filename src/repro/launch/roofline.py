@@ -1,0 +1,169 @@
+"""Roofline-term extraction from compiled (AOT) artifacts.
+
+compute  = HLO_FLOPs_per_device / peak_FLOP/s          (cost_analysis is per
+memory   = HLO_bytes_per_device / HBM_bw                SPMD module = per chip)
+collective = collective_bytes_per_device / ICI_bw
+
+collective_bytes: cost_analysis does not expose collectives, so we parse the
+compiled HLO text and sum the *result-shape* bytes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(tuple results summed per component). This is a consistent wire-traffic
+proxy: a ring all-reduce moves ~2× result bytes per device and an all-gather
+~1× — constant factors that don't change which term dominates.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `bf16[2,4096,128]` — dtype + dims (scalar = empty dims)
+_SHAPE_RE = re.compile(r"\b(pred|s8|u8|s16|u16|bf16|f16|s32|u32|f32|s64|u64|f64|c64)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(?P<result>.*?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(segment: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(segment):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-op-kind result bytes summed over the module (one device)."""
+    per_kind: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    counts: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    seen_done = set()
+    for m in _INSTR_RE.finditer(hlo_text):
+        op = m.group("op")
+        # async pairs appear as -start/-done; count each logical op once
+        line = m.group(0)
+        if "-done(" in line:
+            continue
+        per_kind[op] += _shape_bytes(m.group("result"))
+        counts[op] += 1
+    return {"bytes": per_kind, "counts": counts,
+            "total_bytes": sum(per_kind.values())}
+
+
+@dataclass
+class Roofline:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    collective_s: float = 0.0
+    bottleneck: str = ""
+    model_flops: float = 0.0          # 6·N_active·D (train) / 2·N_active·D
+    useful_flops_ratio: float = 0.0   # MODEL_FLOPS / (chips · HLO_FLOPs)
+
+    def finalize(self, chips: int):
+        self.compute_s = self.flops_per_device / PEAK_FLOPS_BF16
+        self.memory_s = self.hbm_bytes_per_device / HBM_BW
+        self.collective_s = self.collective_bytes_per_device / ICI_BW
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.bottleneck = max(terms, key=terms.get)
+        if self.model_flops:
+            self.useful_flops_ratio = self.model_flops / max(
+                self.flops_per_device * chips, 1.0)
+        return self
+
+
+def analyze_compiled(compiled, chips: int, model_flops: float = 0.0) -> dict:
+    cost = compiled.cost_analysis() or {}
+    mem = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = collective_bytes(text)
+    rl = Roofline(
+        flops_per_device=float(cost.get("flops", 0.0)),
+        hbm_bytes_per_device=float(cost.get("bytes accessed", 0.0)),
+        collective_bytes_per_device=float(coll["total_bytes"]),
+        model_flops=model_flops,
+    ).finalize(chips)
+    out = asdict(rl)
+    out["collectives"] = coll
+    if mem is not None:
+        out["memory"] = {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": mem.peak_memory_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+        }
+        # donated inputs alias outputs; live bytes ≈ args + temp
+        out["memory"]["per_device_gb"] = (
+            (mem.argument_size_in_bytes + mem.temp_size_in_bytes) / 2**30)
+    return out
+
+
+def sharded_bytes(shapes_tree, specs_tree, mesh) -> float:
+    """Exact per-device bytes of a tree given its PartitionSpecs."""
+    import jax
+    import numpy as np
+
+    flat_s, treedef = jax.tree_util.tree_flatten(shapes_tree)
+    flat_p = treedef.flatten_up_to(specs_tree)
+    total = 0.0
+    for sds, spec in zip(flat_s, flat_p):
+        shard = 1
+        for entry in (spec or ()):
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shard *= mesh.shape[a]
+        total += np.prod(sds.shape) * sds.dtype.itemsize / shard
+    return float(total)
+
+
+def count_params(shapes_tree, active_expert_frac: float = 1.0,
+                 expert_paths=("wg", "wu", "wd")) -> tuple[float, float]:
+    """(total params, active params) from a ShapeDtypeStruct tree.
+
+    Leaves reached under a 'moe' key have a leading expert dim; only
+    top_k/E of them are active per token.
+    """
+    import jax
+
+    total = active = 0.0
+    flat, _ = jax.tree_util.tree_flatten_with_path(shapes_tree)
+    for path, leaf in flat:
+        n = 1
+        for s in leaf.shape:
+            n *= s
+        keys = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        total += n
+        if "moe" in keys and any(k in expert_paths for k in keys):
+            active += n * active_expert_frac
+        elif "embed" in keys or "lm_head" in keys:
+            pass                                   # excluded from 6ND
+        else:
+            active += n
+    return total, active
+
+
+def model_flops_for(cfg, shape, total_params: float, active_params: float) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (prefill) / 2·N·B (decode)."""
+    if shape.kind == "train":
+        return 6.0 * active_params * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * active_params * shape.global_batch * shape.seq_len
+    return 2.0 * active_params * shape.global_batch          # decode: 1 token

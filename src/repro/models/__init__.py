@@ -1,0 +1,3 @@
+from repro.models.model import Model, greedy_decode
+
+__all__ = ["Model", "greedy_decode"]

@@ -1,0 +1,169 @@
+"""Self/cross attention with GQA, RoPE, sliding windows, and KV caching.
+
+Layouts:
+  weights  wq (D, H, hd) · wk/wv (D, KV, hd) · wo (H, hd, D)
+  cache    k/v (B, KV, S_cache, hd) + pos_ids (S_cache,) absolute positions
+           (pos_ids makes rotating sliding-window caches maskable).
+Attention impl is selected by cfg.attention_impl: the Pallas flash kernel on
+TPU, interpret mode in kernel tests, or the jnp reference (CPU, dry-run).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.kernels.ops import flash_attention
+from repro.models.common import apply_rope, dense_init, make_rope
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    D = cfg.d_model
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    kv_in = cfg.cond_dim if cross else D
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (D, H, hd), in_axis_size=D),
+        "wk": dense_init(ks[1], (kv_in, KV, hd), in_axis_size=kv_in),
+        "wv": dense_init(ks[2], (kv_in, KV, hd), in_axis_size=kv_in),
+        "wo": dense_init(ks[3], (H, hd, D), in_axis_size=H * hd),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd))
+        p["bk"] = jnp.zeros((KV, hd))
+        p["bv"] = jnp.zeros((KV, hd))
+    return p
+
+
+def attention_dims(cfg: ModelConfig, cross: bool = False):
+    d = {
+        "wq": ("d_model", "heads", "head_dim"),
+        "wk": ("cond_dim" if cross else "d_model", "kv_heads", "head_dim"),
+        "wv": ("cond_dim" if cross else "d_model", "kv_heads", "head_dim"),
+        "wo": ("heads", "head_dim", "d_model"),
+    }
+    if cfg.qkv_bias:
+        d["bq"] = ("heads", "head_dim")
+        d["bk"] = ("kv_heads", "head_dim")
+        d["bv"] = ("kv_heads", "head_dim")
+    return d
+
+
+def _project_qkv(p, x, kv_src, cfg: ModelConfig):
+    q = jnp.einsum("bsd,dhk->bhsk", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bhsk", kv_src, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bhsk", kv_src, p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)[None, :, None, :]
+        k = k + p["bk"].astype(x.dtype)[None, :, None, :]
+        v = v + p["bv"].astype(x.dtype)[None, :, None, :]
+    return q, k, v
+
+
+def self_attention(p, x, rope, cfg: ModelConfig, window: Optional[int] = None):
+    """Training/prefill forward. x (B, S, D) → (B, S, D), causal."""
+    cos, sin = rope
+    q, k, v = _project_qkv(p, x, x, cfg)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    o = flash_attention(q, k, v, causal=True, window=window,
+                        impl=cfg.attention_impl if cfg.attention_impl != "pallas"
+                        else "pallas")
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+def cross_attention(p, x, cond, cfg: ModelConfig):
+    """x (B, S, D) attends over cond (B, T, cond_dim); not causal, no rope."""
+    q, k, v = _project_qkv(p, x, cond, cfg)
+    o = flash_attention(q, k, v, causal=False, impl=cfg.attention_impl
+                        if cfg.attention_impl != "pallas" else "pallas")
+    return jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+
+
+# ---------------------------------------------------------------------------
+# decoding with a KV cache
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ModelConfig, n_layers: int, batch: int, seq_len: int,
+                  window: Optional[int] = None, dtype=jnp.bfloat16):
+    KV, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    S = min(seq_len, window) if window else seq_len
+    return {
+        "k": jnp.zeros((n_layers, batch, KV, S, hd), dtype),
+        "v": jnp.zeros((n_layers, batch, KV, S, hd), dtype),
+        # per-row absolute positions: rows may decode at different positions
+        # (continuous batching, runtime/serve_loop.py)
+        "pos_ids": jnp.full((n_layers, batch, S), -1, jnp.int32),
+    }
+
+
+def kv_cache_dims():
+    return {
+        "k": ("layer", "batch", "kv_heads", "seq", "head_dim"),
+        "v": ("layer", "batch", "kv_heads", "seq", "head_dim"),
+        "pos_ids": ("layer", "batch", "seq"),
+    }
+
+
+def decode_self_attention(p, x, cache_l, pos, rope_tables, cfg: ModelConfig,
+                          window: Optional[int] = None):
+    """One-token decode. x (B, 1, D); cache_l holds this layer's k/v/pos_ids.
+
+    Returns (out (B,1,D), new cache_l). The cache slot is pos % S_cache
+    (rotating for sliding windows, identity otherwise); masking uses the
+    stored absolute positions so SWA and full caches share one code path.
+    rope_tables is unused (rope is computed from ``pos`` directly, keeping
+    500k-long tables out of the HLO); kept for signature stability.
+    """
+    del rope_tables
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, x, x, cfg)     # (B,H,1,hd), (B,KV,1,hd)
+    S_c = cache_l["k"].shape[2]
+    per_row = jnp.ndim(pos) > 0                      # continuous batching
+
+    if per_row:                                      # pos (B,) — per-slot
+        cos, sin = make_rope(pos, cfg.resolved_head_dim, cfg.rope_theta)
+        cos = cos[:, None, None, :]                  # (B,1,1,hd/2)
+        sin = sin[:, None, None, :]
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+        rows = jnp.arange(B)
+        slot = pos % S_c
+        k = cache_l["k"].at[rows, :, slot].set(
+            k_new[:, :, 0].astype(cache_l["k"].dtype))
+        v = cache_l["v"].at[rows, :, slot].set(
+            v_new[:, :, 0].astype(cache_l["v"].dtype))
+        pos_ids = cache_l["pos_ids"].at[rows, slot].set(pos)
+        pos_b = pos[:, None]                         # (B,1)
+    else:                                            # scalar pos (dry-run path)
+        cos, sin = make_rope(jnp.asarray(pos)[None], cfg.resolved_head_dim,
+                             cfg.rope_theta)         # (1, hd/2)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+        slot = pos % S_c
+        k = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["k"], k_new.astype(cache_l["k"].dtype), slot, axis=2)
+        v = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["v"], v_new.astype(cache_l["v"].dtype), slot, axis=2)
+        pos_ids = jax.lax.dynamic_update_slice_in_dim(
+            cache_l["pos_ids"], jnp.full((cache_l["pos_ids"].shape[0], 1),
+                                         pos, jnp.int32), slot, axis=1)
+        pos_b = jnp.full((B, 1), pos, jnp.int32)
+
+    scale = 1.0 / (cfg.resolved_head_dim ** 0.5)
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    group = H // KV
+    qg = q.reshape(B, KV, group, cfg.resolved_head_dim)
+    logits = jnp.einsum("bkgd,bksd->bkgs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = (pos_ids >= 0) & (pos_ids <= pos_b)      # (B, S_c)
+    if window is not None:
+        valid &= (pos_b - pos_ids) < window
+    logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    o = jnp.einsum("bkgs,bksd->bkgd", probs, v.astype(jnp.float32))
+    o = o.reshape(B, H, 1, cfg.resolved_head_dim).astype(x.dtype)
+    out = jnp.einsum("bhsk,hkd->bsd", o, p["wo"].astype(x.dtype))
+    return out, {"k": k, "v": v, "pos_ids": pos_ids}

@@ -1,0 +1,48 @@
+"""Shared model components: norms, RoPE, initializers, dtype policy."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x, weight, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def make_rope(positions, head_dim: int, theta: float = 10000.0):
+    """(cos, sin) of shape (len(positions), head_dim // 2). ``positions`` may
+    be traced (jnp) — no giant constant tables end up in the HLO."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = jnp.outer(jnp.asarray(positions, jnp.float32), freqs)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x (..., S, head_dim); cos/sin (S, head_dim/2) or broadcastable."""
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def dense_init(key, shape, in_axis_size=None, dtype=jnp.float32):
+    fan_in = in_axis_size if in_axis_size is not None else shape[0]
+    scale = 1.0 / np.sqrt(max(fan_in, 1))
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def stacked(init_fn, key, n: int, *args, **kw):
+    """Initialize a weight stacked over a leading layer dimension."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_fn(k, *args, **kw))(keys)
+
+
+def cast_tree(tree, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree)

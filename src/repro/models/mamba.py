@@ -1,0 +1,164 @@
+"""Mamba-1 selective-state-space mixer (falcon-mamba, hymba's SSM heads).
+
+Training uses a chunked scan: an outer ``lax.scan`` over sequence chunks
+carries only the (B, d_inner, state) boundary state, and the inner per-step
+scan is wrapped in ``jax.checkpoint`` so the backward pass recomputes within
+a chunk instead of materializing (B, S, d_inner, state) — the difference
+between ~34 GB and ~34 MB of live state at the 4k×global-batch-256 dry-run
+shape. Decoding carries (h, conv window) explicitly, O(1) per token.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def init_mamba(key, cfg: ModelConfig):
+    D = cfg.d_model
+    di = cfg.resolved_d_inner
+    n = cfg.ssm_state
+    dtr = cfg.resolved_dt_rank
+    K = cfg.conv_kernel
+    ks = jax.random.split(key, 6)
+    # S4-style A init: -(1..n) per channel
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * di)),
+        "conv_w": dense_init(ks[1], (K, di), in_axis_size=K),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n)),
+        "dt_proj": dense_init(ks[3], (dtr, di), in_axis_size=dtr),
+        "dt_bias": jnp.full((di,), -4.6),              # softplus ≈ 0.01
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,)),
+        "out_proj": dense_init(ks[4], (di, D)),
+    }
+
+
+def mamba_dims(cfg: ModelConfig):
+    return {
+        "in_proj": ("d_model", "d_inner2"),
+        "conv_w": ("conv_k", "d_inner"),
+        "conv_b": ("d_inner",),
+        "x_proj": ("d_inner", "dt_plus"),
+        "dt_proj": ("dt_rank", "d_inner"),
+        "dt_bias": ("d_inner",),
+        "A_log": ("d_inner", "ssm_state"),
+        "D": ("d_inner",),
+        "out_proj": ("d_inner", "d_model"),
+    }
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig):
+    """Shared pre-scan computation. x (B,S,D) → (xr, z, dt, Bc, Cc)."""
+    di, n, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    dt_ = x.dtype
+    xz = x @ p["in_proj"].astype(dt_)                  # (B,S,2di)
+    xr, z = jnp.split(xz, 2, axis=-1)
+    return xr, z
+
+
+def _post_conv(p, xr, cfg):
+    di, n, dtr = cfg.resolved_d_inner, cfg.ssm_state, cfg.resolved_dt_rank
+    dt_ = xr.dtype
+    xr = jax.nn.silu(xr)
+    proj = xr @ p["x_proj"].astype(dt_)                # (..., dtr+2n)
+    dt_r = proj[..., :dtr]
+    Bc = proj[..., dtr: dtr + n].astype(jnp.float32)
+    Cc = proj[..., dtr + n:].astype(jnp.float32)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"].astype(dt_)).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return xr, dt, Bc, Cc
+
+
+def _scan_step(A, h, xt, dtt, Bt, Ct):
+    """h (B,di,n); xt/dtt (B,di); Bt/Ct (B,n)."""
+    da = jnp.exp(dtt[..., None] * A)                   # (B,di,n)
+    h = da * h + dtt[..., None] * Bt[:, None, :] * xt[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, Ct)
+    return h, y
+
+
+def mamba_forward(p, x, cfg: ModelConfig, h0=None):
+    """Training/prefill forward. x (B,S,D) → (B,S,D)."""
+    B, S, D = x.shape
+    di, n = cfg.resolved_d_inner, cfg.ssm_state
+    xr, z = _ssm_inputs(p, x, cfg)
+
+    # causal depthwise conv along S
+    K = cfg.conv_kernel
+    xr_pad = jnp.pad(xr, ((0, 0), (K - 1, 0), (0, 0)))
+    conv = sum(xr_pad[:, i: i + S, :] * p["conv_w"][i].astype(x.dtype)
+               for i in range(K))
+    xr = conv + p["conv_b"].astype(x.dtype)
+
+    xr, dt, Bc, Cc = _post_conv(p, xr, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))       # (di,n)
+
+    chunk = min(cfg.ssm_chunk, S)
+    n_chunks = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    def inner(h, inp):
+        def step(h, i):
+            xt, dtt, Bt, Ct = i
+            return _scan_step(A, h, xt.astype(jnp.float32), dtt, Bt, Ct)
+        return jax.lax.scan(step, h, inp)
+
+    inner_ckpt = jax.checkpoint(inner)
+
+    def outer(h, inp):
+        h, ys = inner_ckpt(h, inp)
+        return h, ys
+
+    reshape = lambda a: jnp.moveaxis(
+        a.reshape(B, n_chunks, chunk, -1), 1, 0).swapaxes(1, 2)  # (n_chunks, chunk, B, ·)
+    xs = (reshape(xr), reshape(dt), reshape(Bc), reshape(Cc))
+    h0 = jnp.zeros((B, di, n), jnp.float32) if h0 is None else h0
+    hT, ys = jax.lax.scan(outer, h0, xs)               # ys (n_chunks, chunk, B, di)
+    y = jnp.moveaxis(ys.reshape(n_chunks * chunk, B, di), 0, 1)  # (B,S,di)
+
+    y = y.astype(x.dtype) + xr * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# decoding
+# ---------------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, n_layers: int, batch: int,
+                   dtype=jnp.float32):
+    di, n, K = cfg.resolved_d_inner, cfg.ssm_state, cfg.conv_kernel
+    return {
+        "h": jnp.zeros((n_layers, batch, di, n), jnp.float32),
+        "conv": jnp.zeros((n_layers, batch, K - 1, di), dtype),
+    }
+
+
+def ssm_cache_dims():
+    return {"h": ("layer", "batch", "d_inner", "ssm_state"),
+            "conv": ("layer", "batch", "conv_k", "d_inner")}
+
+
+def mamba_decode_step(p, x, cache_l, cfg: ModelConfig):
+    """x (B, 1, D) → (out (B,1,D), new cache_l {h, conv})."""
+    B = x.shape[0]
+    di, n, K = cfg.resolved_d_inner, cfg.ssm_state, cfg.conv_kernel
+    xr, z = _ssm_inputs(p, x, cfg)                     # (B,1,di)
+    xr = xr[:, 0]
+    window = jnp.concatenate([cache_l["conv"],
+                              xr[:, None, :].astype(cache_l["conv"].dtype)], axis=1)
+    conv = jnp.einsum("bkd,kd->bd", window.astype(x.dtype),
+                      p["conv_w"].astype(x.dtype)) + p["conv_b"].astype(x.dtype)
+    xc, dt, Bc, Cc = _post_conv(p, conv[:, None, :], cfg)
+    xc, dt, Bc, Cc = xc[:, 0], dt[:, 0], Bc[:, 0], Cc[:, 0]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    h, y = _scan_step(A, cache_l["h"], xc.astype(jnp.float32), dt, Bc, Cc)
+    y = y.astype(x.dtype) + xc * p["D"].astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0])
+    out = (y @ p["out_proj"].astype(x.dtype))[:, None, :]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,37 @@
+"""Feed-forward blocks: SwiGLU (llama/qwen/grok), GeGLU (gemma), GELU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init
+
+
+def init_mlp(key, cfg: ModelConfig):
+    D, F = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wg": dense_init(ks[0], (D, F)),
+            "wu": dense_init(ks[1], (D, F)),
+            "wd": dense_init(ks[2], (F, D)),
+        }
+    return {"w1": dense_init(ks[0], (D, F)), "w2": dense_init(ks[1], (F, D))}
+
+
+def mlp_dims(cfg: ModelConfig):
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {"wg": ("d_model", "d_ff"), "wu": ("d_model", "d_ff"),
+                "wd": ("d_ff", "d_model")}
+    return {"w1": ("d_model", "d_ff"), "w2": ("d_ff", "d_model")}
+
+
+def mlp_forward(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = x @ p["wg"].astype(dt)
+        u = x @ p["wu"].astype(dt)
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g)
+        return (act * u) @ p["wd"].astype(dt)
+    return jax.nn.gelu(x @ p["w1"].astype(dt)) @ p["w2"].astype(dt)

@@ -1,0 +1,156 @@
+"""The Model API: init / forward / loss / caches / decode, plus the logical
+dimension trees the sharding-rules engine consumes (runtime/sharding.py).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.common import cast_tree, make_rope, rms_norm
+from repro.models.transformer import (
+    init_segment,
+    init_segment_cache,
+    run_segment,
+    run_segment_decode,
+    segment_cache_dims,
+    segment_dims,
+)
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------ init
+    def init(self, key):
+        cfg = self.cfg
+        ks = jax.random.split(key, len(cfg.plan) + 3)
+        params = {
+            "embed": jax.random.normal(ks[0], (cfg.vocab_size, cfg.d_model)) * 0.02,
+            "final_norm": jnp.zeros((cfg.d_model,)),
+            "segments": [init_segment(ks[2 + i], kind, count, cfg)
+                         for i, (kind, count) in enumerate(cfg.plan)],
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = jax.random.normal(
+                ks[1], (cfg.d_model, cfg.vocab_size)) * 0.02
+        return cast_tree(params, _DTYPES[cfg.param_dtype])
+
+    def param_dims(self):
+        cfg = self.cfg
+        dims = {
+            "embed": ("vocab", "d_model"),
+            "final_norm": ("d_model",),
+            "segments": [segment_dims(kind, cfg) for kind, _ in cfg.plan],
+        }
+        if not cfg.tie_embeddings:
+            dims["lm_head"] = ("d_model", "vocab")
+        return dims
+
+    # --------------------------------------------------------------- forward
+    def _stack(self, params, tokens, cond=None):
+        cfg = self.cfg
+        dt = _DTYPES[cfg.dtype]
+        x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+        if cond is not None:
+            cond = cond.astype(dt)
+        rope = make_rope(jnp.arange(tokens.shape[1]), cfg.resolved_head_dim,
+                         cfg.rope_theta)
+        for seg_params, (kind, _) in zip(params["segments"], cfg.plan):
+            x = run_segment(kind, seg_params, x, rope, cfg, cond=cond)
+        return rms_norm(x, params["final_norm"])
+
+    def forward(self, params, tokens, cond=None):
+        """tokens (B, S) int32 → logits (B, S, vocab) f32."""
+        x = self._stack(params, tokens, cond=cond)
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return (x.astype(jnp.float32) @ head.astype(jnp.float32))
+
+    def prefill(self, params, tokens, cond=None):
+        """Serving prefill: last-position logits only — the (B, S, vocab)
+        logits tensor never exists (it dominates 32k-prefill memory)."""
+        x = self._stack(params, tokens, cond=cond)[:, -1]
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return (x.astype(jnp.float32) @ head.astype(jnp.float32))
+
+    def loss(self, params, batch):
+        """batch: {tokens (B,S), labels (B,S), cond?} → mean xent (f32)."""
+        logits = self.forward(params, batch["tokens"], cond=batch.get("cond"))
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    # ---------------------------------------------------------------- decode
+    def init_cache(self, batch: int, seq_len: int, dtype=jnp.bfloat16):
+        cfg = self.cfg
+        return [init_segment_cache(kind, count, cfg, batch, seq_len, dtype)
+                for kind, count in cfg.plan]
+
+    def cache_dims(self):
+        return [segment_cache_dims(kind) for kind, _ in self.cfg.plan]
+
+    def decode_step(self, params, cache, tokens, pos, cond=None):
+        """tokens (B,) int32, pos () int32 → (logits (B, vocab), new cache)."""
+        cfg = self.cfg
+        dt = _DTYPES[cfg.dtype]
+        x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(dt)
+        if cond is not None:
+            cond = cond.astype(dt)
+        new_cache = []
+        for seg_params, seg_cache, (kind, _) in zip(params["segments"], cache,
+                                                    cfg.plan):
+            x, c = run_segment_decode(kind, seg_params, x, seg_cache, pos, cfg,
+                                      cond=cond)
+            new_cache.append(c)
+        x = rms_norm(x, params["final_norm"])
+        head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+        logits = (x[:, 0].astype(jnp.float32) @ head.astype(jnp.float32))
+        return logits, new_cache
+
+    # ---------------------------------------------------------- input specs
+    def input_specs(self, shape: ShapeConfig, per_host_batch: Optional[int] = None):
+        """ShapeDtypeStruct stand-ins for every model input (dry-run §2)."""
+        cfg = self.cfg
+        B = per_host_batch or shape.global_batch
+        specs = {}
+        if shape.kind == "train":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+        elif shape.kind == "prefill":
+            specs["tokens"] = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+        else:  # decode
+            specs["tokens"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+            specs["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+        if cfg.cond_len:
+            # modality frontend STUB: precomputed frame/patch embeddings
+            specs["cond"] = jax.ShapeDtypeStruct(
+                (B, cfg.cond_len, cfg.cond_dim), _DTYPES[cfg.dtype])
+        return specs
+
+
+def greedy_decode(model: Model, params, prompt_tokens, n_new: int, cond=None,
+                  cache_len: Optional[int] = None):
+    """Reference serving loop: prefill via forward, then token-by-token."""
+    cfg = model.cfg
+    B, S0 = prompt_tokens.shape
+    total = S0 + n_new
+    cache = model.init_cache(B, cache_len or total,
+                             dtype=_DTYPES[cfg.dtype])
+    # prefill by stepping (simple, exercises the decode path end to end)
+    tok = prompt_tokens[:, 0]
+    out = [tok]
+    for t in range(total - 1):
+        logits, cache = model.decode_step(params, cache, tok, jnp.int32(t),
+                                          cond=cond)
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        tok = jnp.where(t + 1 < S0, prompt_tokens[:, min(t + 1, S0 - 1)], nxt)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

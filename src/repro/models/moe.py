@@ -1,0 +1,140 @@
+"""Mixture-of-experts FFN with top-k routing and per-expert capacity.
+
+Dispatch is gather-based (no T×E×C one-hot tensors): tokens are assigned
+positional slots within their expert's capacity buffer via a cumulative
+count; overflow tokens are dropped (capacity_factor controls slack). The
+expert loop is a ``lax.scan`` so activation memory is one expert's buffer
+(C × d_model), not E of them — this is what keeps 1M-token MoE steps inside
+HBM at the dry-run shapes (DESIGN.md §5: "TP-experts", tokens stay
+data-sharded, expert FFN dims are tensor-sharded; no all-to-all needed).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import dense_init, stacked
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (D, E)),
+        "wg": stacked(dense_init, ks[1], E, (D, F)),
+        "wu": stacked(dense_init, ks[2], E, (D, F)),
+        "wd": stacked(dense_init, ks[3], E, (F, D)),
+    }
+
+
+def moe_dims(cfg: ModelConfig):
+    return {
+        "router": ("d_model", "experts"),
+        "wg": ("experts", "d_model", "d_ff"),
+        "wu": ("experts", "d_model", "d_ff"),
+        "wd": ("experts", "d_ff", "d_model"),
+    }
+
+
+def moe_forward(p, x, cfg: ModelConfig):
+    """x (B, S, D) → (B, S, D). Dispatches to row-local routing (default —
+    no cross-shard gathers; see EXPERIMENTS.md §Perf H2) or the flat global
+    routing kept as the measured baseline."""
+    if getattr(cfg, "moe_routing", "local") == "global":
+        return _moe_forward_global(p, x, cfg)
+    return _moe_forward_local(p, x, cfg)
+
+
+def _moe_forward_local(p, x, cfg: ModelConfig):
+    """Row-local top-k routing: every gather/scatter runs along the
+    *sequence* axis of one batch row, so with batch sharded over (pod, data)
+    the dispatch is collective-free; the only collectives left are the TP
+    psum of the expert FFN contraction and the FSDP weight gathers.
+    Capacity is per row (⌈cf·k·S/E⌉) — the standard per-shard-capacity
+    approximation of global top-k dropping."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    capacity = min(int(math.ceil(cfg.capacity_factor * k * S / E)), S)
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)   # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(probs, k)                      # (B,S,k)
+    top_vals = top_vals / top_vals.sum(axis=-1, keepdims=True)
+
+    def route_row(w_row, x_row):
+        """w_row (S,), x_row (S,D) → (xe (C,D), buf (C,), w_sel (C,1))."""
+        mask = w_row > 0.0
+        pos = jnp.cumsum(mask) - 1
+        keep = mask & (pos < capacity)
+        slot = jnp.where(keep, pos, capacity)
+        buf = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(
+            jnp.arange(S, dtype=jnp.int32), mode="drop")[:capacity]
+        n_keep = jnp.minimum(keep.sum(), capacity)
+        valid = (jnp.arange(capacity) < n_keep)[:, None]
+        w_sel = jnp.where(valid, w_row[buf][:, None], 0.0)
+        return x_row[buf], buf, w_sel
+
+    def expert_body(y, ep):
+        w_tok = jnp.where(top_idx == ep["eid"], top_vals, 0.0).sum(-1)  # (B,S)
+        xe, buf, w_sel = jax.vmap(route_row)(w_tok, x)          # (B,C,D)…
+        dt = x.dtype
+        act = jax.nn.silu(jnp.einsum("bcd,df->bcf", xe, ep["wg"].astype(dt))) \
+            * jnp.einsum("bcd,df->bcf", xe, ep["wu"].astype(dt))
+        ye = jnp.einsum("bcf,fd->bcd", act, ep["wd"].astype(dt))
+        contrib = ye * w_sel.astype(dt)
+        return jax.vmap(lambda yr, br, cr: yr.at[br].add(cr, mode="drop"))(
+            y, buf, contrib), None
+
+    xs = {"eid": jnp.arange(E, dtype=jnp.int32),
+          "wg": p["wg"], "wu": p["wu"], "wd": p["wd"]}
+    y, _ = jax.lax.scan(expert_body, jnp.zeros_like(x), xs,
+                        unroll=E if PROBE_UNROLL else 1)
+    return y
+
+
+def _moe_forward_global(p, x, cfg: ModelConfig):
+    """Baseline: flat global-token routing (gathers cross data shards)."""
+    B, S, D = x.shape
+    T = B * S
+    E, k = cfg.n_experts, cfg.top_k
+    capacity = int(math.ceil(cfg.capacity_factor * k * T / E))
+    capacity = min(capacity, T)
+
+    xt = x.reshape(T, D)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    top_vals, top_idx = jax.lax.top_k(probs, k)                  # (T, k)
+    top_vals = top_vals / top_vals.sum(axis=-1, keepdims=True)
+
+    def expert_body(y, ep):
+        eid = ep["eid"]
+        w_tok = jnp.where(top_idx == eid, top_vals, 0.0).sum(axis=-1)  # (T,)
+        mask = w_tok > 0.0
+        pos = jnp.cumsum(mask) - 1
+        keep = mask & (pos < capacity)
+        slot = jnp.where(keep, pos, capacity)                    # overflow → trash
+        buf = jnp.zeros((capacity + 1,), jnp.int32).at[slot].set(
+            jnp.arange(T, dtype=jnp.int32), mode="drop")[:capacity]
+        n_keep = jnp.minimum(keep.sum(), capacity)
+
+        xe = xt[buf]                                             # (C, D)
+        dt = x.dtype
+        act = jax.nn.silu(xe @ ep["wg"].astype(dt)) * (xe @ ep["wu"].astype(dt))
+        ye = act @ ep["wd"].astype(dt)                           # (C, D)
+        valid = (jnp.arange(capacity) < n_keep)[:, None]
+        contrib = jnp.where(valid, ye * w_tok[buf][:, None].astype(dt), 0.0)
+        return y.at[buf].add(contrib, mode="drop"), None
+
+    xs = {"eid": jnp.arange(E, dtype=jnp.int32),
+          "wg": p["wg"], "wu": p["wu"], "wd": p["wd"]}
+    y, _ = jax.lax.scan(expert_body, jnp.zeros_like(xt), xs,
+                        unroll=E if PROBE_UNROLL else 1)
+    return y.reshape(B, S, D)
+
+
+# dry-run probes flip this so cost_analysis counts every expert (a while
+# body is tallied once by XLA) — see launch/probes.py
+PROBE_UNROLL = False

@@ -1,0 +1,189 @@
+"""Block definitions and segment runners for every block kind.
+
+A model is a sequence of homogeneous *segments* (configs/base.py layer plan);
+each segment's per-layer params are stacked on a leading dim and executed
+with ``lax.scan`` (+ ``jax.checkpoint`` when cfg.remat) so the HLO stays
+small at 64-layer scale and live activations are one layer deep.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    attention_dims,
+    cross_attention,
+    decode_self_attention,
+    init_attention,
+    init_kv_cache,
+    kv_cache_dims,
+    self_attention,
+)
+from repro.models.common import rms_norm, stacked
+from repro.models.mamba import (
+    init_mamba,
+    init_ssm_cache,
+    mamba_decode_step,
+    mamba_dims,
+    mamba_forward,
+    ssm_cache_dims,
+)
+from repro.models.mlp import init_mlp, mlp_dims, mlp_forward
+from repro.models.moe import init_moe, moe_dims, moe_forward
+
+ATTN_KINDS = {"dense", "moe", "cross", "hybrid_swa", "hybrid_full"}
+SSM_KINDS = {"ssm", "hybrid_swa", "hybrid_full"}
+
+
+def _window(kind: str, cfg: ModelConfig) -> Optional[int]:
+    return cfg.swa_window if kind == "hybrid_swa" else None
+
+
+# ---------------------------------------------------------------------------
+# per-layer init / dims
+# ---------------------------------------------------------------------------
+
+def init_block(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 8)
+    p = {"norm1": jnp.zeros((cfg.d_model,))}
+    if kind in ATTN_KINDS:
+        p["attn"] = init_attention(ks[0], cfg)
+    if kind == "cross":
+        p["xattn"] = init_attention(ks[1], cfg, cross=True)
+        p["norm_x"] = jnp.zeros((cfg.d_model,))
+    if kind in SSM_KINDS:
+        p["mamba"] = init_mamba(ks[2], cfg)
+    if kind.startswith("hybrid"):
+        p["norm_a"] = jnp.zeros((cfg.d_model,))
+        p["norm_m"] = jnp.zeros((cfg.d_model,))
+    if kind == "moe":
+        p["moe"] = init_moe(ks[3], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,))
+    elif kind != "ssm":                                  # dense/cross/hybrid MLP
+        p["mlp"] = init_mlp(ks[4], cfg)
+        p["norm2"] = jnp.zeros((cfg.d_model,))
+    return p
+
+
+def block_dims(kind: str, cfg: ModelConfig):
+    d = {"norm1": ("d_model",)}
+    if kind in ATTN_KINDS:
+        d["attn"] = attention_dims(cfg)
+    if kind == "cross":
+        d["xattn"] = attention_dims(cfg, cross=True)
+        d["norm_x"] = ("d_model",)
+    if kind in SSM_KINDS:
+        d["mamba"] = mamba_dims(cfg)
+    if kind.startswith("hybrid"):
+        d["norm_a"] = ("d_model",)
+        d["norm_m"] = ("d_model",)
+    if kind == "moe":
+        d["moe"] = moe_dims(cfg)
+        d["norm2"] = ("d_model",)
+    elif kind != "ssm":
+        d["mlp"] = mlp_dims(cfg)
+        d["norm2"] = ("d_model",)
+    return d
+
+
+def init_segment(key, kind: str, count: int, cfg: ModelConfig):
+    return stacked(lambda k: init_block(k, kind, cfg), key, count)
+
+
+def segment_dims(kind: str, cfg: ModelConfig):
+    return jax.tree.map(lambda dims: ("layer",) + dims, block_dims(kind, cfg),
+                        is_leaf=lambda x: isinstance(x, tuple))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def block_forward(kind: str, p, x, rope, cfg: ModelConfig, cond=None):
+    h = rms_norm(x, p["norm1"])
+    if kind == "ssm":
+        return x + mamba_forward(p["mamba"], h, cfg)
+    if kind.startswith("hybrid"):
+        a = self_attention(p["attn"], h, rope, cfg, window=_window(kind, cfg))
+        m = mamba_forward(p["mamba"], h, cfg)
+        x = x + 0.5 * (rms_norm(a, p["norm_a"]) + rms_norm(m, p["norm_m"]))
+    else:
+        x = x + self_attention(p["attn"], h, rope, cfg)
+    if kind == "cross":
+        x = x + cross_attention(p["xattn"], rms_norm(x, p["norm_x"]), cond, cfg)
+    ff_in = rms_norm(x, p["norm2"])
+    if kind == "moe":
+        return x + moe_forward(p["moe"], ff_in, cfg)
+    return x + mlp_forward(p["mlp"], ff_in, cfg)
+
+
+def run_segment(kind: str, seg_params, x, rope, cfg: ModelConfig, cond=None):
+    def body(x, p_l):
+        return block_forward(kind, p_l, x, rope, cfg, cond=cond), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, seg_params)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# caches + decode
+# ---------------------------------------------------------------------------
+
+def init_segment_cache(kind: str, count: int, cfg: ModelConfig, batch: int,
+                       seq_len: int, dtype=jnp.bfloat16):
+    c = {}
+    if kind in ATTN_KINDS:
+        c["kv"] = init_kv_cache(cfg, count, batch, seq_len,
+                                window=_window(kind, cfg), dtype=dtype)
+    if kind in SSM_KINDS:
+        c["ssm"] = init_ssm_cache(cfg, count, batch, dtype=dtype)
+    return c
+
+
+def segment_cache_dims(kind: str):
+    c = {}
+    if kind in ATTN_KINDS:
+        c["kv"] = kv_cache_dims()
+    if kind in SSM_KINDS:
+        c["ssm"] = ssm_cache_dims()
+    return c
+
+
+def block_decode(kind: str, p, x, cache_l, pos, cfg: ModelConfig, cond=None):
+    """x (B,1,D) one-token step. cache_l: this layer's slice (no leading L)."""
+    new_cache = {}
+    h = rms_norm(x, p["norm1"])
+    if kind == "ssm":
+        o, new_cache["ssm"] = mamba_decode_step(p["mamba"], h, cache_l["ssm"], cfg)
+        return x + o, new_cache
+    if kind.startswith("hybrid"):
+        a, new_cache["kv"] = decode_self_attention(
+            p["attn"], h, cache_l["kv"], pos, None, cfg, window=_window(kind, cfg))
+        m, new_cache["ssm"] = mamba_decode_step(p["mamba"], h, cache_l["ssm"], cfg)
+        x = x + 0.5 * (rms_norm(a, p["norm_a"]) + rms_norm(m, p["norm_m"]))
+    else:
+        a, new_cache["kv"] = decode_self_attention(
+            p["attn"], h, cache_l["kv"], pos, None, cfg)
+        x = x + a
+    if kind == "cross":
+        x = x + cross_attention(p["xattn"], rms_norm(x, p["norm_x"]), cond, cfg)
+    ff_in = rms_norm(x, p["norm2"])
+    if kind == "moe":
+        return x + moe_forward(p["moe"], ff_in, cfg), new_cache
+    return x + mlp_forward(p["mlp"], ff_in, cfg), new_cache
+
+
+def run_segment_decode(kind: str, seg_params, x, cache, pos, cfg: ModelConfig,
+                       cond=None):
+    def body(x, inp):
+        p_l, c_l = inp
+        y, c_new = block_decode(kind, p_l, x, c_l, pos, cfg, cond=cond)
+        return y, c_new
+
+    x, new_cache = jax.lax.scan(body, x, (seg_params, cache))
+    return x, new_cache

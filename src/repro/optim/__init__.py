@@ -1,0 +1,7 @@
+from repro.optim.adamw import adamw
+from repro.optim.adafactor import adafactor
+from repro.optim.schedule import warmup_cosine
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor}
+
+__all__ = ["adamw", "adafactor", "warmup_cosine", "OPTIMIZERS"]

@@ -1,0 +1,76 @@
+"""Adafactor (factored second moment) — the optimizer-state footprint that
+keeps grok-1-314b inside HBM: ≥2-D weights store row+col factors instead of
+a full second-moment tensor (O(n+m) vs O(n·m))."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+
+def adafactor(decay=0.99, eps=1e-30, clip_threshold=1.0, weight_decay=0.0):
+    def init(params):
+        def factors(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),      # row
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        state = {"f": jax.tree.map(factors, params)}
+        if any(p.dtype == jnp.bfloat16 for p in jax.tree.leaves(params)):
+            state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32),
+                                           params)
+        return state
+
+    def update(grads, state, params, step, lr):
+        def upd(g, f, p, master):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if p.ndim >= 2:
+                vr = decay * f["vr"] + (1 - decay) * g2.mean(axis=-1)
+                vc = decay * f["vc"] + (1 - decay) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1, keepdims=True)[..., None], eps))
+                u = g * jax.lax.rsqrt(denom + eps)
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = decay * f["v"] + (1 - decay) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                nf = {"v": v}
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * master.astype(jnp.float32)
+            new_master = master.astype(jnp.float32) - lr * u
+            return new_master.astype(p.dtype), nf, new_master
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        flat_m = tdef.flatten_up_to(state.get("master", params))
+        outs = [upd(g, f, p, m)
+                for g, f, p, m in zip(flat_g, flat_f, flat_p, flat_m)]
+        new_params = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+        new_f = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+        new_state = {"f": new_f}
+        if "master" in state:
+            new_state["master"] = jax.tree_util.tree_unflatten(
+                tdef, [o[2] for o in outs])
+        return new_params, new_state
+
+    def state_dims(param_dims, has_master=False):
+        def fdims(d):
+            if len(d) >= 2:
+                return {"vr": tuple(d[:-1]), "vc": tuple(d[:-2]) + (d[-1],)}
+            return {"v": tuple(d)}
+        mapped = jax.tree.map(fdims, param_dims,
+                              is_leaf=lambda x: isinstance(x, tuple) and
+                              all(isinstance(s, str) for s in x))
+        d = {"f": mapped}
+        if has_master:
+            d["master"] = param_dims
+        return d
+
+    return Optimizer(init=init, update=update, state_dims=state_dims)

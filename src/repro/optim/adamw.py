@@ -1,0 +1,61 @@
+"""AdamW on parameter pytrees, optimizer state sharded like the params."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable        # (grads, state, params, step, lr) → (new_params, new_state)
+    state_dims: Callable    # param_dims tree → state dims tree
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    """AdamW with automatic mixed precision: when the model keeps bf16
+    params (so FSDP all-gathers move half the bytes — EXPERIMENTS.md §Perf
+    H2b), a float32 master copy lives in the optimizer state."""
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        state = {"m": jax.tree.map(zeros, params),
+                 "v": jax.tree.map(zeros, params)}
+        if any(p.dtype == jnp.bfloat16 for p in jax.tree.leaves(params)):
+            state["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return state
+
+    def update(grads, state, params, step, lr):
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+        masters = state.get("master", params)
+
+        def upd(g, m, v, p, master):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            u = u + weight_decay * master.astype(jnp.float32)
+            new_master = master.astype(jnp.float32) - lr * u
+            return new_master.astype(p.dtype), m, v, new_master
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params, masters)
+        pick = lambda i: jax.tree.map(lambda o: o[i], out,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        new_state = {"m": pick(1), "v": pick(2)}
+        if "master" in state:
+            new_state["master"] = pick(3)
+        return pick(0), new_state
+
+    def state_dims(param_dims, has_master=False):
+        d = {"m": param_dims, "v": param_dims}
+        if has_master:
+            d["master"] = param_dims
+        return d
+
+    return Optimizer(init=init, update=update, state_dims=state_dims)

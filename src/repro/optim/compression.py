@@ -1,0 +1,45 @@
+"""Gradient compression for cross-pod reduction: int8 quantized all-gather
+with error feedback.
+
+XLA gives no control over the wire format of ``psum``, so true 4× wire
+compression is expressed as: quantize locally (per-leaf scale) → all_gather
+the int8 payload (+ f32 scales) over the compressed axis → dequantize-sum
+locally. The quantization residual is carried as *error feedback* into the
+next step, which keeps SGD convergence (tested in test_compression.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_allreduce(x, err, axis: str):
+    """One leaf: (x + err) → int8 all-gather-sum over ``axis``.
+
+    Returns (summed f32 mean?, new_err). Sum (not mean) semantics, matching
+    psum.
+    """
+    y = x.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(y)) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(y / scale), -127, 127).astype(jnp.int8)
+    new_err = y - q.astype(jnp.float32) * scale
+
+    q_all = jax.lax.all_gather(q, axis)                  # (n_axis, ...) int8 wire
+    s_all = jax.lax.all_gather(scale, axis)              # (n_axis,) f32
+    summed = jnp.tensordot(s_all, q_all.astype(jnp.float32), axes=([0], [0]))
+    return summed, new_err
+
+
+def compressed_grad_sum(grads, err_tree, axis: str):
+    """Tree-wise int8 error-feedback all-reduce over one mesh axis."""
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_e = tdef.flatten_up_to(err_tree)
+    outs = [compress_allreduce(g, e, axis) for g, e in zip(flat_g, flat_e)]
+    summed = jax.tree_util.tree_unflatten(tdef, [o[0] for o in outs])
+    errs = jax.tree_util.tree_unflatten(tdef, [o[1] for o in outs])
+    return summed, errs
+
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,137 @@
+"""Sharding-rules engine: logical dimension names → PartitionSpec.
+
+Every parameter / cache leaf carries a tuple of logical dim names (the
+``*_dims`` functions in repro.models). The solver assigns at most one dim of
+each leaf to the ``model`` axis (tensor parallelism) and at most one to the
+``data`` axis (FSDP / batch), with a strict divisibility check and a
+priority-ordered fallback — e.g. gemma's 8 q-heads don't divide a 16-way
+model axis, so its attention shards fall through to head_dim (256/16 ✓),
+and a 32001-entry vocab (hymba) is simply replicated.
+
+Multi-pod: activations' ``batch`` shards over ('pod', 'data'); parameters
+stay FSDP-over-data and replicated across pods by default (pure DP between
+pods; cross-pod ZeRO is a §Perf option — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# priority order for the tensor-parallel ('model') axis.
+# PARAMS never shard head_dim: a hd-sharded QK/PV contraction psums full
+# logits every layer (measured +25 s/step collective on hymba — §Perf H1b);
+# odd-head archs (hymba 25H, gemma 8H on a 16-way axis) replicate their
+# small attention weights instead.
+MODEL_PRIORITY = ("d_ff", "heads", "kv_heads", "vocab", "d_inner", "d_inner2",
+                  "dt_plus")
+# ACTIVATIONS/CACHES: kv heads first, then the cache's sequence dim (a
+# seq-sharded KV cache turns decode attention into a psum of (B,H,1) —
+# bytes ∝ B·H instead of B·H·S), head_dim as last resort.
+MODEL_PRIORITY_ACT = ("kv_heads", "d_inner", "d_inner2", "seq", "head_dim")
+# priority order for the FSDP/data axis on parameters
+DATA_PRIORITY_PARAM = ("d_model", "cond_dim")
+# priority order for the data axis on activations/caches
+DATA_PRIORITY_ACT = ("batch",)
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]   # works for Mesh and AbstractMesh
+
+
+def _pick(dims: Sequence[str], sizes: Sequence[int], priority, axis_len,
+          taken: set) -> Optional[int]:
+    for want in priority:
+        for pos, d in enumerate(dims):
+            if d == want and pos not in taken and sizes[pos] % axis_len == 0:
+                return pos
+    return None
+
+
+def spec_for(dims: Sequence[str], sizes: Sequence[int], mesh: Mesh,
+             kind: str = "param") -> P:
+    """kind: 'param' (TP + FSDP) | 'act' (batch over pod+data, TP on model)."""
+    has_pod = "pod" in mesh.axis_names
+    model_len = _axis_size(mesh, "model")
+    data_len = _axis_size(mesh, "data")
+    assign: dict[int, object] = {}
+    taken: set[int] = set()
+
+    m_priority = MODEL_PRIORITY if kind == "param" else MODEL_PRIORITY_ACT
+    m = _pick(dims, sizes, m_priority, model_len, taken)
+    if m is not None:
+        assign[m] = "model"
+        taken.add(m)
+
+    if kind == "param":
+        d = _pick(dims, sizes, DATA_PRIORITY_PARAM, data_len, taken)
+        if d is not None:
+            assign[d] = "data"
+            taken.add(d)
+    else:
+        batch_axes = ("pod", "data") if has_pod else ("data",)
+        batch_len = data_len * (_axis_size(mesh, "pod") if has_pod else 1)
+        d = _pick(dims, sizes, DATA_PRIORITY_ACT, batch_len, taken)
+        if d is not None:
+            assign[d] = batch_axes if has_pod else "data"
+            taken.add(d)
+        else:
+            # batch not divisible by pod×data — try data alone (long_500k B=1
+            # stays fully replicated on the batch dim)
+            d = _pick(dims, sizes, DATA_PRIORITY_ACT, data_len, taken)
+            if d is not None:
+                assign[d] = "data"
+                taken.add(d)
+
+    return P(*[assign.get(i) for i in range(len(dims))])
+
+
+def tree_specs(tree_shapes, tree_dims, mesh: Mesh, kind: str = "param"):
+    """Map (ShapeDtypeStruct tree, dims tree) → PartitionSpec tree."""
+    def leaf(shape_leaf, dims_leaf):
+        return spec_for(dims_leaf, shape_leaf.shape, mesh, kind=kind)
+
+    return jax.tree.map(leaf, tree_shapes, tree_dims,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(isinstance(d, str) for d in x))
+
+
+def named(tree_spec, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_spec,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def model_shardings(model, mesh: Mesh, batch: int = 0, seq_len: int = 0):
+    """Convenience bundle: (param_specs, cache_specs|None) for a Model."""
+    param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_specs = _dims_tree_specs(param_shapes, model.param_dims(), mesh, "param")
+    c_specs = None
+    if batch:
+        cache_shapes = jax.eval_shape(
+            lambda: model.init_cache(batch, seq_len))
+        c_specs = _dims_tree_specs(cache_shapes, model.cache_dims(), mesh, "act")
+    return p_specs, c_specs
+
+
+def _dims_tree_specs(shapes, dims, mesh, kind):
+    """tree.map over two trees whose leaves are ShapeDtypeStruct / str-tuple."""
+    flat_s, treedef = jax.tree_util.tree_flatten(shapes)
+    flat_d = treedef.flatten_up_to(dims)
+    out = [spec_for(d, s.shape, mesh, kind=kind) for s, d in zip(flat_s, flat_d)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_input_specs(specs: dict, mesh: Mesh) -> dict:
+    """PartitionSpecs for input_specs() stand-ins: leading dim = batch."""
+    has_pod = "pod" in mesh.axis_names
+    out = {}
+    for name, sds in specs.items():
+        if sds.ndim == 0:
+            out[name] = P()
+            continue
+        dims = ("batch",) + ("seq",) * (sds.ndim - 1)
+        if name == "cond":
+            dims = ("batch", "seq", "d_model_like")
+        out[name] = spec_for(dims, sds.shape, mesh, kind="act")
+    return out

@@ -1,0 +1,206 @@
+"""The training runtime: jitted train step (grad-accum, clipping, schedule),
+fault-tolerant driver loop (checkpoint/restart on failure), and straggler
+monitoring.
+
+Fault model (what a 1000-node run needs and what we can test on CPU):
+  * hard step failure (device loss, preemption) → exception from the step →
+    restore latest checkpoint, resume; bounded retries;
+  * stragglers → per-step wall-time EMA watchdog; slow steps are recorded
+    and surfaced (on a real cluster this feeds the scheduler's hot-spare
+    swap; here the hook is pluggable);
+  * elasticity → checkpoints are logical (see checkpoint.py) so a restart
+    may bring a different data-axis size; shardings are re-derived from the
+    new mesh at restore.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.optim import OPTIMIZERS
+from repro.optim.schedule import clip_by_global_norm, warmup_cosine
+
+
+# ---------------------------------------------------------------------------
+# jitted step
+# ---------------------------------------------------------------------------
+
+def make_train_step(model, optimizer, lr_fn, *, grad_accum: int = 1,
+                    max_grad_norm: float = 1.0, donate: bool = True):
+    """Returns train_step(state, batch) → (state, metrics).
+
+    state = {params, opt, step}; batch leaves have leading dim
+    (grad_accum, micro_batch, ...) when grad_accum > 1.
+    """
+
+    def loss_fn(params, micro):
+        return model.loss(params, micro)
+
+    def compute_grads(params, batch):
+        if grad_accum == 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def body(carry, micro):
+            acc_loss, acc_grads = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, micro)
+            acc_grads = jax.tree.map(jnp.add, acc_grads, grads)
+            return (acc_loss + loss, acc_grads), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), batch)
+        scale = 1.0 / grad_accum
+        return loss * scale, jax.tree.map(lambda g: g * scale, grads)
+
+    def train_step(state, batch):
+        loss, grads = compute_grads(state["params"], batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = lr_fn(state["step"])
+        new_params, new_opt = optimizer.update(grads, state["opt"],
+                                               state["params"], state["step"], lr)
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return train_step
+
+
+def init_train_state(model, optimizer, key):
+    params = model.init(key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def train_state_dims(model, optimizer):
+    pd = model.param_dims()
+    has_master = model.cfg.param_dtype == "bfloat16"
+    return {"params": pd,
+            "opt": optimizer.state_dims(pd, has_master=has_master),
+            "step": ()}
+
+
+# ---------------------------------------------------------------------------
+# straggler monitoring
+# ---------------------------------------------------------------------------
+
+@dataclass
+class StepMonitor:
+    """EMA wall-time watchdog: flags steps slower than slack × EMA."""
+
+    slack: float = 2.0
+    ema_decay: float = 0.9
+    ema: Optional[float] = None
+    slow_steps: list = field(default_factory=list)
+    on_straggler: Optional[Callable[[int, float, float], None]] = None
+
+    def record(self, step: int, seconds: float) -> bool:
+        is_slow = False
+        if self.ema is not None and seconds > self.slack * self.ema:
+            is_slow = True
+            self.slow_steps.append((step, seconds, self.ema))
+            if self.on_straggler:
+                self.on_straggler(step, seconds, self.ema)
+        # slow outliers shouldn't poison the baseline
+        upd = min(seconds, (self.slack * self.ema) if self.ema else seconds)
+        self.ema = upd if self.ema is None else (
+            self.ema_decay * self.ema + (1 - self.ema_decay) * upd)
+        return is_slow
+
+
+# ---------------------------------------------------------------------------
+# fault-tolerant driver
+# ---------------------------------------------------------------------------
+
+class FaultInjector:
+    """Test hook: raises at scheduled steps (once each)."""
+
+    def __init__(self, fail_at=()):
+        self.fail_at = set(fail_at)
+
+    def check(self, step: int):
+        if step in self.fail_at:
+            self.fail_at.discard(step)
+            raise RuntimeError(f"injected fault at step {step}")
+
+
+def train(
+    model,
+    data_iter,
+    *,
+    steps: int,
+    optimizer_name: Optional[str] = None,
+    peak_lr: float = 3e-4,
+    warmup: int = 20,
+    grad_accum: int = 1,
+    checkpoint_dir: Optional[str] = None,
+    checkpoint_every: int = 50,
+    keep: int = 3,
+    async_checkpoint: bool = True,
+    seed: int = 0,
+    fault_injector: Optional[FaultInjector] = None,
+    max_retries: int = 3,
+    monitor: Optional[StepMonitor] = None,
+    log_every: int = 10,
+    log_fn=print,
+):
+    """Run training with checkpoint/restart fault tolerance. Returns
+    (final_state, history)."""
+    optimizer = OPTIMIZERS[optimizer_name or model.cfg.optimizer]()
+    lr_fn = warmup_cosine(peak_lr, warmup, steps)
+    step_fn = jax.jit(make_train_step(model, optimizer, lr_fn,
+                                      grad_accum=grad_accum))
+    state = init_train_state(model, optimizer, jax.random.PRNGKey(seed))
+    monitor = monitor or StepMonitor()
+    mgr = (CheckpointManager(checkpoint_dir, keep=keep,
+                             async_save=async_checkpoint)
+           if checkpoint_dir else None)
+
+    # resume if a checkpoint exists
+    if mgr and mgr.latest_step() is not None:
+        state, manifest = mgr.restore(state)
+        log_fn(f"[train] resumed from step {int(state['step'])}")
+
+    history = []
+    retries = 0
+    step = int(state["step"])
+    batches = iter(data_iter)
+    pending = None
+    while step < steps:
+        try:
+            if pending is None:
+                pending = next(batches)
+            if fault_injector:
+                fault_injector.check(step)
+            t0 = time.perf_counter()
+            state, metrics = step_fn(state, pending)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            dt = time.perf_counter() - t0
+            monitor.record(step, dt)
+            pending = None
+            retries = 0
+            history.append({"step": step, "seconds": dt, **metrics})
+            if log_every and step % log_every == 0:
+                log_fn(f"[train] step {step} loss {metrics['loss']:.4f} "
+                       f"({dt * 1e3:.0f} ms)")
+            step = int(state["step"])
+            if mgr and step % checkpoint_every == 0:
+                mgr.save(step, state)
+        except (RuntimeError, jax.errors.JaxRuntimeError) as e:  # noqa: PERF203
+            retries += 1
+            log_fn(f"[train] step {step} failed ({e}); retry {retries}")
+            if retries > max_retries:
+                raise
+            if mgr and mgr.latest_step() is not None:
+                state, _ = mgr.restore(state)
+                step = int(state["step"])
+                log_fn(f"[train] restored checkpoint at step {step}")
+    if mgr:
+        mgr.save(step, state)
+        mgr.wait()
+    return state, history

@@ -1,0 +1,4 @@
+from repro.utils.timing import Timer, timed
+from repro.utils.counters import ComputeCounter
+
+__all__ = ["Timer", "timed", "ComputeCounter"]

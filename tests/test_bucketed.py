@@ -1,0 +1,97 @@
+"""INDEX (exact + bucketed) vs PAIRWISE — same binary decisions (Prop 3.5)."""
+import numpy as np
+import pytest
+
+from repro.core.bucketed import bucketed_index_detect, index_detect_exact
+from repro.core.scoring import pairwise_detect
+from repro.core.types import CopyConfig
+from repro.data.claims import (
+    SyntheticSpec,
+    motivating_example,
+    motivating_value_probs,
+    oracle_claim_probs,
+    synthetic_claims,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+@pytest.fixture(scope="module")
+def motivating():
+    ds = motivating_example()
+    p = motivating_value_probs(ds)
+    return ds, p, pairwise_detect(ds, p, CFG)
+
+
+def test_index_exact_matches_pairwise_decisions(motivating):
+    ds, p, ref = motivating
+    res = index_detect_exact(ds, p, CFG)
+    np.testing.assert_array_equal(res.copying, ref.copying)
+
+
+def test_index_exact_scores_match_on_considered_pairs(motivating):
+    ds, p, ref = motivating
+    res = index_detect_exact(ds, p, CFG)
+    # where both sides considered the pair, C→ agrees with the oracle
+    mask = res.pr_independent < 1.0
+    np.testing.assert_allclose(res.c_fwd[mask], ref.c_fwd[mask], atol=1e-3)
+
+
+def test_index_exact_computation_accounting(motivating):
+    # Ex. 3.6: "There are only 26 pairs of sources that occur in entries
+    # outside Ē ... INDEX needs to examine 51 shared values and have
+    # 51*2 + 26*2 = 154 computations"
+    ds, p, _ = motivating
+    res = index_detect_exact(ds, p, CFG)
+    assert res.counter.pairs_considered == 26
+    assert res.counter.shared_values_examined == 51
+    assert res.counter.score_computations == 154
+
+
+def test_index_skips_s0_s5(motivating):
+    # "S0 and S5 share only values in Ē, so we do not need to consider this pair"
+    ds, p, _ = motivating
+    res = index_detect_exact(ds, p, CFG)
+    assert res.pr_independent[0, 5] == 1.0
+    assert not res.copying[0, 5]
+
+
+@pytest.mark.parametrize("n_buckets", [4, 13, 64])
+def test_bucketed_matches_pairwise_decisions(motivating, n_buckets):
+    ds, p, ref = motivating
+    res = bucketed_index_detect(ds, p, CFG, n_buckets=n_buckets)
+    np.testing.assert_array_equal(res.copying, ref.copying)
+
+
+def test_bucketed_counter_matches_exact(motivating):
+    ds, p, _ = motivating
+    exact = index_detect_exact(ds, p, CFG)
+    buck = bucketed_index_detect(ds, p, CFG, n_buckets=13)
+    assert buck.counter.pairs_considered == exact.counter.pairs_considered
+    assert buck.counter.shared_values_examined == exact.counter.shared_values_examined
+
+
+@pytest.mark.parametrize("coverage", ["book", "stock"])
+def test_synthetic_decisions_match(coverage):
+    spec = SyntheticSpec(n_sources=60, n_items=400, coverage=coverage,
+                         n_cliques=5, clique_size=3, seed=7)
+    sc = synthetic_claims(spec)
+    p = oracle_claim_probs(sc)
+    ref = pairwise_detect(sc.dataset, p, CFG)
+    exact = index_detect_exact(sc.dataset, p, CFG)
+    buck = bucketed_index_detect(sc.dataset, p, CFG, n_buckets=32)
+    np.testing.assert_array_equal(exact.copying, ref.copying)
+    np.testing.assert_array_equal(buck.copying, ref.copying)
+
+
+def test_synthetic_recovers_planted_cliques():
+    spec = SyntheticSpec(n_sources=80, n_items=600, coverage="stock",
+                         n_cliques=6, clique_size=3, seed=3)
+    sc = synthetic_claims(spec)
+    p = oracle_claim_probs(sc)
+    res = bucketed_index_detect(sc.dataset, p, CFG)
+    detected = res.copying_pairs()
+    # every planted copier–original edge should be detected
+    planted_edges = {(min(a, b), max(a, b)) for a, b in sc.copy_edges}
+    recall = len(detected & planted_edges) / len(planted_edges)
+    assert recall >= 0.9

@@ -1,0 +1,91 @@
+"""Decode correctness: token-by-token decode_step with caches must produce
+the same logits as the teacher-forced full forward, for every block kind."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import Model
+
+# representative arch per block-kind path
+ARCHS = [
+    "llama3.2-1b",            # dense GQA
+    "qwen2.5-3b",             # dense + qkv bias
+    "phi3.5-moe-42b-a6.6b",   # moe
+    "falcon-mamba-7b",        # ssm
+    "hymba-1.5b",             # hybrid (SWA + full segments)
+    "musicgen-large",         # cross-attn every layer
+    "llama-3.2-vision-11b",   # interleaved cross-attn
+]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_matches_forward(arch):
+    cfg = get_config(arch).reduced()
+    if cfg.n_experts:
+        # capacity dropping is position-dependent (forward routes the whole
+        # sequence, decode routes one token) — remove drops for exact parity
+        cfg = cfg.replace(capacity_factor=float(cfg.n_experts))
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    B, S = 2, 16
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    cond = None
+    if cfg.cond_len:
+        cond = jnp.asarray(rng.normal(0, 1, (B, cfg.cond_len, cfg.cond_dim)),
+                           jnp.float32)
+
+    ref_logits = model.forward(params, tokens, cond=cond)      # (B,S,V)
+
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, cache, tokens[:, t], jnp.int32(t),
+                             cond=cond)
+        outs.append(logits)
+    dec_logits = jnp.stack(outs, axis=1)
+
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref_logits),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_sliding_window_cache_rotates():
+    """With a window smaller than the sequence, decode must still match the
+    windowed forward (rotating cache + absolute-position masking)."""
+    cfg = get_config("hymba-1.5b").reduced()
+    cfg = cfg.replace(swa_window=8)
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(2)
+    B, S = 1, 24
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+
+    ref_logits = model.forward(params, tokens)
+
+    cache = model.init_cache(B, S, dtype=jnp.float32)
+    # SWA segments allocate only `window` slots
+    for seg_cache, (kind, _) in zip(cache, cfg.plan):
+        if kind == "hybrid_swa":
+            assert seg_cache["kv"]["k"].shape[3] == 8
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        logits, cache = step(params, cache, tokens[:, t], jnp.int32(t))
+        outs.append(logits)
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits), np.asarray(ref_logits),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_greedy_decode_runs():
+    from repro.models.model import greedy_decode
+    cfg = get_config("llama3.2-1b").reduced()
+    model = Model(cfg)
+    params = model.init(jax.random.PRNGKey(3))
+    prompt = jnp.asarray([[1, 2, 3, 4]], jnp.int32)
+    out = greedy_decode(model, params, prompt, n_new=4)
+    assert out.shape == (1, 8)
+    np.testing.assert_array_equal(np.asarray(out[:, :4]), np.asarray(prompt))

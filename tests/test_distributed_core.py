@@ -1,0 +1,61 @@
+"""Distributed pair-space scorer (shard_map) == single-device bucketed scorer.
+
+Runs in a subprocess with XLA_FLAGS host-device-count so the main test
+process keeps its single-device view (see dryrun.py note in the prompt).
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.bucketed import pad_buckets, _bucketed_accumulate
+    from repro.core.distributed import distributed_pair_scores
+    from repro.core.index import build_index, bucketize
+    from repro.core.types import CopyConfig
+    from repro.data.claims import SyntheticSpec, oracle_claim_probs, synthetic_claims
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    sc = synthetic_claims(SyntheticSpec(n_sources=64, n_items=400,
+                                        coverage="stock", n_cliques=4, seed=0))
+    p = oracle_claim_probs(sc)
+    idx = build_index(sc.dataset, p, cfg)
+    padded = pad_buckets(bucketize(idx, 16), dtype=jnp.float32)
+    acc = jnp.asarray(sc.dataset.accuracy)
+
+    # single-device reference
+    c_ref, n_ref, _ = _bucketed_accumulate(
+        padded.v_ksw, padded.p_hat, acc, cfg.s, cfg.n, padded.ebar_bucket)
+
+    results = {}
+    for axes, shape in ((("data", "model"), (4, 2)),
+                        (("pod", "data", "model"), (2, 2, 2))):
+        mesh = jax.make_mesh(shape, axes)
+        run = distributed_pair_scores(mesh, np.asarray(padded.v_ksw),
+                                      np.asarray(padded.p_hat),
+                                      np.asarray(acc), cfg)
+        c, n = run()
+        results["x".join(map(str, shape))] = [
+            float(jnp.abs(c - c_ref).max()), float(jnp.abs(n - n_ref).max())]
+    print("RESULT" + json.dumps(results))
+""")
+
+
+def test_distributed_matches_single_device():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                          text=True, timeout=600,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
+    results = json.loads(line[len("RESULT"):])
+    assert set(results) == {"4x2", "2x2x2"}
+    for shape, (dc, dn) in results.items():
+        assert dc < 1e-3, (shape, dc)
+        assert dn < 1e-3, (shape, dn)

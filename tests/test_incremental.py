@@ -1,0 +1,109 @@
+"""INCREMENTAL detection (§V) — decision fidelity + pass-1 settlement."""
+import numpy as np
+import pytest
+
+from repro.core.bound import hybrid_detect
+from repro.core.incremental import incremental_detect, make_incremental_state
+from repro.core.scoring import pairwise_detect
+from repro.core.truthfind import truth_finding
+from repro.core.types import ClaimsDataset, CopyConfig, pair_f_measure
+from repro.data.claims import (
+    SyntheticSpec,
+    motivating_example,
+    motivating_value_probs,
+    oracle_claim_probs,
+    synthetic_claims,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+def _perturb(p_claim, rng, scale):
+    noise = rng.normal(0.0, scale, size=p_claim.shape).astype(np.float32)
+    return np.clip(p_claim + np.where(p_claim > 0, noise, 0.0), 1e-3, 0.999)
+
+
+def test_small_change_round_settles_in_pass1():
+    ds = motivating_example()
+    p = motivating_value_probs(ds)
+    _, state = make_incremental_state(ds, p, CFG, n_buckets=13)
+    rng = np.random.default_rng(0)
+    p2 = _perturb(p, rng, 0.005)
+    res = incremental_detect(ds, p2, CFG, state)
+    ref = pairwise_detect(ds, p2, CFG)
+    _, _, f = pair_f_measure(res.copying_pairs(), ref.copying_pairs())
+    assert f == 1.0
+    # Table VIII: ≥98% of pairs terminate at pass 1 on small-change rounds
+    assert state.pass1_settled >= 0.9
+
+
+def test_big_change_flips_decision():
+    """Ex. 5.1's flip, reconstructed: a pair decided *copying* because it
+    shares 3 low-probability values flips to *no-copying* when those values
+    turn out to be likely-true (P .02 → .97), as with NY.Albany in Table IV."""
+    # sources 0,1 (acc .6): same values on items 0-2, different on items 3-4.
+    # sources 2.. provide co-votes so every value has ≥2 providers.
+    values = -np.ones((6, 5), dtype=np.int32)
+    values[0] = [0, 0, 0, 1, 1]
+    values[1] = [0, 0, 0, 2, 2]
+    values[2] = [0, 1, 1, 1, 2]          # co-provider of the shared values
+    values[3] = [1, 0, 0, 2, 1]
+    values[4] = [1, 1, 1, 1, 1]
+    values[5] = [0, 1, 0, 2, 2]
+    acc = np.array([0.6, 0.6, 0.5, 0.5, 0.5, 0.5], dtype=np.float32)
+    ds = ClaimsDataset(values=values, accuracy=acc)
+
+    p_old = np.full(values.shape, 0.3, dtype=np.float32)
+    p_old[values == 0] = 0.02            # the shared values look false
+    _, state = make_incremental_state(ds, p_old, CFG, n_buckets=8)
+    assert state.copying[0, 1], "precondition: pair decided copying"
+
+    p_new = p_old.copy()
+    p_new[values == 0] = 0.97            # they turn out overwhelmingly true
+    res = incremental_detect(ds, p_new, CFG, state)
+    ref = pairwise_detect(ds, p_new, CFG)
+    np.testing.assert_array_equal(res.copying, ref.copying & state.considered)
+    assert not res.copying[0, 1], "decision must flip to no-copying"
+
+
+def test_incremental_sequence_tracks_exact():
+    spec = SyntheticSpec(n_sources=60, n_items=400, coverage="stock",
+                         n_cliques=5, clique_size=3, seed=2)
+    sc = synthetic_claims(spec)
+    p = oracle_claim_probs(sc)
+    _, state = make_incremental_state(sc.dataset, p, CFG)
+    rng = np.random.default_rng(1)
+    pk = p
+    for rnd in range(3):
+        pk = _perturb(pk, rng, 0.01)
+        res = incremental_detect(sc.dataset, pk, CFG, state)
+        ref = pairwise_detect(sc.dataset, pk, CFG)
+        _, _, f = pair_f_measure(res.copying_pairs(), ref.copying_pairs())
+        assert f >= 0.95, (rnd, f)
+
+
+def test_incremental_in_fusion_loop_matches_hybrid():
+    spec = SyntheticSpec(n_sources=50, n_items=300, coverage="stock",
+                         n_cliques=4, clique_size=3, seed=9)
+    sc = synthetic_claims(spec)
+    res_inc = truth_finding(sc.dataset, CFG, detector="incremental", max_rounds=6)
+    res_hyb = truth_finding(sc.dataset, CFG, detector="hybrid", max_rounds=6)
+    _, _, f = pair_f_measure(res_inc.detection.copying_pairs(),
+                             res_hyb.detection.copying_pairs())
+    assert f >= 0.95
+    # accuracy estimates agree closely (paper: accuracy variance ≤ .04)
+    assert np.abs(res_inc.accuracy - res_hyb.accuracy).mean() < 0.05
+
+
+def test_incremental_cheaper_than_hybrid():
+    """Table VIII: incremental rounds cost a small fraction of HYBRID."""
+    spec = SyntheticSpec(n_sources=80, n_items=800, coverage="stock",
+                         n_cliques=5, clique_size=3, seed=4)
+    sc = synthetic_claims(spec)
+    p = oracle_claim_probs(sc)
+    hyb = hybrid_detect(sc.dataset, p, CFG)
+    _, state = make_incremental_state(sc.dataset, p, CFG)
+    rng = np.random.default_rng(3)
+    p2 = _perturb(p, rng, 0.005)
+    inc = incremental_detect(sc.dataset, p2, CFG, state)
+    assert inc.counter.total < 0.5 * hyb.counter.total

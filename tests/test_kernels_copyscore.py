@@ -1,0 +1,138 @@
+"""copyscore Pallas kernel vs jnp oracle — interpret mode, shape/dtype sweep
+plus hypothesis property tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketed import pad_buckets
+from repro.core.index import build_index, bucketize
+from repro.core.types import CopyConfig
+from repro.data.claims import SyntheticSpec, oracle_claim_probs, synthetic_claims
+from repro.kernels.copyscore import copyscore_pallas
+from repro.kernels.ops import copyscore, pad_for_copyscore
+from repro.kernels.ref import copyscore_ref
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+def _random_instance(rng, S, E, block_e):
+    v = (rng.random((S, E)) < 0.15).astype(np.float32)
+    p = rng.uniform(0.01, 0.99, size=E // block_e).astype(np.float32)
+    acc = rng.uniform(0.05, 0.95, size=S).astype(np.float32)
+    return v, p, acc
+
+
+@pytest.mark.parametrize("S,E,bi,bj,be", [
+    (128, 512, 128, 128, 512),
+    (256, 1024, 128, 128, 256),
+    (128, 256, 64, 64, 128),
+    (384, 512, 128, 128, 512),
+])
+def test_kernel_matches_ref_shapes(S, E, bi, bj, be):
+    rng = np.random.default_rng(S + E)
+    v, p, acc = _random_instance(rng, S, E, be)
+    c_k, n_k = copyscore_pallas(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                                s=CFG.s, n_false=CFG.n, block_i=bi, block_j=bj,
+                                block_e=be, interpret=True)
+    c_r, n_r = copyscore_ref(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                             s=CFG.s, n_false=CFG.n, block_e=be)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(np.asarray(n_k), np.asarray(n_r), rtol=0, atol=0)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_kernel_dtypes(dtype):
+    rng = np.random.default_rng(0)
+    v, p, acc = _random_instance(rng, 128, 512, 256)
+    c_k, n_k = copyscore_pallas(jnp.asarray(v, dtype), jnp.asarray(p),
+                                jnp.asarray(acc), s=CFG.s, n_false=CFG.n,
+                                block_i=128, block_j=128, block_e=256,
+                                interpret=True)
+    c_r, n_r = copyscore_ref(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                             s=CFG.s, n_false=CFG.n, block_e=256)
+    # incidence is 0/1 so bf16 inputs are exact; accumulation is f32 in both
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=2e-5, atol=2e-5)
+    np.testing.assert_array_equal(np.asarray(n_k), np.asarray(n_r))
+
+
+def test_ops_wrapper_pads_nonaligned_sources():
+    rng = np.random.default_rng(1)
+    v, p, acc = _random_instance(rng, 200, 512, 512)   # 200 % 128 != 0
+    c_k, n_k = copyscore(v, p, acc, s=CFG.s, n_false=CFG.n, block_e=512,
+                         impl="interpret")
+    c_r, n_r = copyscore_ref(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                             s=CFG.s, n_false=CFG.n, block_e=512)
+    assert c_k.shape == (200, 200)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=2e-5, atol=2e-5)
+
+
+def test_end_to_end_against_bucketed_index():
+    """Kernel path == the production bucketed scorer on a real index."""
+    sc = synthetic_claims(SyntheticSpec(n_sources=96, n_items=500,
+                                        coverage="stock", n_cliques=4, seed=1))
+    p_claim = oracle_claim_probs(sc)
+    idx = build_index(sc.dataset, p_claim, CFG)
+    b = bucketize(idx, 8)
+    sizes = np.diff(b.starts)
+    v_pad, p_blk, S = pad_for_copyscore(idx.V.astype(np.float32), b.p_hat,
+                                        block_i=32, block_e=64,
+                                        bucket_sizes=sizes)
+    c_k, n_k = copyscore(v_pad, p_blk, np.pad(sc.dataset.accuracy,
+                                              (0, v_pad.shape[0] - S),
+                                              constant_values=0.5),
+                         s=CFG.s, n_false=CFG.n, block_i=32, block_j=32,
+                         block_e=64, impl="interpret")
+    c_k = np.asarray(c_k)[:S, :S]
+
+    padded = pad_buckets(b, dtype=jnp.float32)
+    from repro.core.bucketed import _bucketed_accumulate
+    c_ref, n_ref, _ = _bucketed_accumulate(padded.v_ksw, padded.p_hat,
+                                           jnp.asarray(sc.dataset.accuracy),
+                                           CFG.s, CFG.n, padded.ebar_bucket)
+    np.testing.assert_allclose(c_k, np.asarray(c_ref), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s_param=st.floats(0.05, 0.95),
+    n_false=st.floats(2.0, 500.0),
+)
+def test_property_kernel_equals_oracle(seed, s_param, n_false):
+    rng = np.random.default_rng(seed)
+    v, p, acc = _random_instance(rng, 64, 128, 64)
+    c_k, n_k = copyscore_pallas(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                                s=s_param, n_false=n_false, block_i=32,
+                                block_j=32, block_e=64, interpret=True)
+    c_r, n_r = copyscore_ref(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                             s=s_param, n_false=n_false, block_e=64)
+    np.testing.assert_allclose(np.asarray(c_k), np.asarray(c_r), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_counts_are_cooccurrences(seed):
+    """n[i,j] must equal the exact integer co-occurrence count V Vᵀ."""
+    rng = np.random.default_rng(seed)
+    v, p, acc = _random_instance(rng, 64, 128, 64)
+    _, n_k = copyscore_pallas(jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+                              s=0.8, n_false=50.0, block_i=32, block_j=32,
+                              block_e=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(n_k), v @ v.T)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), p_lo=st.floats(0.005, 0.2))
+def test_property_lower_p_gives_higher_score(seed, p_lo):
+    """Paper §II: sharing a more-likely-false value is stronger evidence —
+    C_same is monotonically decreasing in the entry probability."""
+    rng = np.random.default_rng(seed)
+    v = np.ones((8, 64), np.float32)     # a pair sharing everything
+    acc = rng.uniform(0.2, 0.9, size=8).astype(np.float32)
+    c_lo, _ = copyscore_ref(jnp.asarray(v), jnp.asarray([p_lo]), jnp.asarray(acc),
+                            s=0.8, n_false=50.0, block_e=64)
+    c_hi, _ = copyscore_ref(jnp.asarray(v), jnp.asarray([p_lo + 0.5]),
+                            jnp.asarray(acc), s=0.8, n_false=50.0, block_e=64)
+    off = ~np.eye(8, dtype=bool)
+    assert (np.asarray(c_lo)[off] > np.asarray(c_hi)[off]).all()

@@ -1,0 +1,107 @@
+"""Property-based tests (hypothesis) on the copy-model invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bucketed import index_detect_exact
+from repro.core.index import build_index, entry_contribution_score
+from repro.core.scoring import pairwise_detect, score_same_np
+from repro.core.types import ClaimsDataset, CopyConfig
+from repro.data.claims import SyntheticSpec, oracle_claim_probs, synthetic_claims
+
+accs = st.floats(0.02, 0.98)
+probs = st.floats(0.005, 0.995)
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=probs, a1=accs, a2=accs, s=st.floats(0.05, 0.95),
+       n=st.floats(2.0, 1000.0))
+def test_same_value_contribution_is_positive(p, a1, a2, s, n):
+    """§II: 'C→(D) is positive when S1 and S2 share the same value on D' —
+    holds whenever the shared-value likelihood ratio exceeds 1, which the
+    paper proves for the n-false-values model."""
+    c = score_same_np(p, a1, a2, s, n)
+    ratio = (p * a2 + (1 - p) * (1 - a2)) / (
+        p * a1 * a2 + (1 - p) * (1 - a1) * (1 - a2) / n)
+    if ratio > 1.0:
+        assert c > 0.0
+    # and different values always contribute ln(1−s) < 0
+    assert np.log(1 - s) < 0
+
+
+@settings(max_examples=100, deadline=None)
+@given(a1=accs, a2=accs, s=st.floats(0.05, 0.95), n=st.floats(25.0, 1000.0),
+       p_lo=st.floats(0.005, 0.4), dp=st.floats(0.05, 0.5))
+def test_lower_probability_stronger_evidence(a1, a2, s, n, p_lo, dp):
+    """§II: 'it is larger when the shared value has a lower P(D.v)'.
+
+    NOTE (found by hypothesis): this monotonicity is NOT unconditional — the
+    exact condition (sign of d ratio/dp, Möbius in p) reduces to
+    a₁ > 1/(n+1): the copier must be better than uniform random guessing
+    over the n+1 possible values. Below that, sharing a TRUE value is the
+    stronger copying evidence (a worse-than-random source providing the
+    truth independently is itself unlikely). The paper's n≈50–100 regime
+    satisfies this for any a₁ ≳ .02."""
+    import hypothesis
+    hypothesis.assume(a1 > 1.0 / (n + 1.0) + 1e-3)
+    c_lo = score_same_np(p_lo, a1, a2, s, n)
+    c_hi = score_same_np(min(p_lo + dp, 0.99), a1, a2, s, n)
+    assert c_lo >= c_hi - 1e-7
+
+
+@settings(max_examples=60, deadline=None)
+@given(p=probs, s=st.floats(0.05, 0.95), n=st.floats(25.0, 500.0),
+       accs_list=st.lists(accs, min_size=2, max_size=6))
+def test_prop_3_1_upper_bounds_all_pairs(p, s, n, accs_list):
+    """Prop 3.1/3.4: M̂(D.v) bounds the contribution of EVERY provider pair.
+
+    NOTE (found by hypothesis): like the monotonicity property above, the
+    proposition's case analysis (proof omitted in the paper) requires every
+    provider to beat the uniform-guessing baseline, aᵢ > 1/(n+1); e.g. at
+    n=5, p=.75, accs {.5, .0625} the maximizing pair is (min-acc → max-acc),
+    which none of the three cases selects. The paper's n ≈ 50–100 /
+    accuracy ≳ .05 settings are safely inside the regime tested here."""
+    import hypothesis
+    hypothesis.assume(min(accs_list) > 1.0 / (n + 1.0) + 1e-3)
+    cfg = CopyConfig(alpha=0.1, s=s, n=n)
+    a = np.asarray(accs_list)
+    m_hat = entry_contribution_score(p, a, cfg)
+    for i in range(len(a)):
+        for j in range(len(a)):
+            if i != j:
+                assert score_same_np(p, a[i], a[j], s, n) <= m_hat + 1e-9
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n_src=st.integers(8, 30),
+       n_items=st.integers(10, 60))
+def test_index_decisions_equal_pairwise(seed, n_src, n_items):
+    """Prop 3.5 as a property: INDEX ≡ PAIRWISE decisions on random worlds."""
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    rng = np.random.default_rng(seed)
+    values = np.where(rng.random((n_src, n_items)) < 0.7,
+                      rng.integers(0, 4, (n_src, n_items)), -1).astype(np.int32)
+    ds = ClaimsDataset(values=values,
+                       accuracy=rng.uniform(0.1, 0.95, n_src).astype(np.float32))
+    p = np.where(values == 0, 0.9, 0.05).astype(np.float32)
+    ref = pairwise_detect(ds, p, cfg)
+    res = index_detect_exact(ds, p, cfg)
+    np.testing.assert_array_equal(res.copying, ref.copying)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_index_structure_invariants(seed):
+    """Def 3.2: every entry ≥2 providers; no source twice per item; scores
+    sorted; Ē suffix sums below θ_ind."""
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    sc = synthetic_claims(SyntheticSpec(n_sources=30, n_items=100, seed=seed))
+    p = oracle_claim_probs(sc)
+    idx = build_index(sc.dataset, p, cfg)
+    if idx.n_entries == 0:
+        return
+    assert (idx.V.sum(axis=0) >= 2).all()
+    for d in np.unique(idx.entry_item):
+        assert idx.V[:, idx.entry_item == d].sum(axis=1).max() <= 1
+    assert (np.diff(idx.entry_score) <= 1e-5).all()
+    tail = np.maximum(idx.entry_score[idx.ebar_start:], 0.0)
+    assert tail.sum() < cfg.theta_ind + 1e-5
