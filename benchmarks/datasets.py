@@ -1,11 +1,9 @@
 """Benchmark datasets: synthetics shaped like the paper's Table V."""
 from __future__ import annotations
 
-from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.types import ClaimsDataset
 from repro.data.claims import (
     SyntheticClaims,
     SyntheticSpec,
@@ -33,6 +31,18 @@ BENCH_SPECS = {
 }
 
 SMALL = ("book_cs", "stock_1day")
+
+# DetectionEngine scaling matrix (benchmarks.run scaling): source counts
+# spanning two orders of magnitude, run single- vs multi-device. Item counts
+# grow sub-linearly so the 2k case stays tractable on the CPU container.
+SCALING_SPECS = {
+    64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                      n_cliques=4, clique_size=3, clique_items=12, seed=0),
+    512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                       n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    2048: SyntheticSpec(n_sources=2048, n_items=3072, coverage="book",
+                        n_cliques=50, clique_size=3, clique_items=12, seed=0),
+}
 
 
 _cache: dict = {}

@@ -1,6 +1,10 @@
 """Benchmark harness — one function per paper table/figure.
 
-Prints ``name,value,derived`` CSV rows:
+Every detection call routes through the ``DetectionEngine`` (core/engine.py),
+the single entry point for all modes. Prints ``name,value,derived`` CSV rows
+and, at the end of a run, writes a machine-readable ``BENCH_<run>.json`` so
+CI and future PRs can diff the perf trajectory.
+
   table6  copy-detection + truth-finding quality vs PAIRWISE   (Table VI)
   table7  execution time + improvement cascade                 (Table VII)
   table8  INCREMENTAL/HYBRID per-round ratio + pass-1 %        (Table VIII)
@@ -8,37 +12,28 @@ Prints ``name,value,derived`` CSV rows:
   table10 time ratio vs FAGININPUT                             (Table X)
   fig2    single-round algorithms: computations + time         (Fig. 2)
   fig3    index orderings: BYCONTRIBUTION/BYPROVIDER/RANDOM    (Fig. 3)
+  scaling DetectionEngine matrix: S × device-count             (engine)
   lm      token-throughput smoke of the training substrate
 
-Run:  PYTHONPATH=src python -m benchmarks.run [table6 table7 ...]
+Run:  PYTHONPATH=src python -m benchmarks.run [table6 scaling ...]
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
 
 import numpy as np
 
-from benchmarks.datasets import BENCH_SPECS, SMALL, load, pairwise_mode
+from benchmarks.datasets import BENCH_SPECS, SCALING_SPECS, SMALL, load, pairwise_mode
 from repro.core import (
-    ClaimsDataset,
     CopyConfig,
-    bound_detect,
-    bucketed_index_detect,
+    DetectionEngine,
     fagin_input,
-    hybrid_detect,
-    incremental_detect,
-    index_detect_exact,
-    make_incremental_state,
     pair_f_measure,
-    pairwise_detect,
-    sample_by_cell,
-    sample_by_item,
-    scale_sample,
     truth_finding,
 )
-from repro.core.bucketed import pad_buckets
-from repro.core.index import InvertedIndex, bucketize, build_index
+from repro.core.index import InvertedIndex, build_index
 from repro.core.truthfind import fusion_accuracy
 
 CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
@@ -50,15 +45,19 @@ def emit(name: str, value, derived=""):
     print(f"{name},{value},{derived}", flush=True)
 
 
+def _engine(mode: str, **kw) -> DetectionEngine:
+    return DetectionEngine(CFG, mode=mode, **kw)
+
+
 def _pairwise_time(name, sc, p):
     """Full or 10%-extrapolated PAIRWISE wall time."""
     if pairwise_mode(name) == "full":
-        res = pairwise_detect(sc.dataset, p, CFG)
+        res = _engine("pairwise").detect(sc.dataset, p)
         return res.wall_time_s, res
     D = sc.dataset.n_items
     sub_idx = np.arange(0, D, 10)
     sub = sc.dataset.subset_items(sub_idx)
-    res = pairwise_detect(sub, p[:, sub_idx], CFG)
+    res = _engine("pairwise").detect(sub, p[:, sub_idx])
     return res.wall_time_s * (D / len(sub_idx)), None
 
 
@@ -68,21 +67,22 @@ def table6():
     """Copy-detection P/R/F + truth-finding agreement vs PAIRWISE."""
     for name in SMALL:
         sc, p = load(name)
-        ref = pairwise_detect(sc.dataset, p, CFG)
+        ref = _engine("pairwise").detect(sc.dataset, p)
         truth = ref.copying_pairs()
         ref_fusion = truth_finding(sc.dataset, CFG, detector="pairwise",
                                    max_rounds=5)
 
         methods = {
-            "sample1": lambda: _sampled(sc, p, sample_by_item(
-                sc.dataset, 0.1, seed=1)),
-            "index": lambda: bucketed_index_detect(sc.dataset, p, CFG),
-            "hybrid": lambda: hybrid_detect(sc.dataset, p, CFG),
-            "scalesample": lambda: _sampled(sc, p, scale_sample(
-                sc.dataset, 0.1, min_per_source=4, seed=1)),
+            "sample1": _engine("sampled", sample_strategy="item",
+                               sample_rate=0.1, sample_seed=1),
+            "index": _engine("bucketed"),
+            "hybrid": _engine("hybrid"),
+            "scalesample": _engine("sampled", sample_strategy="scale",
+                                   sample_rate=0.1, min_per_source=4,
+                                   sample_seed=1),
         }
-        for m, fn in methods.items():
-            res = fn()
+        for m, eng in methods.items():
+            res = eng.detect(sc.dataset, p)
             prec, rec, f = pair_f_measure(res.copying_pairs(), truth)
             emit(f"table6/{name}/{m}/precision", round(prec, 3))
             emit(f"table6/{name}/{m}/recall", round(rec, 3))
@@ -95,11 +95,6 @@ def table6():
         emit(f"table6/{name}/hybrid/fusion_accuracy", round(fusion_acc, 3))
 
 
-def _sampled(sc, p, items):
-    sub = sc.dataset.subset_items(items)
-    return bucketed_index_detect(sub, p[:, items], CFG)
-
-
 def table7():
     """Execution time cascade (PAIRWISE → … → SCALESAMPLE)."""
     for name in BENCH_SPECS:
@@ -110,34 +105,35 @@ def table7():
              "extrapolated_from_10pct" if mode == "extrapolate" else "measured")
 
         t0 = time.perf_counter()
-        items = sample_by_item(sc.dataset, 0.1, seed=1)
-        _sampled(sc, p, items)
+        _engine("sampled", sample_strategy="item", sample_rate=0.1,
+                sample_seed=1).detect(sc.dataset, p)
         t_sample1 = time.perf_counter() - t0
         emit(f"table7/{name}/sample1/seconds", round(t_sample1, 3),
              f"improvement={1 - t_sample1 / t_pair:.1%}")
 
-        res = bucketed_index_detect(sc.dataset, p, CFG)
+        res = _engine("bucketed").detect(sc.dataset, p)
         emit(f"table7/{name}/index/seconds", round(res.wall_time_s, 3),
              f"improvement={1 - res.wall_time_s / t_pair:.1%}")
         t_prev = res.wall_time_s
 
-        res = hybrid_detect(sc.dataset, p, CFG)
+        res = _engine("hybrid").detect(sc.dataset, p)
         emit(f"table7/{name}/hybrid/seconds", round(res.wall_time_s, 3),
              f"improvement={1 - res.wall_time_s / max(t_prev, 1e-9):.1%}")
         t_prev = res.wall_time_s
 
         # incremental round (state built once = rounds 1–2 cost, then deltas)
-        _, state = make_incremental_state(sc.dataset, p, CFG)
+        inc = _engine("incremental")
+        inc.detect(sc.dataset, p)
         rng = np.random.default_rng(0)
         p2 = np.clip(p + np.where(p > 0, rng.normal(0, 0.005, p.shape), 0),
                      1e-3, 0.999).astype(np.float32)
-        res = incremental_detect(sc.dataset, p2, CFG, state)
+        res = inc.detect(sc.dataset, p2)
         emit(f"table7/{name}/incremental/seconds", round(res.wall_time_s, 3),
              f"improvement={1 - res.wall_time_s / max(t_prev, 1e-9):.1%}")
 
         t0 = time.perf_counter()
-        items = scale_sample(sc.dataset, 0.1, min_per_source=4, seed=1)
-        _sampled(sc, p, items)
+        _engine("sampled", sample_strategy="scale", sample_rate=0.1,
+                min_per_source=4, sample_seed=1).detect(sc.dataset, p)
         t_ss = time.perf_counter() - t0
         emit(f"table7/{name}/scalesample/seconds", round(t_ss, 3),
              f"total_improvement={1 - t_ss / t_pair:.2%}")
@@ -147,24 +143,26 @@ def table8():
     """INCREMENTAL vs HYBRID per round + pass-1 settlement."""
     for name in SMALL:
         sc, p = load(name)
-        hyb = hybrid_detect(sc.dataset, p, CFG)
-        _, state = make_incremental_state(sc.dataset, p, CFG)
+        hyb = _engine("hybrid").detect(sc.dataset, p)
+        inc = _engine("incremental")
+        inc.detect(sc.dataset, p)
         rng = np.random.default_rng(1)
         pk = p
         for rnd in range(3, 6):
             pk = np.clip(pk + np.where(pk > 0, rng.normal(0, 0.004, pk.shape), 0),
                          1e-3, 0.999).astype(np.float32)
-            res = incremental_detect(sc.dataset, pk, CFG, state)
+            res = inc.detect(sc.dataset, pk)
             ratio = res.wall_time_s / max(hyb.wall_time_s, 1e-9)
             emit(f"table8/{name}/round{rnd}/time_ratio", round(ratio, 4),
-                 f"pass1_settled={state.pass1_settled:.1%}")
+                 f"pass1_settled={inc.incremental_state.pass1_settled:.1%}")
 
 
 def table9():
     """Sampling strategies at matched rates."""
+    from repro.core import sample_by_cell, sample_by_item, scale_sample
     for name in SMALL:
         sc, p = load(name)
-        ref = pairwise_detect(sc.dataset, p, CFG)
+        ref = _engine("pairwise").detect(sc.dataset, p)
         truth = ref.copying_pairs()
         idx_ss = scale_sample(sc.dataset, 0.1, min_per_source=4, seed=1)
         rate_items = len(idx_ss) / sc.dataset.n_items
@@ -174,8 +172,9 @@ def table9():
             "byitem": sample_by_item(sc.dataset, rate_items, seed=1),
             "bycell": sample_by_cell(sc.dataset, cells, seed=1),
         }
+        eng = _engine("sampled")
         for s_name, items in strategies.items():
-            res = _sampled(sc, p, items)
+            res = eng.detect(sc.dataset, p, items=items)
             prec, rec, f = pair_f_measure(res.copying_pairs(), truth)
             emit(f"table9/{name}/{s_name}/f_measure", round(f, 3),
                  f"prec={prec:.2f} rec={rec:.2f}")
@@ -187,17 +186,18 @@ def table10():
         sc, p = load(name)
         idx = build_index(sc.dataset, p, CFG)
         *_, t_fagin = fagin_input(sc.dataset, p, CFG, index=idx)
-        hyb = hybrid_detect(sc.dataset, p, CFG, index=idx)
+        hyb = _engine("hybrid").detect(sc.dataset, p, index=idx)
         emit(f"table10/{name}/hybrid/ratio",
              round(hyb.wall_time_s / max(t_fagin, 1e-9), 3),
              f"fagin={t_fagin:.3f}s")
-        _, state = make_incremental_state(sc.dataset, p, CFG)
+        inc = _engine("incremental")
+        inc.detect(sc.dataset, p)
         rng = np.random.default_rng(2)
         p2 = np.clip(p + np.where(p > 0, rng.normal(0, 0.005, p.shape), 0),
                      1e-3, 0.999).astype(np.float32)
-        inc = incremental_detect(sc.dataset, p2, CFG, state)
+        res = inc.detect(sc.dataset, p2)
         emit(f"table10/{name}/incremental/ratio",
-             round(inc.wall_time_s / max(t_fagin, 1e-9), 3))
+             round(res.wall_time_s / max(t_fagin, 1e-9), 3))
 
 
 def fig2():
@@ -205,16 +205,15 @@ def fig2():
     for name in SMALL:
         sc, p = load(name)
         idx = build_index(sc.dataset, p, CFG)
-        algos = {
-            "index": lambda: bucketed_index_detect(sc.dataset, p, CFG, index=idx),
-            "bound": lambda: bound_detect(sc.dataset, p, CFG, index=idx),
-            "bound+": lambda: bound_detect(sc.dataset, p, CFG, index=idx,
-                                           use_timers=True),
-            "hybrid": lambda: hybrid_detect(sc.dataset, p, CFG, index=idx),
+        engines = {
+            "index": _engine("bucketed"),
+            "bound": _engine("bound"),
+            "bound+": _engine("bound+"),
+            "hybrid": _engine("hybrid"),
         }
-        for a, fn in algos.items():
-            fn()                                  # warm-up (JIT compile)
-            res = fn()
+        for a, eng in engines.items():
+            eng.detect(sc.dataset, p, index=idx)      # warm-up (JIT compile)
+            res = eng.detect(sc.dataset, p, index=idx)
             emit(f"fig2/{name}/{a}/computations", res.counter.total,
                  f"seconds={res.wall_time_s:.3f}")
 
@@ -229,6 +228,7 @@ def fig3():
             "byprovider": np.argsort(base.V.sum(axis=0), kind="stable"),
             "random": np.random.default_rng(0).permutation(base.n_entries),
         }
+        eng = _engine("bound+")
         for o_name, order in orders.items():
             idx = InvertedIndex(
                 V=np.ascontiguousarray(base.V[:, order]),
@@ -241,10 +241,46 @@ def fig3():
                 l_counts=base.l_counts,
                 items_per_source=base.items_per_source,
             )
-            bound_detect(sc.dataset, p, CFG, index=idx, use_timers=True)
-            res = bound_detect(sc.dataset, p, CFG, index=idx, use_timers=True)
+            eng.detect(sc.dataset, p, index=idx)
+            res = eng.detect(sc.dataset, p, index=idx)
             emit(f"fig3/{name}/{o_name}/computations", res.counter.total,
                  f"seconds={res.wall_time_s:.3f}")
+
+
+def scaling():
+    """DetectionEngine scenario matrix: sources × device count.
+
+    Single- vs multi-device (run under
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise the
+    sharded path on CPU); decisions are cross-checked against the exact
+    INDEX where that reference is tractable.
+    """
+    import jax
+    from repro.data.claims import oracle_claim_probs, synthetic_claims
+
+    n_all = len(jax.devices())
+    for n_sources, spec in SCALING_SPECS.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        idx = build_index(sc.dataset, p, CFG)
+        exact = (_engine("exact").detect(sc.dataset, p, index=idx)
+                 if n_sources <= 512 else None)
+        for n_dev in sorted({1, n_all}):
+            eng = _engine("bucketed", devices=n_dev,
+                          tile=min(256, max(64, n_sources // 4)))
+            eng.detect(sc.dataset, p, index=idx)      # warm-up (JIT compile)
+            res = eng.detect(sc.dataset, p, index=idx)
+            st = eng.last_stats
+            emit(f"scaling/S{n_sources}/dev{n_dev}/seconds",
+                 round(res.wall_time_s, 3),
+                 f"tile={st['tile']} tiles={st['tiles_kept']}/{st['tiles_total']}")
+            emit(f"scaling/S{n_sources}/dev{n_dev}/pairs_considered",
+                 res.counter.pairs_considered,
+                 f"pruned_tiles={st['tiles_pruned']}")
+            if exact is not None:
+                match = bool(np.array_equal(res.copying, exact.copying))
+                emit(f"scaling/S{n_sources}/dev{n_dev}/decisions_match_exact",
+                     int(match))
 
 
 def lm():
@@ -279,18 +315,42 @@ def lm():
 
 # default order: cheapest first so partial runs still cover most tables
 TABLES = {
-    "lm": lm, "fig2": fig2, "fig3": fig3, "table8": table8, "table9": table9,
-    "table10": table10, "table6": table6, "table7": table7,
+    "lm": lm, "fig2": fig2, "fig3": fig3, "scaling": scaling, "table8": table8,
+    "table9": table9, "table10": table10, "table6": table6, "table7": table7,
 }
+
+
+def write_bench_json(which, durations) -> str:
+    """BENCH_<run>.json: rows + environment, for perf-trajectory diffing."""
+    import jax
+
+    run = "all" if list(which) == list(TABLES) else "-".join(which)
+    out = {
+        "run": run,
+        "generated_unix": int(time.time()),
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "tables": {k: {"duration_s": round(v, 2)} for k, v in durations.items()},
+        "rows": {name: {"value": value, "derived": derived}
+                 for name, value, derived in ROWS},
+    }
+    path = f"BENCH_{run}.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    return path
 
 
 def main() -> None:
     which = sys.argv[1:] or list(TABLES)
     print("name,value,derived")
+    durations = {}
     for w in which:
         t0 = time.perf_counter()
         TABLES[w]()
-        print(f"# {w} done in {time.perf_counter() - t0:.1f}s", flush=True)
+        durations[w] = time.perf_counter() - t0
+        print(f"# {w} done in {durations[w]:.1f}s", flush=True)
+    path = write_bench_json(which, durations)
+    print(f"# wrote {path}", flush=True)
 
 
 if __name__ == "__main__":

@@ -7,15 +7,7 @@ iterates truth finding until the NY.Albany flip (Table II) happens.
 """
 import numpy as np
 
-from repro.core import (
-    CopyConfig,
-    bound_detect,
-    bucketed_index_detect,
-    build_index,
-    index_detect_exact,
-    pairwise_detect,
-    truth_finding,
-)
+from repro.core import CopyConfig, DetectionEngine, build_index, truth_finding
 from repro.data.claims import motivating_example, motivating_value_probs
 
 cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
@@ -31,12 +23,12 @@ for e in range(idx.n_entries):
     print(f"  {name:<14} P={idx.entry_p[e]:.2f}  score={idx.entry_score[e]:.2f}"
           f"  providers=[{provs}]{tail}")
 
-print("\n=== Detection (all algorithms agree) ===")
-for name, fn in [("PAIRWISE", pairwise_detect),
-                 ("INDEX(exact)", index_detect_exact),
-                 ("INDEX(bucketed)", bucketed_index_detect),
-                 ("BOUND", bound_detect)]:
-    res = fn(ds, p, cfg)
+print("\n=== Detection (all engine modes agree) ===")
+for name, mode in [("PAIRWISE", "pairwise"),
+                   ("INDEX(exact)", "exact"),
+                   ("INDEX(bucketed)", "bucketed"),
+                   ("BOUND", "bound")]:
+    res = DetectionEngine(cfg, mode=mode).detect(ds, p)
     pairs = sorted(res.copying_pairs())
     c = res.counter
     print(f"  {name:<16} copying={[(f'S{i}', f'S{j}') for i, j in pairs]} "

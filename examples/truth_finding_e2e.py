@@ -7,9 +7,8 @@ by orders of magnitude (the paper's Tables VI + VII in one script).
 import argparse
 import time
 
-import numpy as np
 
-from repro.core import CopyConfig, pair_f_measure, truth_finding
+from repro.core import CopyConfig, truth_finding
 from repro.core.truthfind import fusion_accuracy
 from repro.data.claims import SyntheticSpec, synthetic_claims
 

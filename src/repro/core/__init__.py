@@ -2,6 +2,8 @@
 
 Public API:
   CopyConfig, ClaimsDataset, DetectionResult    — data model
+  DetectionEngine                               — THE detection entry point
+                                                  (tiled + sharded; all modes)
   pairwise_detect                               — exhaustive baseline (§II-B)
   build_index, bucketize                        — inverted index (§III)
   index_detect_exact, bucketed_index_detect     — INDEX (§III)
@@ -10,9 +12,13 @@ Public API:
   truth_finding                                 — iterative fusion driver
   sample_by_item, sample_by_cell, scale_sample  — sampling (§VI)
   fagin_input                                   — NRA baseline (Table X)
+
+The per-algorithm functions remain as references and compatibility wrappers;
+new code should construct a ``DetectionEngine`` with the mode it needs.
 """
 from repro.core.bound import bound_detect, hybrid_detect
 from repro.core.bucketed import bucketed_index_detect, index_detect_exact
+from repro.core.engine import DetectionEngine, EngineOptions
 from repro.core.fagin import fagin_input
 from repro.core.incremental import incremental_detect, make_incremental_state
 from repro.core.index import build_index, bucketize
@@ -23,6 +29,7 @@ from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult, pair_f_
 
 __all__ = [
     "CopyConfig", "ClaimsDataset", "DetectionResult", "pair_f_measure",
+    "DetectionEngine", "EngineOptions",
     "pairwise_detect", "build_index", "bucketize",
     "index_detect_exact", "bucketed_index_detect",
     "bound_detect", "hybrid_detect",

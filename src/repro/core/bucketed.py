@@ -5,14 +5,18 @@
     computations on the motivating example). NumPy; the oracle for the
     production path and the source of the paper-metric counters.
 
-``bucketed_index_detect`` — the TPU-native production path (DESIGN.md §2.1):
+``bucketed_index_detect`` — compatibility wrapper over the production path,
+    which now lives in the pair-tiled, sharded ``DetectionEngine``
+    (core/engine.py, DESIGN.md §3). The bucket machinery stays here:
     entries sorted by contribution score are partitioned into K contiguous
-    buckets with representative probability p̂_k; the same-value accumulation
-    becomes K co-occurrence matmuls ``V_k V_kᵀ`` combined with per-pair score
-    tables ``f(A_i, A_j, p̂_k)``; the different-value penalty is recovered
-    from ``(l − n)·ln(1−s)`` exactly as the paper's step 3. Pairs within
-    ``rescore_margin`` of the decision boundary are exactly rescored, so
-    binary decisions match the exact algorithm.
+    buckets with representative probability p̂_k (``pad_buckets``), the
+    same-value accumulation becomes co-occurrence matmuls ``V_k V_kᵀ``
+    combined with per-pair score tables ``f(A_i, A_j, p̂_k)``, and the
+    different-value penalty is recovered from ``(l − n)·ln(1−s)`` exactly as
+    the paper's step 3. Pairs within ``rescore_margin`` of the decision
+    boundary are exactly rescored, so binary decisions match the exact
+    algorithm. ``_bucketed_accumulate`` remains as the single-device oracle
+    the distributed/tiled paths are tested against.
 """
 from __future__ import annotations
 
@@ -24,10 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import BucketedIndex, InvertedIndex, bucketize, build_index
+from repro.core.index import BucketedIndex, InvertedIndex, build_index
 from repro.core.scoring import (
     decide_copying,
-    pair_scores_subset,
     posterior_independence,
     score_same,
     score_same_np,
@@ -178,55 +181,13 @@ def bucketed_index_detect(
     n_buckets: int = 64,
     rescore_margin: float = 1.0,
     index: InvertedIndex | None = None,
-    padded: PaddedBuckets | None = None,
+    tile: int = 256,
+    devices: int | None = None,
 ) -> DetectionResult:
-    """Production INDEX: K co-occurrence matmuls + near-threshold exact rescore."""
-    t0 = time.perf_counter()
-    idx = index if index is not None else build_index(ds, p_claim, cfg)
-    if padded is None:
-        padded = pad_buckets(bucketize(idx, n_buckets))
-    S = ds.n_sources
-    acc = jnp.asarray(ds.accuracy, jnp.float32)
+    """Production INDEX — routes through the pair-tiled DetectionEngine."""
+    from repro.core.engine import DetectionEngine
 
-    c_same, n_cnt, n_out = _bucketed_accumulate(
-        padded.v_ksw, padded.p_hat, acc, cfg.s, cfg.n, padded.ebar_bucket
-    )
-    c_same = np.array(c_same)
-    n_cnt = np.array(n_cnt)
-    considered = np.array(n_out) > 0.5
-    np.fill_diagonal(considered, False)
-
-    c_fwd = np.where(considered,
-                     c_same + (idx.l_counts - n_cnt) * cfg.ln_1ms,
-                     0.0).astype(np.float32)
-    np.fill_diagonal(c_fwd, 0.0)
-
-    # exact rescoring for pairs near the decision boundary
-    z = np.log(cfg.alpha / cfg.beta) + np.logaddexp(c_fwd, c_fwd.T)
-    near = considered & (np.abs(z) < rescore_margin)
-    near &= np.triu(np.ones_like(near), 1).astype(bool)
-    pi, pj = np.nonzero(near)
-    n_rescored = len(pi)
-    if n_rescored:
-        c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
-        c_fwd[pj, pi] = pair_scores_subset(ds, p_claim, cfg, pj, pi)
-
-    pr_ind = np.array(posterior_independence(jnp.asarray(c_fwd), jnp.asarray(c_fwd.T), cfg))
-    copying = np.array(decide_copying(jnp.asarray(c_fwd), jnp.asarray(c_fwd.T), cfg))
-    pr_ind = np.where(considered, pr_ind, 1.0)
-    copying = copying & considered
-    np.fill_diagonal(pr_ind, 1.0)
-    np.fill_diagonal(copying, False)
-
-    # semantic (paper-metric) accounting, computed analytically from the index
-    iu = np.triu_indices(S, 1)
-    values_examined = int(n_cnt[iu][considered[iu]].sum())
-    n_pairs = int(considered[iu].sum())
-    counter = ComputeCounter(
-        pairs_considered=n_pairs,
-        shared_values_examined=values_examined,
-        score_computations=2 * values_examined + 2 * n_pairs + 2 * n_rescored,
-        index_entries=idx.n_entries,
-    )
-    return DetectionResult(c_fwd=c_fwd, pr_independent=pr_ind, copying=copying,
-                           counter=counter, wall_time_s=time.perf_counter() - t0)
+    eng = DetectionEngine(cfg, mode="bucketed", n_buckets=n_buckets,
+                          rescore_margin=rescore_margin, tile=tile,
+                          devices=devices)
+    return eng.detect(ds, p_claim, index=index)

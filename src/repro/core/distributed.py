@@ -1,16 +1,20 @@
-"""Distributed copy detection — pair-space 2D sharding over a TPU mesh.
+"""Distributed copy detection — sharded decompositions of the pair space.
 
 The paper's §VIII names two parallelization opportunities ("per entry" and
-"per pair of sources"). We realize both with shard_map on the production
-mesh (launch/mesh.py):
+"per pair of sources"). This module realizes both, at two granularities:
 
-  * the S×S pair space is tiled 2D: C-block rows over the ``data`` axis and
-    columns over the ``model`` axis (a SUMMA-like decomposition — each
-    device owns one (rows × cols) tile of C);
-  * the entry dimension E (the reduction) is sharded over the ``pod`` axis;
-    each pod accumulates partial co-occurrence counts over its entry shard
-    and a single psum("pod") combines them — one all-reduce of S²/device
-    floats per bucket group, overlapping pods' compute.
+  * ``sharded_tile_scores`` — the DetectionEngine's production dataflow
+    (DESIGN.md §3): the S×S pair space is cut into T×T tiles, tiles that
+    survive the Ē pruning are round-robined over a 1-D device mesh with
+    shard_map, and each device scans its tiles, slicing the bucket-aligned
+    incidence and feeding the copyscore kernel one rectangular tile at a
+    time. The incidence tensor is replicated (it is the small operand);
+    only the tile list and the (n_tiles, T, T) outputs are sharded.
+
+  * ``distributed_pair_scores`` — 2-D pair-space sharding over the
+    production TPU mesh (launch/mesh.py): C-block rows over ``data``,
+    columns over ``model`` (a SUMMA-like decomposition), with the entry
+    dimension optionally sharded over ``pod`` and combined by one psum.
 
 The incidence matrix V is passed twice with different shardings (row-block
 copy and column-block copy); XLA lays each out once per device — there is no
@@ -25,9 +29,110 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax ≥ 0.6 exposes shard_map at the top level
+    from jax import shard_map
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+
+def _mark_varying(x, axes):
+    """pcast-to-varying where the API exists (jax ≥ 0.7, where shard_map
+    checks that scan carries stay replicated otherwise); no-op before."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, axes, to="varying")
+    return x
+
 from repro.core.scoring import score_same
 from repro.core.types import CopyConfig
+from repro.kernels.ops import copyscore_tile
 
+
+# ---------------------------------------------------------------------------
+# 1-D tile sharding (DetectionEngine production path)
+# ---------------------------------------------------------------------------
+
+def _local_tile_scores(v_skw, acc, p_hat, delta, coords, *, tile, s, n,
+                       ebar_bucket, impl, block_i, block_j):
+    """Per-device: scan this shard's pair tiles.
+
+    v_skw:  (S_pad, K, w) bucket-aligned incidence, replicated
+    coords: (n_local, 2) int32 — (row-block, col-block) indices of the tiles
+            assigned to this device
+    →       four (n_local, T, T) stacks: C_same→, shared count, count outside
+            Ē (the considered test), and the approximation-error bound.
+    """
+    S_pad, K, w = v_skw.shape
+    e_out = ebar_bucket * w              # non-Ē prefix (bucket-aligned, exact)
+
+    def one_tile(_, rc):
+        r0 = rc[0] * tile
+        c0 = rc[1] * tile
+        vr = jax.lax.dynamic_slice(v_skw, (r0, 0, 0), (tile, K, w))
+        vc = jax.lax.dynamic_slice(v_skw, (c0, 0, 0), (tile, K, w))
+        a_r = jax.lax.dynamic_slice(acc, (r0,), (tile,))
+        a_c = jax.lax.dynamic_slice(acc, (c0,), (tile,))
+        flat_r = vr.reshape(tile, K * w)
+        flat_c = vc.reshape(tile, K * w)
+        c_same, n_cnt, err = copyscore_tile(
+            flat_r, flat_c, p_hat, a_r, a_c, s=s, n_false=n,
+            block_i=block_i, block_j=block_j, block_e=w, impl=impl,
+            delta_blk=delta)
+        n_out = jnp.dot(flat_r[:, :e_out].astype(jnp.float32),
+                        flat_c[:, :e_out].astype(jnp.float32).T,
+                        preferred_element_type=jnp.float32)
+        return 0, (c_same, n_cnt, n_out, err)
+
+    _, outs = jax.lax.scan(one_tile, 0, coords)
+    return outs
+
+
+def sharded_tile_scores(
+    mesh: Mesh,
+    v_skw,                   # (S_pad, K, w) incidence, S_pad % tile == 0
+    acc,                     # (S_pad,) accuracies (0.5 in padding rows)
+    p_hat,                   # (K,) representative p̂ per bucket
+    coords: np.ndarray,      # (n_tiles, 2) int32 surviving (row, col) tiles
+    cfg: CopyConfig,
+    *,
+    tile: int,
+    ebar_bucket: int,
+    delta: np.ndarray,       # (K,) per-bucket score-error bound δ
+    impl: str = "auto",
+    block_i: int = 128,
+    block_j: int = 128,
+):
+    """Shard surviving pair tiles over a 1-D mesh; returns stacked tiles.
+
+    ``coords`` is padded to a multiple of the mesh size with (0, 0) dummies —
+    the caller scatters only the first ``n_tiles`` outputs, so the dummy
+    compute is inert. Output: four (n_tiles_padded, T, T) arrays
+    (C_same→, count, count outside Ē, error bound).
+    """
+    axis = mesh.axis_names[0]
+    n_dev = mesh.shape[axis]
+    n_tiles = len(coords)
+    pad = (-n_tiles) % n_dev
+    if pad:
+        coords = np.concatenate([coords, np.zeros((pad, 2), coords.dtype)])
+
+    local = partial(_local_tile_scores, tile=tile, s=cfg.s, n=cfg.n,
+                    ebar_bucket=ebar_bucket, impl=impl,
+                    block_i=block_i, block_j=block_j)
+    out_spec = (P(axis), P(axis), P(axis), P(axis))
+    fn = jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(axis)),
+        out_specs=out_spec,
+    ))
+    return fn(jnp.asarray(v_skw), jnp.asarray(acc, jnp.float32),
+              jnp.asarray(p_hat, jnp.float32),
+              jnp.asarray(delta, jnp.float32),
+              jnp.asarray(coords, jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# 2-D pair-space sharding (production TPU mesh)
+# ---------------------------------------------------------------------------
 
 def _local_pair_scores(vr, vc, acc_r, acc_c, p_hat, s, n, has_pod):
     """Per-device: C_same→ tile + shared-count tile over the local entry shard.
@@ -52,11 +157,11 @@ def _local_pair_scores(vr, vc, acc_r, acc_c, p_hat, s, n, has_pod):
         f = score_same(p_k[0], f_a1, f_a2, s, n)
         return (c_same + f * count, n_cnt + count), None
 
-    S_r, K, w = vr.shape
+    S_r = vr.shape[0]
     S_c = vc.shape[0]
     # the accumulators are device-varying over the pair-tile axes — mark them
     varying = ("data", "model") + (("pod",) if has_pod else ())
-    zero = jax.lax.pcast(jnp.zeros((S_r, S_c), jnp.float32), varying, to="varying")
+    zero = _mark_varying(jnp.zeros((S_r, S_c), jnp.float32), varying)
     (c_same, n_cnt), _ = jax.lax.scan(
         body, (zero, zero), (jnp.moveaxis(vr, 1, 0), jnp.moveaxis(vc, 1, 0), p_hat))
     if has_pod:
@@ -79,7 +184,7 @@ def distributed_pair_scores_lowerable(mesh: Mesh, n_sources: int, K: int,
     spec_c = P("model", None, e_axis)
     out_spec = P("data", "model")
     shard_fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             partial(_local_pair_scores, s=cfg.s, n=cfg.n, has_pod=has_pod),
             mesh=mesh,
             in_specs=(spec_r, spec_c, P("data"), P("model"),
@@ -136,7 +241,7 @@ def distributed_pair_scores(
     out_spec = P("data", "model")
 
     shard_fn = jax.jit(
-        jax.shard_map(
+        shard_map(
             partial(_local_pair_scores, s=cfg.s, n=cfg.n, has_pod=has_pod),
             mesh=mesh,
             in_specs=(spec_r, spec_c, P("data"), P("model"),

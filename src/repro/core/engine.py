@@ -1,0 +1,318 @@
+"""DetectionEngine — the single entry point for scalable copy detection.
+
+Every detection workload (one-shot exact, production bucketed, bound /
+hybrid early termination, iterative incremental rounds, sampled detection)
+goes through ``DetectionEngine.detect``. The production ``bucketed`` mode is
+the sharded, pair-tiled dataflow of DESIGN.md §3:
+
+  1. build the inverted index (§III) and re-bucket it into p-quantiles on
+     each side of the Ē boundary (``bucketize_engine`` — the accumulation is
+     order-insensitive, so p-homogeneous buckets shrink the p̂ error);
+  2. cut the S×S pair space into T×T tiles and prune, up front, every tile
+     whose sources co-occur only inside the low-contribution suffix Ē — by
+     Proposition 3.4 those pairs can never flip to copying, so the whole
+     tile is skipped without touching a device (the tile-level test uses the
+     OR-reduced incidence, an upper bound on any pair's co-occurrence);
+  3. shard the surviving tiles over a 1-D device mesh (shard_map); each
+     device scans its tiles, slicing the bucket-aligned incidence and
+     feeding the copyscore kernel one rectangular tile at a time;
+  4. scatter the tile blocks back into (S, S), apply the INDEX step-3
+     different-value adjustment, exactly rescore every pair whose decision
+     margin is within its accumulated error bound, and decide — binary
+     decisions match ``index_detect_exact`` (asserted by the engine tests
+     and cross-checked by the scaling benchmark on every run).
+
+Modes
+  pairwise      exhaustive oracle (§II-B)
+  exact         entry-sequential INDEX with paper-metric accounting (§III)
+  bucketed      tiled + sharded production INDEX (this module)
+  bound/bound+  early-terminating BOUND, optionally with timers (§IV)
+  hybrid        BOUND+ for pairs sharing > l_threshold items (§IV-C)
+  incremental   stateful rounds: first call bootstraps HYBRID + bookkeeping,
+                later calls apply per-round deltas (§V)
+  sampled       item sampling (§VI) then the tiled path on the subset
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.bound import bound_detect
+from repro.core.bucketed import index_detect_exact, pad_buckets
+from repro.core.distributed import sharded_tile_scores
+from repro.core.incremental import incremental_detect, make_incremental_state
+from repro.core.index import InvertedIndex, bucketize_engine, build_index
+from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
+from repro.core.scoring import (
+    decide_copying_np,
+    pair_scores_subset,
+    pairwise_detect,
+    posterior_independence_np,
+    score_same_np,
+)
+from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult
+from repro.utils.counters import ComputeCounter
+
+MODES = ("pairwise", "exact", "bucketed", "bound", "bound+", "hybrid",
+         "incremental", "sampled")
+
+
+@dataclass
+class EngineOptions:
+    """Tuning knobs; mode-specific fields are ignored by other modes."""
+
+    n_buckets: int = 64
+    tile: int = 256               # pair-tile edge (sources per tile side)
+    devices: Optional[int] = None  # 1-D mesh size; None → all local devices
+    rescore_margin: float = 1.0
+    kernel_impl: str = "auto"     # auto | pallas | interpret | ref
+    l_threshold: Optional[int] = None   # hybrid crossover (default per mode)
+    sample_rate: float = 0.1
+    sample_strategy: str = "scale"      # scale | item | cell
+    min_per_source: int = 4
+    sample_seed: int = 1
+    rho: float = 1.0                    # incremental: big-change threshold
+    rho_acc: float = 0.2
+
+
+class DetectionEngine:
+    """One engine instance per detection workload.
+
+    Stateless for one-shot modes; ``incremental`` carries the paper's §V
+    bookkeeping across ``detect`` calls (``reset()`` drops it).
+    """
+
+    def __init__(self, cfg: CopyConfig, mode: str = "bucketed", **options):
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
+        self.cfg = cfg
+        self.mode = mode
+        self.options = EngineOptions(**options)
+        self.last_stats: dict = {}
+        self._mesh: Optional[Mesh] = None
+        self._inc_state = None
+
+    # -- lifecycle ----------------------------------------------------------
+
+    def reset(self) -> None:
+        """Drop incremental bookkeeping (next detect() bootstraps afresh)."""
+        self._inc_state = None
+
+    @property
+    def incremental_state(self):
+        """§V bookkeeping (None until an incremental detect() has run)."""
+        return self._inc_state
+
+    def mesh(self) -> Mesh:
+        """The 1-D tile mesh (built lazily so XLA_FLAGS can be set first)."""
+        if self._mesh is None:
+            n = self.options.devices or len(jax.devices())
+            self._mesh = Mesh(np.array(jax.devices()[:n]), ("shards",))
+        return self._mesh
+
+    # -- dispatch -----------------------------------------------------------
+
+    def detect(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        index: InvertedIndex | None = None,
+        items: np.ndarray | None = None,      # sampled mode: explicit subset
+    ) -> DetectionResult:
+        opt = self.options
+        if self.mode == "pairwise":
+            return pairwise_detect(ds, p_claim, self.cfg)
+        if self.mode == "exact":
+            return index_detect_exact(ds, p_claim, self.cfg, index=index)
+        if self.mode in ("bound", "bound+", "hybrid"):
+            l_thr = opt.l_threshold
+            if l_thr is None:
+                l_thr = 16 if self.mode == "hybrid" else 0
+            return bound_detect(
+                ds, p_claim, self.cfg, n_buckets=opt.n_buckets,
+                use_timers=self.mode in ("bound+", "hybrid"),
+                l_threshold=l_thr, rescore_margin=opt.rescore_margin,
+                index=index)
+        if self.mode == "incremental":
+            if self._inc_state is None:
+                result, self._inc_state = make_incremental_state(
+                    ds, p_claim, self.cfg, n_buckets=opt.n_buckets)
+                return result
+            return incremental_detect(ds, p_claim, self.cfg, self._inc_state,
+                                      rho=opt.rho, rho_acc=opt.rho_acc)
+        if self.mode == "sampled":
+            if items is None:
+                items = self._sample_items(ds)
+            sub = ds.subset_items(items)
+            return self._detect_tiled(sub, p_claim[:, items])
+        return self._detect_tiled(ds, p_claim, index=index)
+
+    def _sample_items(self, ds: ClaimsDataset) -> np.ndarray:
+        opt = self.options
+        if opt.sample_strategy == "item":
+            return sample_by_item(ds, opt.sample_rate, seed=opt.sample_seed)
+        if opt.sample_strategy == "cell":
+            return sample_by_cell(ds, opt.sample_rate, seed=opt.sample_seed)
+        return scale_sample(ds, opt.sample_rate,
+                            min_per_source=opt.min_per_source,
+                            seed=opt.sample_seed)
+
+    # -- the tiled + sharded production path --------------------------------
+
+    def _tile_edge(self, s_sources: int) -> int:
+        """Tile edge: requested size, shrunk for small problems, and always a
+        multiple of 8 (f32 sublane) so kernel blocks stay aligned."""
+        t = min(self.options.tile, max(64, s_sources))
+        return max(8, (t // 8) * 8)
+
+    # Inflation + slack on top of the sampled maximum: the accuracy sweep is
+    # a grid, not an analytic bound — |f(p) − f(p̂)| can peak at interior
+    # accuracies (≲2e-3/entry beyond the corner max at default s, n), and
+    # f's monotonicity in p is conditional (see tests/test_properties.py).
+    DELTA_INFLATION = 1.5
+    DELTA_SLACK = 2e-3
+
+    def _bucket_deltas(self, b, p_lo, p_hi, acc: np.ndarray) -> np.ndarray:
+        """Per-bucket bound δ_k ≳ |f(A_i, A_j, p) − f(A_i, A_j, p̂_k)| for any
+        entry p in bucket k: the bucket's p extremes are swept against a grid
+        of dataset accuracy quantiles, then inflated (DELTA_INFLATION /
+        DELTA_SLACK) to cover interior maxima the grid misses. Together with
+        ``rescore_margin`` this makes decision flips vs the exact INDEX
+        vanishingly unlikely — and the scaling benchmark cross-checks
+        decision equality on every run."""
+        cfg = self.cfg
+        a_grid = np.unique(np.quantile(acc.astype(np.float64),
+                                       [0.0, 0.25, 0.5, 0.75, 1.0]))
+        p_hat = b.p_hat.astype(np.float64)
+        delta = np.zeros(b.n_buckets, np.float64)
+        for a1 in a_grid:
+            for a2 in a_grid:
+                f_hat = score_same_np(p_hat, a1, a2, cfg.s, cfg.n)
+                for pe in (p_lo.astype(np.float64), p_hi.astype(np.float64)):
+                    f_edge = score_same_np(pe, a1, a2, cfg.s, cfg.n)
+                    delta = np.maximum(delta, np.abs(f_edge - f_hat))
+        delta = self.DELTA_INFLATION * delta + self.DELTA_SLACK
+        return delta.astype(np.float32)
+
+    def _detect_tiled(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        index: InvertedIndex | None = None,
+    ) -> DetectionResult:
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        opt = self.options
+        base_idx = index if index is not None else build_index(ds, p_claim, cfg)
+        bucketed, p_lo, p_hi = bucketize_engine(base_idx, opt.n_buckets)
+        idx = bucketed.index                 # reordered copy (p-sorted regions)
+        padded = pad_buckets(bucketed)
+        delta = self._bucket_deltas(bucketed, p_lo, p_hi, ds.accuracy)
+        S = ds.n_sources
+        T = self._tile_edge(S)
+        n_blocks = -(-S // T)
+        S_pad = n_blocks * T
+
+        # ---- tile pruning: OR-reduced incidence over non-Ē entries --------
+        # If no source in tile r shares a non-Ē entry with any source in
+        # tile c, no pair in (r, c) is ever considered (Ē suffix bound) —
+        # skip the whole tile. Group-OR ≥ any member, so pruning is safe.
+        e0 = idx.ebar_start
+        prov_out = idx.V[:, :e0].astype(bool)
+        prov_pad = np.zeros((S_pad, max(e0, 1)), bool)
+        if e0:
+            prov_pad[:S, :e0] = prov_out
+        G = prov_pad.reshape(n_blocks, T, -1).any(axis=1)
+        keep = (G.astype(np.int32) @ G.astype(np.int32).T) > 0
+        coords = np.argwhere(keep).astype(np.int32)      # ordered (row, col)
+        tiles_total = n_blocks * n_blocks
+        n_tiles = len(coords)
+
+        # ---- shard surviving tiles over the 1-D mesh ----------------------
+        K = padded.n_buckets
+        w = padded.width
+        v_skw = np.moveaxis(np.asarray(padded.v_ksw, np.float32), 0, 1)
+        if S_pad > S:
+            v_skw = np.pad(v_skw, ((0, S_pad - S), (0, 0), (0, 0)))
+        v_skw = v_skw.astype(np.asarray(padded.v_ksw).dtype)
+        acc_pad = np.pad(ds.accuracy.astype(np.float32), (0, S_pad - S),
+                         constant_values=0.5)
+
+        block = 128 if T % 128 == 0 else T
+        c_same = np.zeros((S_pad, S_pad), np.float32)
+        n_cnt = np.zeros((S_pad, S_pad), np.float32)
+        n_out = np.zeros((S_pad, S_pad), np.float32)
+        err = np.zeros((S_pad, S_pad), np.float32)
+        if n_tiles:
+            c_t, n_t, o_t, e_t = sharded_tile_scores(
+                self.mesh(), v_skw, acc_pad, np.asarray(padded.p_hat),
+                coords, cfg, tile=T, ebar_bucket=padded.ebar_bucket,
+                delta=delta, impl=opt.kernel_impl, block_i=block, block_j=block)
+            # scatter tile blocks back into the (S_pad, S_pad) grid: the
+            # blocked transpose is a writable view, so fancy assignment on
+            # tile coordinates lands each (T, T) block in place
+            for grid, tiles in ((c_same, c_t), (n_cnt, n_t), (n_out, o_t),
+                                (err, e_t)):
+                g4 = grid.reshape(n_blocks, T, n_blocks, T).transpose(0, 2, 1, 3)
+                g4[coords[:, 0], coords[:, 1]] = \
+                    np.asarray(tiles[:n_tiles], np.float32)
+        c_same = c_same[:S, :S]
+        n_cnt = n_cnt[:S, :S]
+        err = err[:S, :S]
+        considered = n_out[:S, :S] > 0.5
+        np.fill_diagonal(considered, False)
+
+        # ---- INDEX step 3 + error-bounded exact rescore -------------------
+        c_fwd = np.where(considered,
+                         c_same + (idx.l_counts - n_cnt) * cfg.ln_1ms,
+                         0.0).astype(np.float32)
+        np.fill_diagonal(c_fwd, 0.0)
+
+        # a pair's decision can only differ from the exact INDEX if the
+        # accumulated p̂ error reaches its decision margin — rescore exactly
+        # every such pair (err bounds |Δ C→|; |Δz| ≤ max of both directions)
+        z = np.log(cfg.alpha / cfg.beta) + np.logaddexp(c_fwd, c_fwd.T)
+        near = considered & (np.abs(z) <
+                             opt.rescore_margin + np.maximum(err, err.T))
+        near &= np.triu(np.ones_like(near), 1).astype(bool)
+        pi, pj = np.nonzero(near)
+        n_rescored = len(pi)
+        if n_rescored:
+            c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
+            c_fwd[pj, pi] = pair_scores_subset(ds, p_claim, cfg, pj, pi)
+
+        pr_ind = posterior_independence_np(c_fwd, c_fwd.T, cfg)
+        copying = decide_copying_np(c_fwd, c_fwd.T, cfg) & considered
+        pr_ind = np.where(considered, pr_ind, 1.0).astype(np.float32)
+        np.fill_diagonal(pr_ind, 1.0)
+        np.fill_diagonal(copying, False)
+
+        # semantic (paper-metric) accounting, identical to the exact INDEX
+        iu = np.triu_indices(S, 1)
+        values_examined = int(n_cnt[iu][considered[iu]].sum())
+        n_pairs = int(considered[iu].sum())
+        counter = ComputeCounter(
+            pairs_considered=n_pairs,
+            shared_values_examined=values_examined,
+            score_computations=2 * values_examined + 2 * n_pairs + 2 * n_rescored,
+            index_entries=idx.n_entries,
+        )
+        self.last_stats = {
+            "tile": T,
+            "tiles_total": tiles_total,
+            "tiles_kept": n_tiles,
+            "tiles_pruned": tiles_total - n_tiles,
+            "n_devices": self.mesh().shape["shards"],
+            "rescored_pairs": n_rescored,
+        }
+        return DetectionResult(c_fwd=c_fwd, pr_independent=pr_ind,
+                               copying=copying, counter=counter,
+                               wall_time_s=time.perf_counter() - t0)
+
+
+__all__ = ["DetectionEngine", "EngineOptions", "MODES"]

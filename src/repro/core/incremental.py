@@ -16,6 +16,10 @@ are small and rarely flip decisions. We keep the paper's structure:
   entry-wise compensation walk. Pairs containing a source with a big
   accuracy change (|ΔA| > ρ_acc = .2) are rescored unconditionally, as in
   the paper.
+
+The public entry point is ``DetectionEngine(cfg, mode="incremental")``
+(core/engine.py), which owns the round lifecycle: the first ``detect`` call
+bootstraps the state here, later calls apply per-round deltas.
 """
 from __future__ import annotations
 
@@ -24,9 +28,16 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.bound import BoundState, bound_detect
+from repro.core.bound import bound_detect
 from repro.core.bucketed import pad_buckets
-from repro.core.index import BucketedIndex, InvertedIndex, bucketize, build_index
+from repro.core.index import (
+    BucketedIndex,
+    InvertedIndex,
+    bucketize,
+    build_index,
+    entry_extreme_accuracies,
+    prop31_reference_accs,
+)
 from repro.core.scoring import (
     decide_copying_np,
     pair_scores_subset,
@@ -75,22 +86,11 @@ def make_incremental_state(
                     ).astype(np.int32)
     first_provider = np.argmax(idx.V, axis=0).astype(np.int32)
 
-    # Prop-3.1 reference accuracies per entry
-    a1_ref = np.empty(E, np.float64)
-    a2_ref = np.empty(E, np.float64)
+    # Prop-3.1 reference accuracies per entry (vectorized case split)
     acc = ds.accuracy.astype(np.float64)
-    for e in range(E):
-        provs = idx.providers(e)
-        a = np.sort(acc[provs])
-        amin, asec, amax = a[0], a[min(1, len(a) - 1)], a[-1]
-        p = float(idx.entry_p[e])
-        thr = 1.0 / (1.0 + cfg.n * p / max(1.0 - p, 1e-12))
-        if amin <= thr:
-            a1_ref[e], a2_ref[e] = amax, amin
-        elif p < 0.5:
-            a1_ref[e], a2_ref[e] = asec, amin
-        else:
-            a1_ref[e], a2_ref[e] = amin, asec
+    amin, asec, amax = entry_extreme_accuracies(idx.V, acc)
+    a1_ref, a2_ref = prop31_reference_accs(
+        idx.entry_p.astype(np.float64), amin, asec, amax, cfg)
 
     state = IncrementalState(
         index=idx, bucketed=bucketed, entry_bucket=entry_bucket,

@@ -75,16 +75,47 @@ def entry_contribution_score(
     return float(score_same_np(p, a1, a2, cfg.s, cfg.n))
 
 
-def _entry_scores_vectorized(
+def prop31_reference_accs(
     p: np.ndarray, a_min: np.ndarray, a_second: np.ndarray, a_max: np.ndarray,
     cfg: CopyConfig,
-) -> np.ndarray:
-    """Vectorized Prop 3.1 over all entries."""
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized Prop-3.1 case split → the (A_1, A_2) pair per entry."""
     threshold = 1.0 / (1.0 + cfg.n * p / np.maximum(1.0 - p, 1e-12))
     case1 = a_min <= threshold
     case2 = (~case1) & (p < 0.5)
     a1 = np.where(case1, a_max, np.where(case2, a_second, a_min))
     a2 = np.where(case1, a_min, np.where(case2, a_min, a_second))
+    return a1, a2
+
+
+def entry_extreme_accuracies(
+    V: np.ndarray, acc: np.ndarray, chunk: int = 4096
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Per-entry (min, second-min, max) provider accuracies from the
+    incidence matrix, chunked over entries to bound peak memory."""
+    E = V.shape[1]
+    a_min = np.empty(E, np.float64)
+    a_second = np.empty(E, np.float64)
+    a_max = np.empty(E, np.float64)
+    for s0 in range(0, E, chunk):
+        blk = V[:, s0: s0 + chunk].astype(bool).T          # (e, S)
+        a = np.where(blk, acc[None, :], np.inf)
+        m = a.min(axis=1)
+        a[np.arange(len(a)), np.argmin(a, axis=1)] = np.inf
+        a_min[s0: s0 + chunk] = m
+        a_second[s0: s0 + chunk] = a.min(axis=1)
+        a_max[s0: s0 + chunk] = np.where(blk, acc[None, :], -np.inf).max(axis=1)
+    # single-provider entries (not produced by build_index) degrade gracefully
+    a_second = np.where(np.isfinite(a_second), a_second, a_min)
+    return a_min, a_second, a_max
+
+
+def _entry_scores_vectorized(
+    p: np.ndarray, a_min: np.ndarray, a_second: np.ndarray, a_max: np.ndarray,
+    cfg: CopyConfig,
+) -> np.ndarray:
+    """Vectorized Prop 3.1 over all entries."""
+    a1, a2 = prop31_reference_accs(p, a_min, a_second, a_max, cfg)
     return score_same_np(p.astype(np.float64), a1, a2, cfg.s, cfg.n).astype(np.float32)
 
 
@@ -105,7 +136,6 @@ def build_index(
 
     # --- group claims by (item, value): vectorized via a composite key -----
     max_v = int(values.max()) + 1 if values.size and values.max() >= 0 else 1
-    key = values.astype(np.int64) * 0  # placeholder
     key = np.where(prov, np.arange(D, dtype=np.int64)[None, :] * max_v + values, -1)
     flat_key = key.ravel()
     claim_src = np.repeat(np.arange(S, dtype=np.int32), D)
@@ -127,17 +157,23 @@ def build_index(
     entry_value = (e_keys % max_v).astype(np.int32)
     entry_p = flat_p[e_starts]
 
-    # incidence matrix + extreme provider accuracies per entry
+    # incidence matrix: scatter every claim of a shared group into its entry
+    # column (flat arrays are key-sorted, so groups are contiguous)
+    group_id = np.repeat(np.arange(len(uniq_key)), counts)
+    entry_of_group = np.cumsum(shared) - 1
+    in_shared = shared[group_id]
     V = np.zeros((S, E), dtype=np.uint8)
-    a_min = np.empty(E, dtype=np.float64)
-    a_second = np.empty(E, dtype=np.float64)
-    a_max = np.empty(E, dtype=np.float64)
+    V[claim_src[in_shared], entry_of_group[group_id[in_shared]]] = 1
+
+    # extreme provider accuracies per entry: sort claims by (key, accuracy)
+    # once, then the group's first / second / last positions are the extremes
     acc = ds.accuracy.astype(np.float64)
-    for e in range(E):
-        srcs = claim_src[e_starts[e]: e_starts[e] + e_counts[e]]
-        V[srcs, e] = 1
-        a = np.sort(acc[srcs])
-        a_min[e], a_second[e], a_max[e] = a[0], a[1], a[-1]
+    acc_claims = acc[claim_src]
+    by_acc = np.lexsort((acc_claims, flat_key))
+    acc_sorted = acc_claims[by_acc]
+    a_min = acc_sorted[e_starts]
+    a_second = acc_sorted[e_starts + 1]                  # counts ≥ 2 (Def 3.2)
+    a_max = acc_sorted[e_starts + e_counts - 1]
 
     entry_score = _entry_scores_vectorized(entry_p, a_min, a_second, a_max, cfg)
 
@@ -227,3 +263,68 @@ def bucketize(index: InvertedIndex, n_buckets: int = 64) -> BucketedIndex:
     ebar_bucket = int(np.searchsorted(bounds, index.ebar_start))
     return BucketedIndex(index=index, starts=bounds, p_hat=p_hat,
                          m_suffix=m_suffix, ebar_bucket=ebar_bucket)
+
+
+def bucketize_engine(
+    index: InvertedIndex, n_buckets: int = 64
+) -> tuple[BucketedIndex, np.ndarray, np.ndarray]:
+    """p-homogeneous bucketization for the order-insensitive tiled INDEX.
+
+    The engine's accumulation Σ_e f(A_i, A_j, p_e)·(V Vᵀ) does not depend on
+    entry order — only the Ē boundary must stay exact (it defines the
+    considered mask). So entries are re-sorted by truth probability within
+    the non-Ē prefix and within Ē, and buckets become p-quantiles of each
+    region: the within-bucket p spread — and with it the representative-p̂
+    error the engine must cover with exact rescoring — collapses compared to
+    the score-contiguous buckets BOUND needs.
+
+    Returns (bucketed, p_lo, p_hi): a BucketedIndex over a reordered copy of
+    the index plus per-bucket p extremes for the engine's rescore bound.
+    """
+    E = index.n_entries
+    e0 = index.ebar_start
+    if E == 0:
+        b = bucketize(index, n_buckets)
+        return b, np.zeros(0, np.float32), np.zeros(0, np.float32)
+
+    order = np.concatenate([
+        np.argsort(index.entry_p[:e0], kind="stable"),
+        e0 + np.argsort(index.entry_p[e0:], kind="stable"),
+    ])
+    idx2 = InvertedIndex(
+        V=np.ascontiguousarray(index.V[:, order]),
+        entry_item=index.entry_item[order],
+        entry_value=index.entry_value[order],
+        entry_p=index.entry_p[order],
+        entry_score=index.entry_score[order],
+        ebar_start=e0,
+        l_counts=index.l_counts,
+        items_per_source=index.items_per_source,
+    )
+    # buckets proportional to region sizes, ≥1 per non-empty region, with a
+    # boundary pinned at e0 so the Ē-skip rule stays exact
+    k_out = min(max(int(round(n_buckets * e0 / E)), 1), e0) if e0 else 0
+    k_in = min(max(n_buckets - k_out, 1), E - e0) if E > e0 else 0
+    bounds = np.unique(np.concatenate([
+        np.linspace(0, e0, k_out + 1).round(),
+        np.linspace(e0, E, k_in + 1).round(),
+    ])).astype(np.int32)
+    K = len(bounds) - 1
+
+    logp = np.log(np.clip(idx2.entry_p, 1e-9, 1.0))
+    p_hat = np.empty(K, np.float32)
+    p_lo = np.empty(K, np.float32)
+    p_hi = np.empty(K, np.float32)
+    for k in range(K):
+        seg = slice(bounds[k], bounds[k + 1])
+        p_hat[k] = float(np.exp(logp[seg].mean()))
+        p_lo[k] = float(idx2.entry_p[seg].min())
+        p_hi[k] = float(idx2.entry_p[seg].max())
+    m_suffix = np.zeros(K + 1, np.float32)
+    for k in range(K - 1, -1, -1):
+        blk_max = float(idx2.entry_score[bounds[k]: bounds[k + 1]].max())
+        m_suffix[k] = max(blk_max, m_suffix[k + 1])
+    ebar_bucket = int(np.searchsorted(bounds, e0))
+    return (BucketedIndex(index=idx2, starts=bounds, p_hat=p_hat,
+                          m_suffix=m_suffix, ebar_bucket=ebar_bucket),
+            p_lo, p_hi)

@@ -29,12 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bound import bound_detect, hybrid_detect
-from repro.core.bucketed import bucketed_index_detect, index_detect_exact
-from repro.core.index import build_index
-from repro.core.scoring import pairwise_detect
+from repro.core.engine import DetectionEngine
 from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult
-from repro.utils.counters import ComputeCounter
 
 
 # ---------------------------------------------------------------------------
@@ -106,13 +102,26 @@ def _vote_round(V_all, entry_item, acc, pr_copy, n, c, n_items, n_vals_per_item)
 # The iterative driver
 # ---------------------------------------------------------------------------
 
+# every detector is a DetectionEngine mode — the engine is the single entry
+# point for detection compute (DESIGN.md §3); keyword args go to EngineOptions
+_ENGINE_MODE = {
+    "pairwise": "pairwise",
+    "index_exact": "exact",
+    "index": "bucketed",
+    "bound": "bound",
+    "bound+": "bound+",
+    "hybrid": "hybrid",
+}
+
+
+def _engine_detector(mode: str) -> Callable:
+    def run(ds, p_claim, cfg, **kw):
+        return DetectionEngine(cfg, mode=mode, **kw).detect(ds, p_claim)
+    return run
+
+
 DETECTORS: dict[str, Callable] = {
-    "pairwise": pairwise_detect,
-    "index_exact": index_detect_exact,
-    "index": bucketed_index_detect,
-    "bound": lambda ds, p, cfg, **kw: bound_detect(ds, p, cfg, **kw),
-    "bound+": lambda ds, p, cfg, **kw: bound_detect(ds, p, cfg, use_timers=True, **kw),
-    "hybrid": hybrid_detect,
+    name: _engine_detector(mode) for name, mode in _ENGINE_MODE.items()
 }
 
 
@@ -143,11 +152,13 @@ def truth_finding(
 ) -> FusionResult:
     """Iterative copy detection + truth finding + accuracy update (§II-A)."""
     t0 = time.perf_counter()
+    kw = dict(detector_kwargs or {})
+    inc_engine = None
     if detector == "incremental":
         detect = None
+        inc_engine = DetectionEngine(cfg, mode="incremental", **kw)
     else:
         detect = DETECTORS[detector] if isinstance(detector, str) else detector
-    kw = dict(detector_kwargs or {})
     groups = build_value_groups(ds)
     S, D = ds.values.shape
 
@@ -165,22 +176,20 @@ def truth_finding(
     detection = None
     detect_time = 0.0
 
-    incremental_state = None
     for rnd in range(1, max_rounds + 1):
         work = ClaimsDataset(values=ds.values, accuracy=acc_np)
         p_claim = np.where(ds.values >= 0,
                            np.array(p_entry)[np.maximum(groups.claim_entry, 0)],
                            0.0).astype(np.float32)
         td0 = time.perf_counter()
-        if detector == "incremental":
-            # §VI: HYBRID in the first two rounds, incremental afterwards
-            from repro.core.incremental import incremental_detect, make_incremental_state
+        if inc_engine is not None:
+            # §VI: HYBRID in the first round; round 2 bootstraps the engine's
+            # incremental bookkeeping, later rounds apply per-round deltas
             if rnd < 2:
-                detection = hybrid_detect(work, p_claim, cfg, **kw)
-            elif rnd == 2 or incremental_state is None:
-                detection, incremental_state = make_incremental_state(work, p_claim, cfg)
+                detection = DetectionEngine(cfg, mode="hybrid", **kw).detect(
+                    work, p_claim)
             else:
-                detection = incremental_detect(work, p_claim, cfg, incremental_state, **kw)
+                detection = inc_engine.detect(work, p_claim)
         else:
             detection = detect(work, p_claim, cfg, **kw)
         detect_time += time.perf_counter() - td0

@@ -12,7 +12,6 @@ reference, and mirrors the two regimes the paper contrasts:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Optional
 
 import numpy as np
 

@@ -57,14 +57,47 @@ def _copyscore_kernel(p_ref, vi_ref, vj_ref, ai_ref, aj_ref,
     n_ref[...] += count
 
 
+def _copyscore_err_kernel(p_ref, d_ref, vi_ref, vj_ref, ai_ref, aj_ref,
+                          c_ref, n_ref, err_ref, *, s: float, n_false: float):
+    """copyscore + an error-bound channel: err += δ_block · count, where
+    δ_block bounds |f(·,·,p) − f(·,·,p̂)| over the block's true p range. The
+    engine exactly rescores every pair whose decision margin is inside its
+    accumulated bound, keeping binary decisions equal to the exact INDEX."""
+    e = pl.program_id(2)
+
+    @pl.when(e == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        err_ref[...] = jnp.zeros_like(err_ref)
+
+    vi = vi_ref[...]
+    vj = vj_ref[...]
+    count = jax.lax.dot_general(
+        vi, vj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    p = p_ref[0, 0]
+    a1 = ai_ref[...].astype(jnp.float32)
+    a2 = aj_ref[...].astype(jnp.float32).reshape(1, -1)
+    pr_src = p * a2 + (1.0 - p) * (1.0 - a2)
+    pr_ind = p * a1 * a2 + (1.0 - p) * (1.0 - a1) * (1.0 - a2) / n_false
+    f = jnp.log(1.0 - s + s * pr_src / pr_ind)
+
+    c_ref[...] += f * count
+    n_ref[...] += count
+    err_ref[...] += d_ref[0, 0] * count
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("s", "n_false", "block_i", "block_j", "block_e", "interpret"),
 )
 def copyscore_pallas(
-    v: jnp.ndarray,          # (S, E) incidence, bf16/f32; E % block_e == 0
+    v: jnp.ndarray,          # (S_i, E) incidence, bf16/f32; E % block_e == 0
     p_blk: jnp.ndarray,      # (E // block_e,) representative p̂ per entry block
-    acc: jnp.ndarray,        # (S,) source accuracies, f32
+    acc: jnp.ndarray,        # (S_i,) source accuracies, f32
     *,
     s: float,
     n_false: float,
@@ -72,36 +105,61 @@ def copyscore_pallas(
     block_j: int = 128,
     block_e: int = 512,
     interpret: bool = False,
+    v_cols: jnp.ndarray | None = None,    # (S_j, E) column-block incidence
+    acc_cols: jnp.ndarray | None = None,  # (S_j,)
+    delta_blk: jnp.ndarray | None = None,  # (E // block_e,) error bound δ
 ):
-    """Returns (C_same→ (S,S) f32, n (S,S) f32). S must divide by the blocks."""
-    S, E = v.shape
-    assert S % block_i == 0 and S % block_j == 0, (S, block_i, block_j)
+    """Returns (C_same→ (S_i,S_j) f32, n (S_i,S_j) f32)[, err (S_i,S_j) f32].
+
+    Square by default (v vs itself); passing ``v_cols``/``acc_cols`` computes
+    a rectangular pair tile — rows copy from columns — which is how the
+    DetectionEngine feeds one pruned tile of the S×S pair space at a time.
+    With ``delta_blk``, a third output accumulates the per-pair score-error
+    bound Σ δ_blk·count (the engine's exact-rescore trigger). Row/column
+    counts must divide by their block sizes.
+    """
+    vj = v if v_cols is None else v_cols
+    accj = acc if acc_cols is None else acc_cols
+    S_i, E = v.shape
+    S_j = vj.shape[0]
+    assert S_i % block_i == 0 and S_j % block_j == 0, (S_i, S_j, block_i, block_j)
     assert E % block_e == 0, (E, block_e)
     n_e = E // block_e
 
     p2 = p_blk.reshape(n_e, 1).astype(jnp.float32)
-    a2 = acc.reshape(S, 1).astype(jnp.float32)
+    a_i = acc.reshape(S_i, 1).astype(jnp.float32)
+    a_j = accj.reshape(S_j, 1).astype(jnp.float32)
 
-    grid = (S // block_i, S // block_j, n_e)
-    kernel = functools.partial(_copyscore_kernel, s=float(s), n_false=float(n_false))
-    c, n = pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, 1), lambda i, j, e: (e, 0)),            # p̂
-            pl.BlockSpec((block_i, block_e), lambda i, j, e: (i, e)),  # V rows
-            pl.BlockSpec((block_j, block_e), lambda i, j, e: (j, e)),  # V cols
-            pl.BlockSpec((block_i, 1), lambda i, j, e: (i, 0)),      # A_i
-            pl.BlockSpec((block_j, 1), lambda i, j, e: (j, 0)),      # A_j
-        ],
-        out_specs=[
-            pl.BlockSpec((block_i, block_j), lambda i, j, e: (i, j)),
-            pl.BlockSpec((block_i, block_j), lambda i, j, e: (i, j)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((S, S), jnp.float32),
-            jax.ShapeDtypeStruct((S, S), jnp.float32),
-        ],
+    grid = (S_i // block_i, S_j // block_j, n_e)
+    scalar_spec = pl.BlockSpec((1, 1), lambda i, j, e: (e, 0))
+    in_specs = [
+        scalar_spec,                                             # p̂
+        pl.BlockSpec((block_i, block_e), lambda i, j, e: (i, e)),  # V rows
+        pl.BlockSpec((block_j, block_e), lambda i, j, e: (j, e)),  # V cols
+        pl.BlockSpec((block_i, 1), lambda i, j, e: (i, 0)),      # A_i
+        pl.BlockSpec((block_j, 1), lambda i, j, e: (j, 0)),      # A_j
+    ]
+    out_spec = pl.BlockSpec((block_i, block_j), lambda i, j, e: (i, j))
+    out_sds = jax.ShapeDtypeStruct((S_i, S_j), jnp.float32)
+
+    if delta_blk is None:
+        kernel = functools.partial(_copyscore_kernel, s=float(s),
+                                   n_false=float(n_false))
+        c, n = pl.pallas_call(
+            kernel, grid=grid, in_specs=in_specs,
+            out_specs=[out_spec, out_spec], out_shape=[out_sds, out_sds],
+            interpret=interpret,
+        )(p2, v, vj, a_i, a_j)
+        return c, n
+
+    d2 = delta_blk.reshape(n_e, 1).astype(jnp.float32)
+    kernel = functools.partial(_copyscore_err_kernel, s=float(s),
+                               n_false=float(n_false))
+    c, n, err = pl.pallas_call(
+        kernel, grid=grid,
+        in_specs=[in_specs[0], scalar_spec] + in_specs[1:],
+        out_specs=[out_spec, out_spec, out_spec],
+        out_shape=[out_sds, out_sds, out_sds],
         interpret=interpret,
-    )(p2, v, v, a2, a2)
-    return c, n
+    )(p2, d2, v, vj, a_i, a_j)
+    return c, n, err

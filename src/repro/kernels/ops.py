@@ -87,6 +87,45 @@ def copyscore(
     return c[:S, :S], n[:S, :S]
 
 
+def copyscore_tile(
+    v_rows,                 # (T_r, E) row-block incidence, entries bucket-aligned
+    v_cols,                 # (T_c, E) column-block incidence
+    p_blk,                  # (E // block_e,) representative p̂ per entry block
+    acc_rows,               # (T_r,) copier accuracies
+    acc_cols,               # (T_c,) source accuracies
+    *,
+    s: float,
+    n_false: float,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_e: int = 512,
+    impl: str = "auto",     # auto | pallas | interpret | ref
+    delta_blk=None,         # (E // block_e,) per-block score-error bound
+):
+    """One rectangular tile of the pair space: C_same→ and counts, rows→cols.
+
+    The DetectionEngine calls this once per surviving pair tile (inside a
+    shard_mapped scan), with each bucket zero-padded to ``block_e`` so every
+    kernel entry-block carries a single p̂. With ``delta_blk`` a third output
+    accumulates the per-pair approximation-error bound Σ δ·count. Tile edges
+    must divide by the pair blocks (the engine pads the source axis once,
+    up front).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    delta = None if delta_blk is None else jnp.asarray(delta_blk)
+    if impl == "ref":
+        return kref.copyscore_ref(
+            jnp.asarray(v_rows), jnp.asarray(p_blk), jnp.asarray(acc_rows),
+            v_cols=jnp.asarray(v_cols), acc_cols=jnp.asarray(acc_cols),
+            s=s, n_false=n_false, block_e=block_e, delta_blk=delta)
+    return copyscore_pallas(
+        jnp.asarray(v_rows), jnp.asarray(p_blk), jnp.asarray(acc_rows),
+        v_cols=jnp.asarray(v_cols), acc_cols=jnp.asarray(acc_cols),
+        s=s, n_false=n_false, block_i=block_i, block_j=block_j,
+        block_e=block_e, interpret=(impl == "interpret"), delta_blk=delta)
+
+
 # ---------------------------------------------------------------------------
 # flash attention (differentiable)
 # ---------------------------------------------------------------------------

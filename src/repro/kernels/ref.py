@@ -16,26 +16,42 @@ import jax.numpy as jnp
 # ---------------------------------------------------------------------------
 
 @partial(jax.jit, static_argnames=("s", "n_false", "block_e"))
-def copyscore_ref(v, p_blk, acc, *, s, n_false, block_e=512):
-    """Block-constant-p copy-score accumulation; oracle for copyscore_pallas."""
-    S, E = v.shape
+def copyscore_ref(v, p_blk, acc, *, s, n_false, block_e=512,
+                  v_cols=None, acc_cols=None, delta_blk=None):
+    """Block-constant-p copy-score accumulation; oracle for copyscore_pallas.
+
+    Like the kernel, ``v_cols``/``acc_cols`` select a rectangular pair tile
+    (rows copy from columns); omitted, it computes the full square S×S.
+    ``delta_blk`` adds the error-bound channel err = Σ δ_blk·count.
+    """
+    vj = v if v_cols is None else v_cols
+    accj = acc if acc_cols is None else acc_cols
+    S_i, E = v.shape
+    S_j = vj.shape[0]
     n_e = E // block_e
-    vf = v.astype(jnp.float32).reshape(S, n_e, block_e)
+    vi_f = v.astype(jnp.float32).reshape(S_i, n_e, block_e)
+    vj_f = vj.astype(jnp.float32).reshape(S_j, n_e, block_e)
     a1 = acc.astype(jnp.float32)[:, None]
-    a2 = acc.astype(jnp.float32)[None, :]
+    a2 = accj.astype(jnp.float32)[None, :]
+    with_err = delta_blk is not None
+    d_blk = (delta_blk if with_err else jnp.zeros(n_e)).astype(jnp.float32)
 
     def body(carry, xs):
-        c, n = carry
-        v_k, p_k = xs                                  # (S, be), scalar
-        count = jnp.dot(v_k, v_k.T, preferred_element_type=jnp.float32)
+        c, n, err = carry
+        vi_k, vj_k, p_k, d_k = xs                      # (S_i, be), (S_j, be), scalars
+        count = jnp.dot(vi_k, vj_k.T, preferred_element_type=jnp.float32)
         pr_src = p_k * a2 + (1.0 - p_k) * (1.0 - a2)
         pr_ind = p_k * a1 * a2 + (1.0 - p_k) * (1.0 - a1) * (1.0 - a2) / n_false
         f = jnp.log(1.0 - s + s * pr_src / pr_ind)
-        return (c + f * count, n + count), None
+        return (c + f * count, n + count, err + d_k * count), None
 
-    init = (jnp.zeros((S, S), jnp.float32), jnp.zeros((S, S), jnp.float32))
-    (c, n), _ = jax.lax.scan(body, init, (jnp.moveaxis(vf, 1, 0),
-                                          p_blk.astype(jnp.float32)))
+    zero = jnp.zeros((S_i, S_j), jnp.float32)
+    (c, n, err), _ = jax.lax.scan(body, (zero, zero, zero),
+                                  (jnp.moveaxis(vi_f, 1, 0),
+                                   jnp.moveaxis(vj_f, 1, 0),
+                                   p_blk.astype(jnp.float32), d_blk))
+    if with_err:
+        return c, n, err
     return c, n
 
 

@@ -23,7 +23,6 @@ supply the roofline *rate* terms.
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -231,7 +230,6 @@ def probe_head_decode(cfg, mesh, batch):
 def probe_optimizer(cfg, mesh):
     model = Model(cfg)
     optimizer = OPTIMIZERS[cfg.optimizer]()
-    from repro.runtime.train_loop import train_state_dims
     param_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
     opt_shapes = jax.eval_shape(optimizer.init, param_shapes)
     pd = model.param_dims()

@@ -14,7 +14,7 @@ proxy: a ring all-reduce moves ~2× result bytes per device and an all-gather
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass, field
+from dataclasses import asdict, dataclass
 
 from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

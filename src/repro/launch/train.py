@@ -11,7 +11,6 @@ from __future__ import annotations
 
 import argparse
 
-import numpy as np
 
 
 def main():

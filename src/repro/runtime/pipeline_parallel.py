@@ -9,11 +9,25 @@ config uses the pod axis as DP instead (DESIGN.md §5).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+try:  # jax ≥ 0.6 exposes shard_map at the top level (with check_vma)
+    from jax import shard_map as _shard_map
+    _SM_NOCHECK = {"check_vma": False}
+except ImportError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_NOCHECK = {"check_rep": False}
+
+
+def _mark_varying(tree, axis):
+    """pcast-to-varying where the API exists (jax ≥ 0.7); no-op before."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.tree.map(
+            lambda z: jax.lax.pcast(z, (axis,), to="varying"), tree)
+    return tree
 
 
 def pipeline_apply(stage_fn, stage_params, x_micro, mesh: Mesh, axis: str):
@@ -57,8 +71,7 @@ def pipeline_apply(stage_fn, stage_params, x_micro, mesh: Mesh, axis: str):
 
         init = (jnp.zeros(mb_shape, x_all.dtype),
                 jnp.zeros((n_micro,) + mb_shape, x_all.dtype))
-        init = jax.tree.map(
-            lambda z: jax.lax.pcast(z, (axis,), to="varying"), init)
+        init = _mark_varying(init, axis)
         (_, outputs), _ = jax.lax.scan(tick, init, jnp.arange(n_ticks))
         # every stage holds an `outputs` buffer; only the last stage's is
         # real — zero the rest and psum to replicate it everywhere
@@ -66,11 +79,11 @@ def pipeline_apply(stage_fn, stage_params, x_micro, mesh: Mesh, axis: str):
             jnp.where(stage_id == n_stages - 1, outputs, 0.0), axis)
         return outputs
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         local, mesh=mesh,
         in_specs=(jax.tree.map(lambda _: P(axis), stage_params,
                                is_leaf=lambda x: hasattr(x, "shape")), P()),
         out_specs=P(),
-        check_vma=False,
+        **_SM_NOCHECK,
     )
     return fn(stage_params, x_micro)

@@ -1,0 +1,18 @@
+"""Shared test setup.
+
+If the real `hypothesis` package is missing (the bare container has no dev
+deps installed), register the deterministic fallback in its place before any
+test module imports it — collection must never fail on an optional dep.
+"""
+import importlib.util
+import pathlib
+import sys
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _path = pathlib.Path(__file__).parent / "_hypothesis_fallback.py"
+    _spec = importlib.util.spec_from_file_location("hypothesis", _path)
+    _mod = importlib.util.module_from_spec(_spec)
+    _spec.loader.exec_module(_mod)
+    sys.modules["hypothesis"] = _mod

@@ -51,7 +51,8 @@ SCRIPT = textwrap.dedent("""
 def test_distributed_matches_single_device():
     proc = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
                           text=True, timeout=600,
-                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
     assert proc.returncode == 0, proc.stderr[-3000:]
     line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT")][0]
     results = json.loads(line[len("RESULT"):])

@@ -1,6 +1,5 @@
 """INCREMENTAL detection (§V) — decision fidelity + pass-1 settlement."""
 import numpy as np
-import pytest
 
 from repro.core.bound import hybrid_detect
 from repro.core.incremental import incremental_detect, make_incremental_state

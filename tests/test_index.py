@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core.index import BucketedIndex, bucketize, build_index, entry_contribution_score
+from repro.core.index import bucketize, build_index, entry_contribution_score
 from repro.core.types import CopyConfig
 from repro.data.claims import motivating_example, motivating_value_probs
 

@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
 from repro.configs import get_config
@@ -152,4 +151,7 @@ def test_sharding_rules_divisibility_fallback():
 def _make_fake_mesh():
     """An abstract 16×16 mesh for sharding-rule unit tests (no devices)."""
     from jax.sharding import AbstractMesh
-    return AbstractMesh((16, 16), ("data", "model"))
+    try:
+        return AbstractMesh((16, 16), ("data", "model"))     # jax ≥ 0.5
+    except TypeError:
+        return AbstractMesh((("data", 16), ("model", 16)))   # jax 0.4.x

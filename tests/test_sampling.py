@@ -1,12 +1,10 @@
 """Sampling strategies (§VI-E, Table IX) + FAGININPUT baseline (Table X)."""
 import numpy as np
-import pytest
 
 from repro.core.bucketed import bucketed_index_detect
 from repro.core.fagin import fagin_input
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
-from repro.core.scoring import pairwise_detect
-from repro.core.types import CopyConfig, pair_f_measure
+from repro.core.types import CopyConfig
 from repro.data.claims import (
     SyntheticSpec,
     motivating_example,
