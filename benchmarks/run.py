@@ -13,6 +13,8 @@ CI and future PRs can diff the perf trajectory.
   fig2    single-round algorithms: computations + time         (Fig. 2)
   fig3    index orderings: BYCONTRIBUTION/BYPROVIDER/RANDOM    (Fig. 3)
   scaling DetectionEngine matrix: S × device-count             (engine)
+  kernel  copyscore tile path: legacy two-orientation vs fused (engine)
+          triangular dual-direction, f32/bf16 vs int8 incidence
   lm      token-throughput smoke of the training substrate
 
 Run:  PYTHONPATH=src python -m benchmarks.run [table6 scaling ...]
@@ -283,6 +285,116 @@ def scaling():
                      int(match))
 
 
+def kernel():
+    """Copyscore tile-path microbenchmark (ISSUE 2).
+
+    Times the legacy two-orientation dataflow (one single-direction
+    copyscore_tile per ORDERED kept tile + a separate full-incidence non-Ē
+    matmul) against the fused triangular path (one dual-direction
+    copyscore_tile_fused per UNORDERED tile), at f32/bf16 and int8 incidence.
+    Asserts the triangular schedule bound (tiles ≤ (n_blocks² + n_blocks)/2)
+    and that engine decisions still equal the exact INDEX — CI runs this as a
+    smoke step.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core.bucketed import pad_buckets
+    from repro.core.distributed import _local_tile_scores
+    from repro.core.index import bucketize_engine
+    from repro.data.claims import oracle_claim_probs, synthetic_claims
+    from repro.kernels.ops import copyscore_tile
+
+    S = 2048
+    sc = synthetic_claims(SCALING_SPECS[S])
+    p = oracle_claim_probs(sc)
+    idx = build_index(sc.dataset, p, CFG)
+    eng = _engine("bucketed", tile=256)
+    bucketed, p_lo, p_hi = bucketize_engine(idx, 64)
+    delta = eng._bucket_deltas(bucketed, p_lo, p_hi, sc.dataset.accuracy)
+    T = eng._tile_edge(S)
+    n_blocks = -(-S // T)
+    S_pad = n_blocks * T
+    acc_pad = np.pad(sc.dataset.accuracy.astype(np.float32), (0, S_pad - S),
+                     constant_values=0.5)
+
+    rr, cc = np.meshgrid(np.arange(n_blocks), np.arange(n_blocks),
+                         indexing="ij")
+    ordered = np.stack([rr.ravel(), cc.ravel()], 1).astype(np.int32)
+    tri = ordered[ordered[:, 0] <= ordered[:, 1]]
+    tri_bound = (n_blocks * n_blocks + n_blocks) // 2
+    assert len(tri) <= tri_bound, (len(tri), tri_bound)
+    emit("kernel/S2048/tiles_triangular", len(tri),
+         f"ordered={len(ordered)} bound={tri_bound}")
+
+    def legacy_scan(v_skw, acc, p_hat, d, coords, *, tile, ebar_bucket, impl):
+        """The pre-fused dataflow: single-direction kernel per ordered tile
+        plus a separate non-Ē incidence matmul (what PR 1 shipped)."""
+        S_pad, K, w = v_skw.shape
+        e_out = ebar_bucket * w
+
+        def one_tile(_, rc):
+            vr = jax.lax.dynamic_slice(
+                v_skw, (rc[0] * tile, 0, 0), (tile, K, w)).reshape(tile, K * w)
+            vc = jax.lax.dynamic_slice(
+                v_skw, (rc[1] * tile, 0, 0), (tile, K, w)).reshape(tile, K * w)
+            a_r = jax.lax.dynamic_slice(acc, (rc[0] * tile,), (tile,))
+            a_c = jax.lax.dynamic_slice(acc, (rc[1] * tile,), (tile,))
+            c, n, err = copyscore_tile(vr, vc, p_hat, a_r, a_c, s=CFG.s,
+                                       n_false=CFG.n, block_i=128, block_j=128,
+                                       block_e=w, impl=impl, delta_blk=d)
+            n_out = jnp.dot(vr[:, :e_out].astype(jnp.float32),
+                            vc[:, :e_out].astype(jnp.float32).T,
+                            preferred_element_type=jnp.float32)
+            return 0, (c, n, n_out, err)
+
+        return jax.lax.scan(one_tile, 0, coords)[1]
+
+    def timed(fn, *args):
+        out = fn(*args)                                # warm-up (JIT compile)
+        jax.block_until_ready(out)
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        return time.perf_counter() - t0
+
+    base_dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
+    base_name = "bf16" if base_dt == jnp.bfloat16 else "f32"
+    for dt, dt_name in ((base_dt, base_name), (jnp.int8, "int8")):
+        padded = pad_buckets(bucketed, dtype=dt)
+        v_np = np.asarray(padded.v_ksw)
+        v_skw = np.moveaxis(v_np, 0, 1)
+        if S_pad > S:
+            v_skw = np.concatenate(
+                [v_skw, np.zeros((S_pad - S,) + v_skw.shape[1:], v_np.dtype)])
+        args = (jnp.asarray(v_skw), jnp.asarray(acc_pad),
+                jnp.asarray(padded.p_hat), jnp.asarray(delta))
+        common = dict(tile=T, ebar_bucket=padded.ebar_bucket, impl="auto")
+        legacy = jax.jit(lambda *a: legacy_scan(*a, **common))
+        fused = jax.jit(lambda *a: _local_tile_scores(
+            *a, s=CFG.s, n=CFG.n, block_i=128, block_j=128, **common))
+        t_leg = timed(legacy, *args, jnp.asarray(ordered))
+        t_fus = timed(fused, *args, jnp.asarray(tri))
+        emit(f"kernel/S2048/legacy_{dt_name}/seconds", round(t_leg, 3),
+             f"tiles={len(ordered)}")
+        emit(f"kernel/S2048/fused_{dt_name}/seconds", round(t_fus, 3),
+             f"tiles={len(tri)} speedup={t_leg / max(t_fus, 1e-9):.2f}x")
+
+    # decision cross-check: triangular engine == exact INDEX (S=512 so the
+    # entry-sequential reference stays tractable)
+    sc5 = synthetic_claims(SCALING_SPECS[512])
+    p5 = oracle_claim_probs(sc5)
+    exact = _engine("exact").detect(sc5.dataset, p5)
+    eng5 = _engine("bucketed", tile=128)
+    res = eng5.detect(sc5.dataset, p5)
+    st = eng5.last_stats
+    nb5 = -(-sc5.dataset.n_sources // st["tile"])
+    assert st["tiles_kept"] <= (nb5 * nb5 + nb5) // 2, st
+    match = bool(np.array_equal(res.copying, exact.copying))
+    assert match, "triangular engine decisions diverged from exact INDEX"
+    emit("kernel/S512/decisions_match_exact", int(match),
+         f"tiles={st['tiles_kept']}/{st['tiles_total']}")
+
+
 def lm():
     """Training-substrate throughput smoke (tiny llama on CPU)."""
     import jax
@@ -315,8 +427,9 @@ def lm():
 
 # default order: cheapest first so partial runs still cover most tables
 TABLES = {
-    "lm": lm, "fig2": fig2, "fig3": fig3, "scaling": scaling, "table8": table8,
-    "table9": table9, "table10": table10, "table6": table6, "table7": table7,
+    "lm": lm, "fig2": fig2, "fig3": fig3, "scaling": scaling, "kernel": kernel,
+    "table8": table8, "table9": table9, "table10": table10, "table6": table6,
+    "table7": table7,
 }
 
 

@@ -44,7 +44,7 @@ def _mark_varying(x, axes):
 
 from repro.core.scoring import score_same
 from repro.core.types import CopyConfig
-from repro.kernels.ops import copyscore_tile
+from repro.kernels.ops import copyscore_tile_fused
 
 
 # ---------------------------------------------------------------------------
@@ -53,34 +53,39 @@ from repro.kernels.ops import copyscore_tile
 
 def _local_tile_scores(v_skw, acc, p_hat, delta, coords, *, tile, s, n,
                        ebar_bucket, impl, block_i, block_j):
-    """Per-device: scan this shard's pair tiles.
+    """Per-device: scan this shard's unordered pair tiles (fused dual kernel).
 
     v_skw:  (S_pad, K, w) bucket-aligned incidence, replicated
     coords: (n_local, 2) int32 — (row-block, col-block) indices of the tiles
-            assigned to this device
-    →       four (n_local, T, T) stacks: C_same→, shared count, count outside
-            Ē (the considered test), and the approximation-error bound.
+            assigned to this device, r ≤ c (triangular schedule); (-1, -1)
+            marks a padding slot, which produces zeros without any compute
+    →       five (n_local, T, T) stacks: C_same→, C_same← (the mirrored
+            tile's C→, transposed), shared count, count outside Ē (the
+            considered test), and the approximation-error bound.
     """
     S_pad, K, w = v_skw.shape
-    e_out = ebar_bucket * w              # non-Ē prefix (bucket-aligned, exact)
+    # non-Ē mask per entry block: in the tiled path blocks ARE buckets, so
+    # the n_out channel is exact at the Ē boundary (bucket-aligned)
+    nout_blk = (jnp.arange(K) < ebar_bucket).astype(jnp.float32)
 
-    def one_tile(_, rc):
+    def compute(rc):
         r0 = rc[0] * tile
         c0 = rc[1] * tile
         vr = jax.lax.dynamic_slice(v_skw, (r0, 0, 0), (tile, K, w))
         vc = jax.lax.dynamic_slice(v_skw, (c0, 0, 0), (tile, K, w))
         a_r = jax.lax.dynamic_slice(acc, (r0,), (tile,))
         a_c = jax.lax.dynamic_slice(acc, (c0,), (tile,))
-        flat_r = vr.reshape(tile, K * w)
-        flat_c = vc.reshape(tile, K * w)
-        c_same, n_cnt, err = copyscore_tile(
-            flat_r, flat_c, p_hat, a_r, a_c, s=s, n_false=n,
-            block_i=block_i, block_j=block_j, block_e=w, impl=impl,
-            delta_blk=delta)
-        n_out = jnp.dot(flat_r[:, :e_out].astype(jnp.float32),
-                        flat_c[:, :e_out].astype(jnp.float32).T,
-                        preferred_element_type=jnp.float32)
-        return 0, (c_same, n_cnt, n_out, err)
+        return copyscore_tile_fused(
+            vr.reshape(tile, K * w), vc.reshape(tile, K * w), p_hat, a_r, a_c,
+            s=s, n_false=n, block_i=block_i, block_j=block_j, block_e=w,
+            impl=impl, delta_blk=delta, nout_blk=nout_blk)
+
+    def skip(rc):
+        del rc
+        return (jnp.zeros((tile, tile), jnp.float32),) * 5
+
+    def one_tile(_, rc):
+        return 0, jax.lax.cond(rc[0] >= 0, compute, skip, rc)
 
     _, outs = jax.lax.scan(one_tile, 0, coords)
     return outs
@@ -103,22 +108,24 @@ def sharded_tile_scores(
 ):
     """Shard surviving pair tiles over a 1-D mesh; returns stacked tiles.
 
-    ``coords`` is padded to a multiple of the mesh size with (0, 0) dummies —
-    the caller scatters only the first ``n_tiles`` outputs, so the dummy
-    compute is inert. Output: four (n_tiles_padded, T, T) arrays
-    (C_same→, count, count outside Ē, error bound).
+    ``coords`` lists unordered (r ≤ c) tiles and is padded to a multiple of
+    the mesh size with (-1, -1) markers — padding slots short-circuit to zero
+    outputs inside the device scan (lax.cond) instead of recomputing a real
+    tile. Output: five (n_tiles_padded, T, T) arrays (C_same→, C_same←,
+    count, count outside Ē, error bound).
     """
     axis = mesh.axis_names[0]
     n_dev = mesh.shape[axis]
     n_tiles = len(coords)
     pad = (-n_tiles) % n_dev
     if pad:
-        coords = np.concatenate([coords, np.zeros((pad, 2), coords.dtype)])
+        coords = np.concatenate([coords,
+                                 np.full((pad, 2), -1, coords.dtype)])
 
     local = partial(_local_tile_scores, tile=tile, s=cfg.s, n=cfg.n,
                     ebar_bucket=ebar_bucket, impl=impl,
                     block_i=block_i, block_j=block_j)
-    out_spec = (P(axis), P(axis), P(axis), P(axis))
+    out_spec = (P(axis),) * 5
     fn = jax.jit(shard_map(
         local, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(axis)),

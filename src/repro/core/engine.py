@@ -12,11 +12,16 @@ the sharded, pair-tiled dataflow of DESIGN.md §3:
      whose sources co-occur only inside the low-contribution suffix Ē — by
      Proposition 3.4 those pairs can never flip to copying, so the whole
      tile is skipped without touching a device (the tile-level test uses the
-     OR-reduced incidence, an upper bound on any pair's co-occurrence);
+     OR-reduced incidence, an upper bound on any pair's co-occurrence); the
+     keep matrix is symmetric, so only unordered (r ≤ c) tiles survive —
+     the triangular schedule halves the tiles scheduled;
   3. shard the surviving tiles over a 1-D device mesh (shard_map); each
-     device scans its tiles, slicing the bucket-aligned incidence and
-     feeding the copyscore kernel one rectangular tile at a time;
-  4. scatter the tile blocks back into (S, S), apply the INDEX step-3
+     device scans its tiles, slicing the int8 bucket-aligned incidence and
+     feeding the fused dual-direction copyscore kernel one unordered tile
+     at a time — one count matmul per entry block emits C→, C←, the shared
+     count, the non-Ē count, and the error bound;
+  4. scatter both orientations of every tile back into (S, S) (C← transposed
+     lands at the mirrored coordinate), apply the INDEX step-3
      different-value adjustment, exactly rescore every pair whose decision
      margin is within its accumulated error bound, and decide — binary
      decisions match ``index_detect_exact`` (asserted by the engine tests
@@ -39,6 +44,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
@@ -71,6 +77,7 @@ class EngineOptions:
     devices: Optional[int] = None  # 1-D mesh size; None → all local devices
     rescore_margin: float = 1.0
     kernel_impl: str = "auto"     # auto | pallas | interpret | ref
+    incidence_dtype: str = "auto"  # auto (→ int8) | int8 | bf16 | f32
     l_threshold: Optional[int] = None   # hybrid crossover (default per mode)
     sample_rate: float = 0.1
     sample_strategy: str = "scale"      # scale | item | cell
@@ -165,10 +172,11 @@ class DetectionEngine:
     # -- the tiled + sharded production path --------------------------------
 
     def _tile_edge(self, s_sources: int) -> int:
-        """Tile edge: requested size, shrunk for small problems, and always a
-        multiple of 8 (f32 sublane) so kernel blocks stay aligned."""
-        t = min(self.options.tile, max(64, s_sources))
-        return max(8, (t // 8) * 8)
+        """Tile edge: the smallest multiple of 8 (f32 sublane alignment) that
+        is ≥ min(S, requested tile) — tiny datasets pad by at most 7 sources
+        instead of being blown up to a fixed 64-wide tile."""
+        t = min(self.options.tile, max(1, s_sources))
+        return max(8, -(-t // 8) * 8)
 
     # Inflation + slack on top of the sampled maximum: the accuracy sweep is
     # a grid, not an analytic bound — |f(p) − f(p̂)| can peak at interior
@@ -211,7 +219,6 @@ class DetectionEngine:
         base_idx = index if index is not None else build_index(ds, p_claim, cfg)
         bucketed, p_lo, p_hi = bucketize_engine(base_idx, opt.n_buckets)
         idx = bucketed.index                 # reordered copy (p-sorted regions)
-        padded = pad_buckets(bucketed)
         delta = self._bucket_deltas(bucketed, p_lo, p_hi, ds.accuracy)
         S = ds.n_sources
         T = self._tile_edge(S)
@@ -222,6 +229,8 @@ class DetectionEngine:
         # If no source in tile r shares a non-Ē entry with any source in
         # tile c, no pair in (r, c) is ever considered (Ē suffix bound) —
         # skip the whole tile. Group-OR ≥ any member, so pruning is safe.
+        # The keep matrix is symmetric and the fused kernel emits both tile
+        # orientations, so only unordered (r ≤ c) tiles are scheduled.
         e0 = idx.ebar_start
         prov_out = idx.V[:, :e0].astype(bool)
         prov_pad = np.zeros((S_pad, max(e0, 1)), bool)
@@ -229,17 +238,27 @@ class DetectionEngine:
             prov_pad[:S, :e0] = prov_out
         G = prov_pad.reshape(n_blocks, T, -1).any(axis=1)
         keep = (G.astype(np.int32) @ G.astype(np.int32).T) > 0
-        coords = np.argwhere(keep).astype(np.int32)      # ordered (row, col)
-        tiles_total = n_blocks * n_blocks
+        coords = np.argwhere(np.triu(keep)).astype(np.int32)  # r ≤ c tiles
+        tiles_total = n_blocks * (n_blocks + 1) // 2
         n_tiles = len(coords)
 
         # ---- shard surviving tiles over the 1-D mesh ----------------------
-        K = padded.n_buckets
-        w = padded.width
-        v_skw = np.moveaxis(np.asarray(padded.v_ksw, np.float32), 0, 1)
+        # Incidence is 0/1, so int8 (the default) is lossless: the kernel
+        # accumulates it exactly in int32 on the MXU at half the HBM traffic
+        # of bf16. bf16/f32 remain selectable for the microbenchmark.
+        dtypes = {"auto": jnp.int8, "int8": jnp.int8, "bf16": jnp.bfloat16,
+                  "f32": jnp.float32}
+        if opt.incidence_dtype not in dtypes:
+            raise ValueError(
+                f"unknown incidence_dtype {opt.incidence_dtype!r}; "
+                f"expected one of {sorted(dtypes)}")
+        dtype = dtypes[opt.incidence_dtype]
+        padded = pad_buckets(bucketed, dtype=dtype)
+        v_np = np.asarray(padded.v_ksw)
+        v_skw = np.moveaxis(v_np, 0, 1)
         if S_pad > S:
-            v_skw = np.pad(v_skw, ((0, S_pad - S), (0, 0), (0, 0)))
-        v_skw = v_skw.astype(np.asarray(padded.v_ksw).dtype)
+            v_skw = np.concatenate(
+                [v_skw, np.zeros((S_pad - S,) + v_skw.shape[1:], v_np.dtype)])
         acc_pad = np.pad(ds.accuracy.astype(np.float32), (0, S_pad - S),
                          constant_values=0.5)
 
@@ -249,18 +268,28 @@ class DetectionEngine:
         n_out = np.zeros((S_pad, S_pad), np.float32)
         err = np.zeros((S_pad, S_pad), np.float32)
         if n_tiles:
-            c_t, n_t, o_t, e_t = sharded_tile_scores(
+            cf_t, cb_t, n_t, o_t, e_t = sharded_tile_scores(
                 self.mesh(), v_skw, acc_pad, np.asarray(padded.p_hat),
                 coords, cfg, tile=T, ebar_bucket=padded.ebar_bucket,
                 delta=delta, impl=opt.kernel_impl, block_i=block, block_j=block)
-            # scatter tile blocks back into the (S_pad, S_pad) grid: the
-            # blocked transpose is a writable view, so fancy assignment on
-            # tile coordinates lands each (T, T) block in place
-            for grid, tiles in ((c_same, c_t), (n_cnt, n_t), (n_out, o_t),
-                                (err, e_t)):
+            # scatter both orientations of every unordered tile back into the
+            # (S_pad, S_pad) grid: the blocked transpose is a writable view,
+            # so fancy assignment on tile coordinates lands each (T, T) block
+            # in place. The (c, r) mirror of tile (r, c) is C_same←ᵀ for the
+            # score and the plain transpose for the symmetric-role channels;
+            # diagonal tiles write identical values twice.
+            rr, cc = coords[:, 0], coords[:, 1]
+            c_fwd_t = np.asarray(cf_t[:n_tiles], np.float32)
+            c_bwd_t = np.asarray(cb_t[:n_tiles], np.float32)
+            for grid, fwd, bwd in (
+                (c_same, c_fwd_t, c_bwd_t.transpose(0, 2, 1)),
+                (n_cnt, np.asarray(n_t[:n_tiles], np.float32), None),
+                (n_out, np.asarray(o_t[:n_tiles], np.float32), None),
+                (err, np.asarray(e_t[:n_tiles], np.float32), None),
+            ):
                 g4 = grid.reshape(n_blocks, T, n_blocks, T).transpose(0, 2, 1, 3)
-                g4[coords[:, 0], coords[:, 1]] = \
-                    np.asarray(tiles[:n_tiles], np.float32)
+                g4[rr, cc] = fwd
+                g4[cc, rr] = fwd.transpose(0, 2, 1) if bwd is None else bwd
         c_same = c_same[:S, :S]
         n_cnt = n_cnt[:S, :S]
         err = err[:S, :S]
@@ -304,9 +333,11 @@ class DetectionEngine:
         )
         self.last_stats = {
             "tile": T,
-            "tiles_total": tiles_total,
+            "tiles_total": tiles_total,        # unordered (r ≤ c) tiles
             "tiles_kept": n_tiles,
             "tiles_pruned": tiles_total - n_tiles,
+            "schedule": "triangular",
+            "incidence_dtype": str(np.dtype(dtype)),
             "n_devices": self.mesh().shape["shards"],
             "rescored_pairs": n_rescored,
         }

@@ -1,3 +1,3 @@
-from repro.kernels.ops import copyscore, flash_attention
+from repro.kernels.ops import copyscore, copyscore_tile_fused, flash_attention
 
-__all__ = ["copyscore", "flash_attention"]
+__all__ = ["copyscore", "copyscore_tile_fused", "flash_attention"]

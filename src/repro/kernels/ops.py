@@ -15,7 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref as kref
-from repro.kernels.copyscore import copyscore_pallas
+from repro.kernels.copyscore import copyscore_fused_pallas, copyscore_pallas
 from repro.kernels.flash_attention import flash_attention_bwd, flash_attention_fwd
 
 
@@ -124,6 +124,48 @@ def copyscore_tile(
         v_cols=jnp.asarray(v_cols), acc_cols=jnp.asarray(acc_cols),
         s=s, n_false=n_false, block_i=block_i, block_j=block_j,
         block_e=block_e, interpret=(impl == "interpret"), delta_blk=delta)
+
+
+def copyscore_tile_fused(
+    v_rows,                 # (T_r, E) row-block incidence, entries bucket-aligned
+    v_cols,                 # (T_c, E) column-block incidence
+    p_blk,                  # (E // block_e,) representative p̂ per entry block
+    acc_rows,               # (T_r,) row accuracies
+    acc_cols,               # (T_c,) column accuracies
+    *,
+    s: float,
+    n_false: float,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_e: int = 512,
+    impl: str = "auto",     # auto | pallas | interpret | ref
+    delta_blk=None,         # (E // block_e,) per-block score-error bound
+    nout_blk=None,          # (E // block_e,) 1.0 ⇔ block outside Ē
+):
+    """One unordered pair tile, both directions: (C→, C←, n, n_out, err).
+
+    The production dataflow (DESIGN.md §3): the DetectionEngine schedules only
+    upper-triangular (r ≤ c) surviving tiles and scatters C← transposed at the
+    mirrored coordinate, so each unordered tile is computed exactly once —
+    one count matmul per entry block feeds all five channels (the n_out mask
+    channel replaces the legacy separate non-Ē incidence matmul).
+    """
+    if impl == "auto":
+        impl = "pallas" if _on_tpu() else "ref"
+    delta = None if delta_blk is None else jnp.asarray(delta_blk)
+    nout = None if nout_blk is None else jnp.asarray(nout_blk)
+    if impl == "ref":
+        return kref.copyscore_fused_ref(
+            jnp.asarray(v_rows), jnp.asarray(p_blk), jnp.asarray(acc_rows),
+            v_cols=jnp.asarray(v_cols), acc_cols=jnp.asarray(acc_cols),
+            s=s, n_false=n_false, block_e=block_e, delta_blk=delta,
+            nout_blk=nout)
+    return copyscore_fused_pallas(
+        jnp.asarray(v_rows), jnp.asarray(p_blk), jnp.asarray(acc_rows),
+        v_cols=jnp.asarray(v_cols), acc_cols=jnp.asarray(acc_cols),
+        s=s, n_false=n_false, block_i=block_i, block_j=block_j,
+        block_e=block_e, interpret=(impl == "interpret"), delta_blk=delta,
+        nout_blk=nout)
 
 
 # ---------------------------------------------------------------------------

@@ -55,6 +55,49 @@ def copyscore_ref(v, p_blk, acc, *, s, n_false, block_e=512,
     return c, n
 
 
+@partial(jax.jit, static_argnames=("s", "n_false", "block_e"))
+def copyscore_fused_ref(v, p_blk, acc, *, s, n_false, block_e=512,
+                        v_cols=None, acc_cols=None, delta_blk=None,
+                        nout_blk=None):
+    """Dual-direction oracle for ``copyscore_fused_pallas``.
+
+    Returns (C_same→, C_same←, n, n_out, err), all (S_i, S_j) f32, from one
+    shared count per entry block. C_same←[i,j] scores column j copying from
+    row i — only the copied-source accuracy role swaps in f; its transpose is
+    the mirrored tile's C_same→. ``nout_blk`` (default all-ones) masks which
+    blocks count toward n_out; ``delta_blk`` (default zero) feeds err.
+    """
+    vj = v if v_cols is None else v_cols
+    accj = acc if acc_cols is None else acc_cols
+    S_i, E = v.shape
+    S_j = vj.shape[0]
+    n_e = E // block_e
+    vi_f = v.astype(jnp.float32).reshape(S_i, n_e, block_e)
+    vj_f = vj.astype(jnp.float32).reshape(S_j, n_e, block_e)
+    a1 = acc.astype(jnp.float32)[:, None]
+    a2 = accj.astype(jnp.float32)[None, :]
+    d_blk = (jnp.zeros(n_e) if delta_blk is None else delta_blk).astype(jnp.float32)
+    m_blk = (jnp.ones(n_e) if nout_blk is None else nout_blk).astype(jnp.float32)
+
+    def body(carry, xs):
+        cf, cb, n, n_out, err = carry
+        vi_k, vj_k, p_k, d_k, m_k = xs
+        count = jnp.dot(vi_k, vj_k.T, preferred_element_type=jnp.float32)
+        # symmetric association (a1·a2 first): bitwise invariant under a1↔a2,
+        # matching the kernel — on a diagonal tile C← == C→ᵀ exactly
+        pr_ind = p_k * (a1 * a2) + (1.0 - p_k) * ((1.0 - a1) * (1.0 - a2)) / n_false
+        f_fwd = jnp.log(1.0 - s + s * (p_k * a2 + (1.0 - p_k) * (1.0 - a2)) / pr_ind)
+        f_bwd = jnp.log(1.0 - s + s * (p_k * a1 + (1.0 - p_k) * (1.0 - a1)) / pr_ind)
+        return (cf + f_fwd * count, cb + f_bwd * count, n + count,
+                n_out + m_k * count, err + d_k * count), None
+
+    zero = jnp.zeros((S_i, S_j), jnp.float32)
+    carry, _ = jax.lax.scan(body, (zero,) * 5,
+                            (jnp.moveaxis(vi_f, 1, 0), jnp.moveaxis(vj_f, 1, 0),
+                             p_blk.astype(jnp.float32), d_blk, m_blk))
+    return carry
+
+
 # ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------

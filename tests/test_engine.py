@@ -63,7 +63,39 @@ def test_tiled_matches_exact_random(synthetic, tile):
     res = eng.detect(ds, p)
     np.testing.assert_array_equal(res.copying, exact.copying)
     assert res.counter.pairs_considered == exact.counter.pairs_considered
-    assert eng.last_stats["tiles_total"] >= 1
+    st = eng.last_stats
+    assert st["tiles_total"] >= 1
+    # triangular schedule: tiles scheduled ≤ (n_blocks² + n_blocks) / 2
+    n_blocks = -(-ds.n_sources // st["tile"])
+    assert st["tiles_kept"] <= (n_blocks * n_blocks + n_blocks) // 2
+
+
+def test_tile_edge_clamps_small_datasets():
+    """S < 64 must not pad up to a 64-wide tile: the edge is the smallest
+    multiple of 8 ≥ min(S, requested)."""
+    eng = DetectionEngine(CFG, mode="bucketed", tile=256)
+    assert eng._tile_edge(10) == 16
+    assert eng._tile_edge(8) == 8
+    assert eng._tile_edge(64) == 64
+    assert eng._tile_edge(2048) == 256
+    assert DetectionEngine(CFG, mode="bucketed", tile=48)._tile_edge(2048) == 48
+
+
+def test_tiny_dataset_decisions_match_exact():
+    """A 20-source dataset runs on a 24-wide tile (not 64) and still matches
+    the exact INDEX."""
+    rng = np.random.default_rng(7)
+    from repro.core import ClaimsDataset
+    values = rng.integers(0, 3, (20, 60)).astype(np.int32)
+    values[rng.random((20, 60)) < 0.3] = -1
+    ds = ClaimsDataset(values=values,
+                       accuracy=rng.uniform(0.3, 0.9, 20).astype(np.float32))
+    p = np.where(values >= 0, 0.4, 0.0).astype(np.float32)
+    exact = index_detect_exact(ds, p, CFG)
+    eng = DetectionEngine(CFG, mode="bucketed", tile=256)
+    res = eng.detect(ds, p)
+    assert eng.last_stats["tile"] == 24
+    np.testing.assert_array_equal(res.copying, exact.copying)
 
 
 def test_tile_pruning_skips_disjoint_groups():
@@ -85,8 +117,10 @@ def test_tile_pruning_skips_disjoint_groups():
     res = eng.detect(ds, p)
     np.testing.assert_array_equal(res.copying, exact.copying)
     stats = eng.last_stats
-    assert stats["tiles_total"] == 4
-    assert stats["tiles_pruned"] == 2          # the two cross-group tiles
+    # 2×2 blocks → 3 unordered tiles; the single cross-group tile is pruned
+    assert stats["tiles_total"] == 3
+    assert stats["tiles_pruned"] == 1
+    assert stats["tiles_kept"] == 2            # the two diagonal tiles
     # pruned pairs are reported independent, same as the Ē-skip rule
     assert (res.pr_independent[:half_s, half_s:] == 1.0).all()
 
@@ -138,11 +172,14 @@ SHARD_SCRIPT = textwrap.dedent("""
     r1 = DetectionEngine(cfg, mode="bucketed", tile=32, devices=1).detect(sc.dataset, p)
     e8 = DetectionEngine(cfg, mode="bucketed", tile=32, devices=8)
     r8 = e8.detect(sc.dataset, p)
+    n_blocks = -(-sc.dataset.n_sources // e8.last_stats["tile"])
     out = {
         "c_diff": float(np.abs(r1.c_fwd - r8.c_fwd).max()),
         "dec_18": bool(np.array_equal(r1.copying, r8.copying)),
         "dec_exact": bool(np.array_equal(r8.copying, exact.copying)),
         "n_devices": int(e8.last_stats["n_devices"]),
+        "tiles_kept": int(e8.last_stats["tiles_kept"]),
+        "tri_bound": (n_blocks * n_blocks + n_blocks) // 2,
     }
     print("RESULT" + json.dumps(out))
 """)
@@ -159,3 +196,5 @@ def test_sharded_engine_matches_single_device():
     assert out["n_devices"] == 8
     assert out["c_diff"] < 1e-4
     assert out["dec_18"] and out["dec_exact"]
+    # triangular schedule holds on the sharded mesh too
+    assert out["tiles_kept"] <= out["tri_bound"]

@@ -9,9 +9,9 @@ from repro.core.bucketed import pad_buckets
 from repro.core.index import build_index, bucketize
 from repro.core.types import CopyConfig
 from repro.data.claims import SyntheticSpec, oracle_claim_probs, synthetic_claims
-from repro.kernels.copyscore import copyscore_pallas
+from repro.kernels.copyscore import copyscore_fused_pallas, copyscore_pallas
 from repro.kernels.ops import copyscore, pad_for_copyscore
-from repro.kernels.ref import copyscore_ref
+from repro.kernels.ref import copyscore_fused_ref, copyscore_ref
 
 CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
 
@@ -120,6 +120,108 @@ def test_property_counts_are_cooccurrences(seed):
                               s=0.8, n_false=50.0, block_i=32, block_j=32,
                               block_e=64, interpret=True)
     np.testing.assert_array_equal(np.asarray(n_k), v @ v.T)
+
+
+# ---------------------------------------------------------------------------
+# fused dual-direction kernel (the production tiled path)
+# ---------------------------------------------------------------------------
+
+def _random_rect(rng, S_r, S_c, E, block_e):
+    v_r = (rng.random((S_r, E)) < 0.15).astype(np.float32)
+    v_c = (rng.random((S_c, E)) < 0.15).astype(np.float32)
+    p = rng.uniform(0.01, 0.99, size=E // block_e).astype(np.float32)
+    a_r = rng.uniform(0.05, 0.95, size=S_r).astype(np.float32)
+    a_c = rng.uniform(0.05, 0.95, size=S_c).astype(np.float32)
+    d = rng.uniform(0.0, 0.2, size=E // block_e).astype(np.float32)
+    return v_r, v_c, p, a_r, a_c, d
+
+
+def _fused(v_r, v_c, p, a_r, a_c, d, m, *, bi=32, bj=32, be=64, dtype=None):
+    cast = (lambda x: jnp.asarray(x)) if dtype is None \
+        else (lambda x: jnp.asarray(x, dtype))
+    return copyscore_fused_pallas(
+        cast(v_r), jnp.asarray(p), jnp.asarray(a_r), v_cols=cast(v_c),
+        acc_cols=jnp.asarray(a_c), delta_blk=jnp.asarray(d),
+        nout_blk=jnp.asarray(m), s=CFG.s, n_false=CFG.n,
+        block_i=bi, block_j=bj, block_e=be, interpret=True)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), ebar=st.integers(0, 4))
+def test_property_fused_dual_matches_ref_both_orientations(seed, ebar):
+    """On a rectangular tile the fused kernel's C→ equals the single-direction
+    oracle for (rows, cols) and C←ᵀ equals it for (cols, rows); the shared
+    channels match the oracle's count/err and the non-Ē-masked count."""
+    rng = np.random.default_rng(seed)
+    v_r, v_c, p, a_r, a_c, d = _random_rect(rng, 64, 96, 256, 64)
+    m = (np.arange(4) < ebar).astype(np.float32)
+    cf, cb, n, n_out, err = _fused(v_r, v_c, p, a_r, a_c, d, m)
+
+    fwd_c, fwd_n, fwd_e = copyscore_ref(
+        jnp.asarray(v_r), jnp.asarray(p), jnp.asarray(a_r),
+        v_cols=jnp.asarray(v_c), acc_cols=jnp.asarray(a_c),
+        delta_blk=jnp.asarray(d), s=CFG.s, n_false=CFG.n, block_e=64)
+    mir_c, _ = copyscore_ref(
+        jnp.asarray(v_c), jnp.asarray(p), jnp.asarray(a_c),
+        v_cols=jnp.asarray(v_r), acc_cols=jnp.asarray(a_r),
+        s=CFG.s, n_false=CFG.n, block_e=64)
+
+    np.testing.assert_allclose(np.asarray(cf), np.asarray(fwd_c),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(cb).T, np.asarray(mir_c),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(n), np.asarray(fwd_n))
+    np.testing.assert_allclose(np.asarray(err), np.asarray(fwd_e),
+                               rtol=1e-5, atol=1e-5)
+    # n_out ≡ co-occurrence over the masked (non-Ē) entry blocks only
+    e_out = int(m.sum()) * 64
+    np.testing.assert_array_equal(np.asarray(n_out),
+                                  v_r[:, :e_out] @ v_c[:, :e_out].T)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_property_fused_int8_bit_exact_vs_f32(seed):
+    """int8 incidence takes the int32 MXU accumulation path: every count
+    channel is bit-exact vs the f32 path and the scores are identical (the
+    VPU combine sees the same f32 counts)."""
+    rng = np.random.default_rng(seed)
+    v_r, v_c, p, a_r, a_c, d = _random_rect(rng, 64, 64, 128, 64)
+    m = np.array([1.0, 0.0], np.float32)
+    out_f32 = _fused(v_r, v_c, p, a_r, a_c, d, m)
+    out_i8 = _fused(v_r, v_c, p, a_r, a_c, d, m, dtype=jnp.int8)
+    for a, b in zip(out_f32, out_i8):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_ref_matches_fused_kernel_square():
+    rng = np.random.default_rng(11)
+    v, p, acc = _random_instance(rng, 128, 256, 64)
+    d = rng.uniform(0, 0.1, 4).astype(np.float32)
+    m = (np.arange(4) < 3).astype(np.float32)
+    kern = copyscore_fused_pallas(
+        jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+        delta_blk=jnp.asarray(d), nout_blk=jnp.asarray(m),
+        s=CFG.s, n_false=CFG.n, block_i=64, block_j=64, block_e=64,
+        interpret=True)
+    ref = copyscore_fused_ref(
+        jnp.asarray(v), jnp.asarray(p), jnp.asarray(acc),
+        delta_blk=jnp.asarray(d), nout_blk=jnp.asarray(m),
+        s=CFG.s, n_false=CFG.n, block_e=64)
+    for a, b in zip(kern, ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_fused_diagonal_tile_backward_is_forward_transpose():
+    """On a diagonal tile (rows == cols) C← must equal C→ᵀ bitwise — the
+    engine relies on this when it scatters both orientations of tile (r, r)."""
+    rng = np.random.default_rng(5)
+    v, p, acc = _random_instance(rng, 64, 128, 64)
+    d = np.zeros(2, np.float32)
+    m = np.ones(2, np.float32)
+    cf, cb, *_ = _fused(v, v, p, acc, acc, d, m)
+    np.testing.assert_array_equal(np.asarray(cb), np.asarray(cf).T)
 
 
 @settings(max_examples=20, deadline=None)
