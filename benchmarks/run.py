@@ -12,6 +12,9 @@ CI and future PRs can diff the perf trajectory.
   table10 time ratio vs FAGININPUT                             (Table X)
   fig2    single-round algorithms: computations + time         (Fig. 2)
   fig3    index orderings: BYCONTRIBUTION/BYPROVIDER/RANDOM    (Fig. 3)
+  serve   batched serving: req/s + p50/p99 latency vs batch    (serving)
+          size; asserts batched == per-request decisions and
+          sample_verify == exact on its candidate set
   scaling DetectionEngine matrix: S × device-count             (engine)
   kernel  copyscore tile path: legacy two-orientation vs fused (engine)
           triangular dual-direction, f32/bf16 vs int8 incidence
@@ -395,6 +398,92 @@ def kernel():
          f"tiles={st['tiles_kept']}/{st['tiles_total']}")
 
 
+def serve():
+    """Batched serving benchmark (ISSUE 3): requests/sec + latency vs batch
+    size, plus sampled-vs-exact decision agreement.
+
+    A 256-source corpus serves 24 requests of 4 query rows each through
+    ``core/serving.serve_batch`` at batch sizes 1 / 2 / 8 (one tiled engine
+    pass per batch). Asserts that batched decisions equal the per-request
+    ones (DESIGN.md §5) and that ``sample_verify`` decisions equal the exact
+    INDEX on its candidate set (DESIGN.md §4) — CI runs this as a smoke step
+    under 1 and 8 virtual devices. Request latency is modeled as an
+    all-at-once burst: every request is pending at t0, so a request's
+    latency is the cumulative wall time through its batch.
+    """
+    import jax
+    from repro.core.serving import DetectRequest, serve_batch
+    from repro.data.claims import (
+        SyntheticSpec,
+        oracle_claim_probs,
+        synthetic_claims,
+        synthetic_query_rows,
+    )
+
+    S, D, n_req, q = 256, 1024, 24, 4
+    sc = synthetic_claims(SyntheticSpec(
+        n_sources=S, n_items=D, coverage="book", n_cliques=6, clique_size=3,
+        clique_items=12, seed=0))
+    p = oracle_claim_probs(sc)
+    vals, acc, pq, _ = synthetic_query_rows(sc, n_req * q, seed=1)
+    requests = [DetectRequest(rid=i, values=vals[i * q:(i + 1) * q],
+                              accuracy=acc[i * q:(i + 1) * q],
+                              p_claim=pq[i * q:(i + 1) * q])
+                for i in range(n_req)]
+    eng = _engine("bucketed")
+    n_dev = len(jax.devices())
+
+    def run_batched(bs):
+        groups = [requests[i: i + bs] for i in range(0, n_req, bs)]
+        for g in groups:                      # warm-up (JIT compile per shape)
+            serve_batch(sc.dataset, p, eng, g)
+        responses, latencies = [], []
+        t0 = time.perf_counter()
+        for g in groups:
+            responses.extend(serve_batch(sc.dataset, p, eng, g))
+            elapsed = time.perf_counter() - t0
+            latencies.extend([elapsed] * len(g))
+        return time.perf_counter() - t0, responses, np.asarray(latencies)
+
+    base_dt = None
+    base_responses = None
+    for bs in (1, 2, 8):
+        dt, responses, lat = run_batched(bs)
+        emit(f"serve/S{S}/dev{n_dev}/batch{bs}/requests_per_s",
+             round(n_req / dt, 2),
+             f"p50={np.percentile(lat, 50) * 1e3:.0f}ms "
+             f"p99={np.percentile(lat, 99) * 1e3:.0f}ms")
+        if bs == 1:
+            base_dt, base_responses = dt, responses
+        else:
+            match = all(
+                np.array_equal(b.copying, s.copying)
+                and np.array_equal(b.intra_copying, s.intra_copying)
+                for b, s in zip(responses, base_responses))
+            assert match, f"batch={bs} decisions diverged from per-request"
+            emit(f"serve/S{S}/dev{n_dev}/batch{bs}/decisions_match_per_request",
+                 int(match))
+            if bs == 8:
+                emit(f"serve/S{S}/dev{n_dev}/batch8/speedup_vs_batch1",
+                     round(base_dt / dt, 2))
+
+    # sampled-vs-exact agreement: sample_verify candidate decisions must
+    # equal the exact INDEX; overall F vs exact measures the net's recall
+    exact = _engine("exact").detect(sc.dataset, p)
+    sv = _engine("sample_verify", sample_rate=0.1, min_per_source=4,
+                 sample_seed=1)
+    res = sv.detect(sc.dataset, p)
+    cand = sv._last_considered
+    agree = bool((res.copying[cand] == exact.copying[cand]).all())
+    assert agree, "sample_verify decisions diverged from exact on candidates"
+    _, _, f = pair_f_measure(res.copying_pairs(), exact.copying_pairs())
+    emit(f"serve/S{S}/sample_verify/candidate_agreement", int(agree),
+         f"candidates={sv.last_stats['candidate_pairs']} "
+         f"slack={sv.last_stats['slack_final']}")
+    emit(f"serve/S{S}/sample_verify/f_vs_exact", round(f, 3),
+         f"sampled_items={sv.last_stats['items_sampled']}")
+
+
 def lm():
     """Training-substrate throughput smoke (tiny llama on CPU)."""
     import jax
@@ -427,9 +516,9 @@ def lm():
 
 # default order: cheapest first so partial runs still cover most tables
 TABLES = {
-    "lm": lm, "fig2": fig2, "fig3": fig3, "scaling": scaling, "kernel": kernel,
-    "table8": table8, "table9": table9, "table10": table10, "table6": table6,
-    "table7": table7,
+    "lm": lm, "fig2": fig2, "fig3": fig3, "serve": serve, "scaling": scaling,
+    "kernel": kernel, "table8": table8, "table9": table9, "table10": table10,
+    "table6": table6, "table7": table7,
 }
 
 

@@ -1,7 +1,7 @@
 """grok-1-314b [moe] — 8 experts, top-2. [hf:xai-org/grok-1; unverified].
 
 Adafactor (factored second moment) keeps optimizer state within HBM at
-314B params on 256 chips — see DESIGN.md §5.
+314B params on 256 chips (launch/mesh.py production mesh).
 """
 from repro.configs.base import ModelConfig
 

@@ -12,28 +12,41 @@ Public API:
   truth_finding                                 — iterative fusion driver
   sample_by_item, sample_by_cell, scale_sample  — sampling (§VI)
   fagin_input                                   — NRA baseline (Table X)
+  DetectRequest, DetectionService, serve_batch  — batched serving (DESIGN §5)
 
 The per-algorithm functions remain as references and compatibility wrappers;
-new code should construct a ``DetectionEngine`` with the mode it needs.
+new code should construct a ``DetectionEngine`` with the mode it needs (or a
+``DetectionService`` for concurrent corpus queries).
 """
 from repro.core.bound import bound_detect, hybrid_detect
 from repro.core.bucketed import bucketed_index_detect, index_detect_exact
 from repro.core.engine import DetectionEngine, EngineOptions
 from repro.core.fagin import fagin_input
-from repro.core.incremental import incremental_detect, make_incremental_state
+from repro.core.incremental import (
+    incremental_detect,
+    make_incremental_state,
+    rescore_pairs_exact,
+)
 from repro.core.index import build_index, bucketize
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import pairwise_detect
+from repro.core.serving import (
+    DetectionService,
+    DetectRequest,
+    DetectResponse,
+    serve_batch,
+)
 from repro.core.truthfind import fusion_accuracy, truth_finding
 from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult, pair_f_measure
 
 __all__ = [
     "CopyConfig", "ClaimsDataset", "DetectionResult", "pair_f_measure",
     "DetectionEngine", "EngineOptions",
+    "DetectRequest", "DetectResponse", "DetectionService", "serve_batch",
     "pairwise_detect", "build_index", "bucketize",
     "index_detect_exact", "bucketed_index_detect",
     "bound_detect", "hybrid_detect",
-    "make_incremental_state", "incremental_detect",
+    "make_incremental_state", "incremental_detect", "rescore_pairs_exact",
     "truth_finding", "fusion_accuracy",
     "sample_by_item", "sample_by_cell", "scale_sample",
     "fagin_input",

@@ -123,6 +123,7 @@ class PaddedBuckets:
 
     @property
     def n_buckets(self) -> int:
+        """K — number of buckets (leading axis of v_ksw)."""
         return self.v_ksw.shape[0]
 
 

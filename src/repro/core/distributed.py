@@ -268,9 +268,11 @@ def distributed_pair_scores(
     p_kw = jnp.broadcast_to(p_hat_a[:, None], (K, w))
 
     def run():
+        """Execute the sharded pass and return (C_same→, count) tiles."""
         return shard_fn(v_skw, v_skw, acc, acc, p_kw)
 
     def lower():
+        """Lower (without executing) for the compile-only dry-run path."""
         args = (
             jax.ShapeDtypeStruct(v_skw.shape, v_skw.dtype),
             jax.ShapeDtypeStruct(v_skw.shape, v_skw.dtype),

@@ -36,6 +36,9 @@ Modes
   incremental   stateful rounds: first call bootstraps HYBRID + bookkeeping,
                 later calls apply per-round deltas (§V)
   sampled       item sampling (§VI) then the tiled path on the subset
+  sample_verify SCALESAMPLE candidate discovery, then an exact gathered
+                rescore of only the candidate pairs — decisions on the
+                candidate set equal ``index_detect_exact`` (DESIGN.md §4)
 """
 from __future__ import annotations
 
@@ -51,12 +54,15 @@ from jax.sharding import Mesh
 from repro.core.bound import bound_detect
 from repro.core.bucketed import index_detect_exact, pad_buckets
 from repro.core.distributed import sharded_tile_scores
-from repro.core.incremental import incremental_detect, make_incremental_state
+from repro.core.incremental import (
+    incremental_detect,
+    make_incremental_state,
+    rescore_pairs_exact,
+)
 from repro.core.index import InvertedIndex, bucketize_engine, build_index
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import (
     decide_copying_np,
-    pair_scores_subset,
     pairwise_detect,
     posterior_independence_np,
     score_same_np,
@@ -65,26 +71,62 @@ from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult
 from repro.utils.counters import ComputeCounter
 
 MODES = ("pairwise", "exact", "bucketed", "bound", "bound+", "hybrid",
-         "incremental", "sampled")
+         "incremental", "sampled", "sample_verify")
 
 
 @dataclass
 class EngineOptions:
     """Tuning knobs; mode-specific fields are ignored by other modes."""
 
+    # entry buckets per index (count). 64 keeps the within-bucket p̂ error —
+    # and with it the rescore set — small while the bucket scan stays matmul-
+    # bound (DESIGN.md §3.1).
     n_buckets: int = 64
-    tile: int = 256               # pair-tile edge (sources per tile side)
-    devices: Optional[int] = None  # 1-D mesh size; None → all local devices
+    # pair-tile edge (sources per tile side). 256 divides into two 128-wide
+    # MXU pair blocks; clamped down for tiny datasets (see _tile_edge).
+    tile: int = 256
+    # 1-D tile-mesh size (device count); None → every local device.
+    devices: Optional[int] = None
+    # decision-margin band (log-odds units) around z = 0 that triggers an
+    # exact rescore on top of the accumulated p̂-error bound. 1.0 adds slack
+    # for the float32 accumulation order; the bound itself carries the
+    # approximation error (DESIGN.md §3.4).
     rescore_margin: float = 1.0
-    kernel_impl: str = "auto"     # auto | pallas | interpret | ref
-    incidence_dtype: str = "auto"  # auto (→ int8) | int8 | bf16 | f32
-    l_threshold: Optional[int] = None   # hybrid crossover (default per mode)
+    # kernel dispatch: auto (Pallas on TPU, jnp reference elsewhere) |
+    # pallas | interpret | ref.
+    kernel_impl: str = "auto"
+    # incidence element type: auto (→ int8; exact int32 MXU accumulation at
+    # half the HBM traffic) | int8 | bf16 | f32 (microbenchmark ablations).
+    incidence_dtype: str = "auto"
+    # hybrid crossover: apply BOUND checks only to pairs sharing more than
+    # this many items; None → 16, the paper's §IV-C empirical crossover.
+    l_threshold: Optional[int] = None
+    # sampled / sample_verify: fraction of item columns to keep (0..1].
+    # 0.1 reproduces the paper's §VI operating point (Table IX).
     sample_rate: float = 0.1
-    sample_strategy: str = "scale"      # scale | item | cell
+    # sampling strategy: scale (SCALESAMPLE) | item (BYITEM) | cell (BYCELL).
+    sample_strategy: str = "scale"
+    # SCALESAMPLE floor (items per source): every source keeps ≥ this many
+    # sampled items when it has them. 4 is the paper's N (§VI-E).
     min_per_source: int = 4
+    # RNG seed for the item sample — fixed so detection runs are replayable.
     sample_seed: int = 1
-    rho: float = 1.0                    # incremental: big-change threshold
+    # incremental: |ΔM̂| (log-odds units) above which an entry is treated as
+    # a big change and replayed exactly (§V-A; 1.0 ≈ the paper's ρ).
+    rho: float = 1.0
+    # incremental: |ΔA| accuracy drift that forces a pair rescore
+    # unconditionally (fraction, 0..1). 0.2 is the paper's ρ_acc.
     rho_acc: float = 0.2
+    # sample_verify: initial half-width (log-odds units, sampled-score scale)
+    # of the candidate net below the copying boundary z = 0. 2.0 ≈ the
+    # decision band where sampling noise plausibly hides a true pair.
+    verify_slack: float = 2.0
+    # sample_verify: multiplicative step of the recall-slack sweep (> 1).
+    verify_slack_growth: float = 1.6
+    # sample_verify: stop widening when the next shell of near-miss pairs
+    # holds fewer than this fraction of the current candidate set — the
+    # empirical bound on pairs the net might still miss.
+    verify_miss_frac: float = 0.02
 
 
 class DetectionEngine:
@@ -103,6 +145,7 @@ class DetectionEngine:
         self.last_stats: dict = {}
         self._mesh: Optional[Mesh] = None
         self._inc_state = None
+        self._last_considered: Optional[np.ndarray] = None
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -129,8 +172,23 @@ class DetectionEngine:
         ds: ClaimsDataset,
         p_claim: np.ndarray,
         index: InvertedIndex | None = None,
-        items: np.ndarray | None = None,      # sampled mode: explicit subset
+        items: np.ndarray | None = None,
     ) -> DetectionResult:
+        """Run one detection pass in this engine's mode (DESIGN.md §3).
+
+        Args:
+          ds: the (S, D) claims dataset.
+          p_claim: (S, D) float32 — truth probability of the value each
+            source provides per item (equal across providers of one value;
+            ignored where values[s, d] < 0).
+          index: a prebuilt ``InvertedIndex`` to reuse (modes that index);
+            None → built here.
+          items: sampled/sample_verify only — an explicit item-column subset
+            overriding the configured sampler.
+
+        Returns a ``DetectionResult`` over every ordered source pair;
+        per-run diagnostics land in ``self.last_stats``.
+        """
         opt = self.options
         if self.mode == "pairwise":
             return pairwise_detect(ds, p_claim, self.cfg)
@@ -157,6 +215,8 @@ class DetectionEngine:
                 items = self._sample_items(ds)
             sub = ds.subset_items(items)
             return self._detect_tiled(sub, p_claim[:, items])
+        if self.mode == "sample_verify":
+            return self._detect_sample_verify(ds, p_claim, items=items)
         return self._detect_tiled(ds, p_claim, index=index)
 
     def _sample_items(self, ds: ClaimsDataset) -> np.ndarray:
@@ -168,6 +228,104 @@ class DetectionEngine:
         return scale_sample(ds, opt.sample_rate,
                             min_per_source=opt.min_per_source,
                             seed=opt.sample_seed)
+
+    # -- sample-then-verify (§VI sampling + exact candidate rescore) --------
+
+    def _detect_sample_verify(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        items: np.ndarray | None = None,
+    ) -> DetectionResult:
+        """SCALESAMPLE for candidate-pair discovery, exact rescore to decide.
+
+        DESIGN.md §4: the sampled tiled pass is only a *net* — every pair
+        whose sampled decision margin lands within the recall slack of the
+        copying boundary becomes a candidate, the slack widening until the
+        shell of near-miss pairs thins below ``verify_miss_frac`` (the
+        empirical bound on pairs the net might still miss). Candidates are
+        then rescored exactly on the FULL dataset with the gathered dense
+        rescore op (``rescore_pairs_exact``), so the final decision of every
+        candidate pair provably equals ``index_detect_exact`` — sampling
+        error survives only as recall loss of the net, never as a wrong
+        decision on a discovered pair.
+        """
+        t0 = time.perf_counter()
+        cfg = self.cfg
+        opt = self.options
+        S = ds.n_sources
+        if items is None:
+            items = self._sample_items(ds)
+
+        # -- 1. cheap discovery: the tiled path on the sampled columns ------
+        sub = ds.subset_items(items)
+        sampled = self._detect_tiled(sub, p_claim[:, items])
+        sampled_stats = self.last_stats
+        considered_s = self._last_considered
+
+        # -- 2. recall-slack sweep: widen the candidate net -----------------
+        # z < 0 ⇔ independent; sampling noise can push a true copying pair
+        # below 0, so candidates are all pairs with z ≥ -slack. The sweep
+        # widens slack geometrically until the next shell (-g·slack, -slack]
+        # is nearly empty relative to the net — once the margin distribution
+        # has a gap there, further widening buys ~no recall but rescores
+        # strictly more pairs.
+        z = (np.log(cfg.alpha / cfg.beta)
+             + np.logaddexp(sampled.c_fwd, sampled.c_fwd.T))
+        tri = np.triu(np.ones((S, S), bool), 1) & considered_s
+        slack = float(opt.verify_slack)
+        growth = max(float(opt.verify_slack_growth), 1.0 + 1e-6)
+        z_floor = float(z[tri].min()) if tri.any() else 0.0
+        sweep_rounds = 1
+        while True:
+            cand = tri & (z >= -slack)
+            shell = tri & (z >= -slack * growth) & (z < -slack)
+            n_cand, n_shell = int(cand.sum()), int(shell.sum())
+            if (n_shell <= opt.verify_miss_frac * max(n_cand, 1)
+                    or -slack <= z_floor):
+                break
+            slack *= growth
+            sweep_rounds += 1
+
+        # -- 3. exact gathered rescore of only the candidate pairs ----------
+        pi, pj = np.nonzero(cand)
+        c_fwd = np.zeros((S, S), np.float32)
+        rescore_pairs_exact(ds, p_claim, cfg, pi, pj, c_fwd)
+        considered = np.zeros((S, S), bool)
+        considered[pi, pj] = considered[pj, pi] = True
+
+        copying = decide_copying_np(c_fwd, c_fwd.T, cfg) & considered
+        pr_ind = np.where(considered,
+                          posterior_independence_np(c_fwd, c_fwd.T, cfg),
+                          1.0).astype(np.float32)
+        np.fill_diagonal(pr_ind, 1.0)
+        np.fill_diagonal(copying, False)
+        self._last_considered = considered     # == the candidate set
+
+        prov = ds.provided_mask
+        values_exact = (int(np.count_nonzero(prov[pi] & prov[pj]))
+                        if len(pi) else 0)
+        counter = ComputeCounter(
+            pairs_considered=n_cand,
+            shared_values_examined=(
+                sampled.counter.shared_values_examined + values_exact),
+            score_computations=(
+                sampled.counter.score_computations + 2 * values_exact),
+            index_entries=sampled.counter.index_entries,
+        )
+        self.last_stats = {
+            "items_sampled": int(len(items)),
+            "item_rate": round(len(items) / max(ds.n_items, 1), 4),
+            "slack_final": round(slack, 3),
+            "sweep_rounds": sweep_rounds,
+            "candidate_pairs": n_cand,
+            "shell_pairs": n_shell,
+            "sampled_copying_pairs": len(sampled.copying_pairs()),
+            "sampled_stats": sampled_stats,
+        }
+        return DetectionResult(c_fwd=c_fwd, pr_independent=pr_ind,
+                               copying=copying, counter=counter,
+                               wall_time_s=time.perf_counter() - t0)
 
     # -- the tiled + sharded production path --------------------------------
 
@@ -310,16 +468,14 @@ class DetectionEngine:
                              opt.rescore_margin + np.maximum(err, err.T))
         near &= np.triu(np.ones_like(near), 1).astype(bool)
         pi, pj = np.nonzero(near)
-        n_rescored = len(pi)
-        if n_rescored:
-            c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
-            c_fwd[pj, pi] = pair_scores_subset(ds, p_claim, cfg, pj, pi)
+        n_rescored = rescore_pairs_exact(ds, p_claim, cfg, pi, pj, c_fwd)
 
         pr_ind = posterior_independence_np(c_fwd, c_fwd.T, cfg)
         copying = decide_copying_np(c_fwd, c_fwd.T, cfg) & considered
         pr_ind = np.where(considered, pr_ind, 1.0).astype(np.float32)
         np.fill_diagonal(pr_ind, 1.0)
         np.fill_diagonal(copying, False)
+        self._last_considered = considered
 
         # semantic (paper-metric) accounting, identical to the exact INDEX
         iu = np.triu_indices(S, 1)

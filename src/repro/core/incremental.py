@@ -69,6 +69,39 @@ class IncrementalState:
     pass1_settled: float = 1.0
 
 
+def rescore_pairs_exact(
+    ds: ClaimsDataset,
+    p_claim: np.ndarray,
+    cfg: CopyConfig,
+    pi: np.ndarray,
+    pj: np.ndarray,
+    c_fwd: np.ndarray,
+) -> int:
+    """Gathered dense exact rescore of an explicit flip-candidate pair list.
+
+    This is the batched op DESIGN.md §2.3 collapses the paper's §V
+    compensation passes into, shared by every caller that must replace
+    approximate pair scores with exact ones: INCREMENTAL's flip candidates,
+    the engine's error-bounded near-threshold pairs (DESIGN.md §3 step 4),
+    and SAMPLE-THEN-VERIFY's candidate set (DESIGN.md §4).
+
+    Args:
+      ds, p_claim, cfg: the *full* dataset, per-claim truth probabilities
+        (S, D), and model config the exact scores are computed against.
+      pi, pj: (P,) int arrays of source indices — the unordered pairs to
+        rescore (each listed once; both orientations are written).
+      c_fwd: (S, S) float32 C→ matrix, mutated in place at [pi, pj] and
+        [pj, pi] with exact Eq. 2–8 scores over all shared items.
+
+    Returns the number of pairs rescored (0 for an empty list).
+    """
+    if len(pi) == 0:
+        return 0
+    c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
+    c_fwd[pj, pi] = pair_scores_subset(ds, p_claim, cfg, pj, pi)
+    return len(pi)
+
+
 def make_incremental_state(
     ds: ClaimsDataset, p_claim: np.ndarray, cfg: CopyConfig,
     n_buckets: int = 64,
@@ -179,9 +212,7 @@ def incremental_detect(
     # ---- passes 2–3 collapsed: exact rescore of candidates ---------------
     c_fwd = c_base.astype(np.float32)
     pi, pj = np.nonzero(candidates)
-    if len(pi):
-        c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
-        c_fwd[pj, pi] = pair_scores_subset(ds, p_claim, cfg, pj, pi)
+    if rescore_pairs_exact(ds, p_claim, cfg, pi, pj, c_fwd):
         values_examined += int(state.l_counts[pi, pj].sum())
     np.fill_diagonal(c_fwd, 0.0)
 

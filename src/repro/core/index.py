@@ -43,13 +43,16 @@ class InvertedIndex:
 
     @property
     def n_entries(self) -> int:
+        """|E| — number of shared-value entries (columns of V)."""
         return self.V.shape[1]
 
     @property
     def n_sources(self) -> int:
+        """|S| — number of sources (rows of V)."""
         return self.V.shape[0]
 
     def providers(self, e: int) -> np.ndarray:
+        """S̄(E) — indices of the sources providing the value of entry ``e``."""
         return np.nonzero(self.V[:, e])[0]
 
 
@@ -224,6 +227,7 @@ class BucketedIndex:
 
     @property
     def n_buckets(self) -> int:
+        """K — number of contiguous entry buckets."""
         return len(self.p_hat)
 
 

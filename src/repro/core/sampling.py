@@ -16,6 +16,16 @@ from repro.core.types import ClaimsDataset
 
 
 def sample_by_item(ds: ClaimsDataset, rate: float, seed: int = 0) -> np.ndarray:
+    """BYITEM (SAMPLE1): uniform random item columns at a fixed rate.
+
+    Args:
+      ds: the (S, D) claims dataset.
+      rate: fraction of the D item columns to keep (at least 1 is kept).
+      seed: RNG seed — the sample is a pure function of (ds shape, rate,
+        seed), so detection runs are replayable (property-tested).
+
+    Returns sorted unique item indices, shape (max(round(rate·D), 1),).
+    """
     rng = np.random.default_rng(seed)
     D = ds.n_items
     k = max(int(round(rate * D)), 1)
@@ -23,6 +33,17 @@ def sample_by_item(ds: ClaimsDataset, rate: float, seed: int = 0) -> np.ndarray:
 
 
 def sample_by_cell(ds: ClaimsDataset, cell_fraction: float, seed: int = 0) -> np.ndarray:
+    """BYCELL (SAMPLE2): add random items until enough cells are covered.
+
+    Args:
+      ds: the (S, D) claims dataset.
+      cell_fraction: target fraction of non-empty (source, item) cells the
+        sampled columns must cover (≥, by construction).
+      seed: RNG seed (deterministic, as for ``sample_by_item``).
+
+    Returns sorted unique item indices (size data-dependent: long-tail data
+    needs few dense columns, uniform data ≈ cell_fraction·D).
+    """
     rng = np.random.default_rng(seed)
     prov = ds.provided_mask
     total_cells = int(prov.sum())

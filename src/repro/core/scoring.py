@@ -48,6 +48,7 @@ def score_same(p, a_copier, a_source, s, n):
 
 
 def score_same_np(p, a_copier, a_source, s, n):
+    """NumPy twin of ``score_same`` (host-side index/bound bookkeeping)."""
     ratio = (p * a_source + (1 - p) * (1 - a_source)) / (
         p * a_copier * a_source + (1 - p) * (1 - a_copier) * (1 - a_source) / n
     )
@@ -67,6 +68,8 @@ def decide_copying(c_fwd, c_bwd, cfg: CopyConfig):
 
 
 def posterior_independence_np(c_fwd, c_bwd, cfg: CopyConfig):
+    """NumPy twin of ``posterior_independence``; clips z to ±60 before the
+    sigmoid so float32 never overflows. (S, S) in → (S, S) float32 out."""
     z = np.log(cfg.alpha / cfg.beta) + np.logaddexp(c_fwd, c_bwd)
     out = np.empty_like(z, dtype=np.float64)
     np.clip(z, -60.0, 60.0, out=out)
@@ -74,6 +77,7 @@ def posterior_independence_np(c_fwd, c_bwd, cfg: CopyConfig):
 
 
 def decide_copying_np(c_fwd, c_bwd, cfg: CopyConfig):
+    """NumPy twin of ``decide_copying``: bool matrix, True ⟺ Pr(⊥|Φ) ≤ .5."""
     return (np.log(cfg.alpha / cfg.beta) + np.logaddexp(c_fwd, c_bwd)) >= 0.0
 
 

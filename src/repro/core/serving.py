@@ -1,0 +1,380 @@
+"""Batched copy-detection serving (DESIGN.md §5).
+
+A detection service answers *queries against a shared corpus*: each request
+carries a handful of query sources — dataset deltas (new or re-crawled
+sources) or per-item queries (sparse rows claiming only the items the caller
+cares about) — and asks which corpus sources they copy from. Running the
+`DetectionEngine` once per request wastes the engine's fixed costs (index
+build, bucketize, tile pruning, kernel dispatch) on a tile grid that is
+~identical across requests.
+
+``serve_batch`` instead stacks every pending request's rows under the corpus
+and runs ONE tiled engine pass over the union, then scatters each request's
+row-slice of the decision matrix back into its own response. This is sound
+because a pair's exact-INDEX decision is intrinsic to the two sources'
+claims (DESIGN.md §5): co-batched strangers can create new index entries,
+but those entries only ever contribute to pairs that actually share the
+value, so batched decisions equal the per-request ones — asserted by
+tests/test_serving.py and re-checked by the `serve` benchmark in CI.
+Cross-request pairs are computed (they ride along in the same tiles for
+free) but never reported: each response sees only its rows vs the corpus
+plus its own intra-request block.
+
+The invariant is about *decisions*: ``copying``/``intra_copying`` are
+batch-independent. The continuous fields (``c_fwd``, ``pr_independent``)
+are the engine's bucketed approximation, and the bucket p̂-quantiles shift
+with the union index — away from the decision boundary (where the engine
+never exact-rescores) they can differ between batch compositions. Treat
+them as decision-grade diagnostics, not calibrated evidence.
+
+``DetectionService`` is the async layer on top: a worker thread drains a
+bounded queue into ``serve_batch`` calls, ``submit`` hands back a
+``concurrent.futures.Future`` and *blocks* once ``max_pending_rows`` query
+rows are queued (backpressure — the caller slows down instead of the queue
+growing without bound). ``launch/serve.py --task detect`` is the CLI on top
+of this module.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.engine import DetectionEngine
+from repro.core.types import ClaimsDataset, CopyConfig
+
+
+class ServiceOverloaded(TimeoutError):
+    """Raised by ``DetectionService.submit`` when backpressure wins: the
+    pending-row budget stayed full for the whole submit timeout."""
+
+
+@dataclass
+class DetectRequest:
+    """One detection query: ``values.shape[0]`` query sources vs the corpus.
+
+    Query rows must use the corpus's value coding — ``values[r, d]`` equal to
+    a corpus source's code on item d means "the same value" (−1 = item not
+    claimed; a per-item query is simply a row that claims few items).
+    """
+
+    rid: int                      # caller-chosen id, echoed on the response
+    values: np.ndarray            # (q, D) int32 — same item axis as the corpus
+    accuracy: np.ndarray          # (q,) float32 — accuracy estimate per row
+    p_claim: np.ndarray           # (q, D) float32 — truth prob of each claim
+
+    def __post_init__(self):
+        self.values = np.asarray(self.values, dtype=np.int32)
+        self.accuracy = np.asarray(self.accuracy, dtype=np.float32)
+        self.p_claim = np.asarray(self.p_claim, dtype=np.float32)
+        if self.values.ndim != 2 or self.p_claim.shape != self.values.shape:
+            raise ValueError("values/p_claim must both be (q, D)")
+        if self.accuracy.shape != (self.values.shape[0],):
+            raise ValueError("accuracy must be (q,)")
+
+    @property
+    def n_rows(self) -> int:
+        """Number of query sources in this request."""
+        return self.values.shape[0]
+
+
+@dataclass
+class DetectResponse:
+    """Per-request slice of one batched engine pass.
+
+    Row r of every matrix is the request's r-th query source; columns of the
+    ``*_vs_corpus`` fields are corpus sources. Pairs with other requests in
+    the same batch are never included. ``copying``/``intra_copying`` are
+    batch-independent (equal to a solo engine pass); ``c_fwd`` and
+    ``pr_independent`` carry the bucketed approximation away from the
+    decision boundary and can vary with batch composition (module docstring).
+    """
+
+    rid: int
+    copying: np.ndarray           # (q, S_corpus) bool — query copies corpus?
+    pr_independent: np.ndarray    # (q, S_corpus) Pr(⊥ | Φ), approximate
+    c_fwd: np.ndarray             # (q, S_corpus) C→ (bucketed approximation)
+    intra_copying: np.ndarray     # (q, q) bool — within-request pairs
+    batch_requests: int = 1       # how many requests shared the engine pass
+    batch_rows: int = 0           # total query rows in that pass
+    engine_wall_s: float = 0.0    # wall time of the shared pass
+    latency_s: float = 0.0        # submit → result (filled by the service)
+
+    def copying_sources(self, row: int = 0) -> np.ndarray:
+        """Corpus source indices the given query row is detected to copy."""
+        return np.nonzero(self.copying[row])[0]
+
+
+def serve_batch(
+    base: ClaimsDataset,
+    base_p: np.ndarray,
+    engine: DetectionEngine,
+    requests: Sequence[DetectRequest],
+) -> list[DetectResponse]:
+    """Answer a batch of requests with ONE tiled engine pass (DESIGN.md §5).
+
+    Args:
+      base: the shared corpus (S, D).
+      base_p: (S, D) per-claim truth probabilities of the corpus.
+      engine: any stateless-mode DetectionEngine (``bucketed`` for exact
+        serving, ``sample_verify`` for sampled serving at scale);
+        ``incremental`` is rejected — its bookkeeping assumes a fixed source
+        axis, which batching changes every call.
+      requests: the pending requests; their rows are stacked under the
+        corpus rows in order.
+
+    Returns one ``DetectResponse`` per request, in request order.
+    """
+    if engine.mode == "incremental":
+        raise ValueError("serve_batch requires a stateless engine mode")
+    if not requests:
+        return []
+    D = base.n_items
+    for r in requests:
+        if r.values.shape[1] != D:
+            raise ValueError(
+                f"request {r.rid}: {r.values.shape[1]} items, corpus has {D}")
+    S0 = base.n_sources
+    values = np.concatenate([base.values] + [r.values for r in requests])
+    acc = np.concatenate([base.accuracy] + [r.accuracy for r in requests])
+    p = np.concatenate([base_p] + [r.p_claim for r in requests])
+    union = ClaimsDataset(values=values, accuracy=acc)
+
+    res = engine.detect(union, p)
+
+    out = []
+    off = S0
+    n_rows = sum(r.n_rows for r in requests)
+    for r in requests:
+        rows = slice(off, off + r.n_rows)
+        out.append(DetectResponse(
+            rid=r.rid,
+            copying=res.copying[rows, :S0].copy(),
+            pr_independent=res.pr_independent[rows, :S0].copy(),
+            c_fwd=res.c_fwd[rows, :S0].copy(),
+            intra_copying=res.copying[rows, rows].copy(),
+            batch_requests=len(requests),
+            batch_rows=n_rows,
+            engine_wall_s=res.wall_time_s,
+        ))
+        off += r.n_rows
+    return out
+
+
+@dataclass
+class ServiceStats:
+    """Counters the service accumulates across batches (read via .stats)."""
+
+    requests: int = 0
+    batches: int = 0
+    rows: int = 0
+    rejected: int = 0             # submits that timed out on backpressure
+
+    @property
+    def mean_batch(self) -> float:
+        """Mean requests per engine pass (1.0 ⇒ batching never kicked in)."""
+        return self.requests / self.batches if self.batches else 0.0
+
+
+class DetectionService:
+    """Queue + worker thread that batches requests through one engine.
+
+    Lifecycle::
+
+        svc = DetectionService(corpus, p, cfg, max_batch_requests=8)
+        with svc:                       # starts the worker thread
+            futs = [svc.submit(r) for r in reqs]   # blocks when queue full
+            results = [f.result() for f in futs]
+
+    ``submit`` applies backpressure: once ``max_pending_rows`` query rows are
+    waiting, it blocks (up to ``timeout``) until the worker drains the queue,
+    then raises ``ServiceOverloaded`` — load sheds at the edge instead of
+    accumulating unbounded memory. Without the context manager (or
+    ``start()``), ``flush()`` drains the queue synchronously in the caller's
+    thread — the deterministic path tests and benchmarks use.
+    """
+
+    def __init__(
+        self,
+        base: ClaimsDataset,
+        base_p: np.ndarray,
+        cfg: CopyConfig,
+        *,
+        mode: str = "bucketed",
+        max_batch_requests: int = 8,
+        max_pending_rows: int = 256,
+        **engine_options,
+    ):
+        """Build the service around a fresh engine.
+
+        max_batch_requests: requests folded into one engine pass (the bench
+          sweeps this; ≥ 3× throughput at 8 on the serve benchmark).
+        max_pending_rows: backpressure bound on queued query rows.
+        engine_options: forwarded to ``EngineOptions`` (tile, devices, ...).
+        """
+        if mode == "incremental":
+            raise ValueError(
+                "DetectionService requires a stateless engine mode "
+                "(incremental bookkeeping assumes a fixed source axis)")
+        self.base = base
+        self.base_p = np.asarray(base_p, dtype=np.float32)
+        self.engine = DetectionEngine(cfg, mode=mode, **engine_options)
+        self.max_batch_requests = int(max_batch_requests)
+        self.max_pending_rows = int(max_pending_rows)
+        self.stats = ServiceStats()
+        self._pending: deque = deque()   # (request, future, t_submit)
+        self._pending_rows = 0
+        self._cv = threading.Condition()
+        self._worker: Optional[threading.Thread] = None
+        self._stopping = False
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, request: DetectRequest,
+               timeout: Optional[float] = 30.0) -> Future:
+        """Enqueue a request; returns a Future resolving to DetectResponse.
+
+        Blocks while the pending-row budget is full (backpressure); raises
+        ``ServiceOverloaded`` if it stays full past ``timeout`` seconds, and
+        ``ValueError`` for a request that could never fit the budget.
+        """
+        if request.n_rows > self.max_pending_rows:
+            raise ValueError(
+                f"request {request.rid}: {request.n_rows} rows exceeds "
+                f"max_pending_rows={self.max_pending_rows}")
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cv:
+            if self._stopping:
+                # after the worker's final drain a queued entry would never
+                # resolve — refuse instead of stranding the future
+                raise RuntimeError("service is stopping; submit rejected")
+            while self._pending_rows + request.n_rows > self.max_pending_rows:
+                wait = (None if deadline is None
+                        else deadline - time.monotonic())
+                if wait is not None and wait <= 0:
+                    self.stats.rejected += 1
+                    raise ServiceOverloaded(
+                        f"queue full ({self._pending_rows} rows pending)")
+                self._cv.wait(wait)
+                if self._stopping:
+                    # stop() drained the queue while we waited — enqueueing
+                    # now would strand the future past the worker's exit
+                    raise RuntimeError("service is stopping; submit rejected")
+            fut: Future = Future()
+            self._pending.append((request, fut, time.monotonic()))
+            self._pending_rows += request.n_rows
+            self._cv.notify_all()
+        return fut
+
+    # -- draining -----------------------------------------------------------
+
+    def _take_batch(self) -> list:
+        """Pop up to max_batch_requests pending entries (caller holds _cv)."""
+        batch = []
+        while self._pending and len(batch) < self.max_batch_requests:
+            entry = self._pending.popleft()
+            self._pending_rows -= entry[0].n_rows
+            batch.append(entry)
+        if batch:
+            self._cv.notify_all()        # wake blocked submitters
+        return batch
+
+    @staticmethod
+    def _resolve(fut: Future, *, result=None, exc=None) -> None:
+        """Resolve a future, tolerating client-side cancellation — a
+        cancelled future must never take down the worker thread."""
+        if not fut.set_running_or_notify_cancel():
+            return                                   # client cancelled it
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(result)
+
+    def _run_batch(self, batch: list) -> None:
+        """One serve_batch call; resolve (or fail) every future in it."""
+        reqs = [entry[0] for entry in batch]
+        try:
+            responses = serve_batch(self.base, self.base_p, self.engine, reqs)
+        except Exception as exc:                      # noqa: BLE001
+            for _, fut, _ in batch:
+                self._resolve(fut, exc=exc)
+            return
+        done = time.monotonic()
+        for (_, fut, t_sub), resp in zip(batch, responses):
+            resp.latency_s = done - t_sub
+            self._resolve(fut, result=resp)
+        self.stats.requests += len(batch)
+        self.stats.batches += 1
+        self.stats.rows += sum(r.n_rows for r in reqs)
+
+    def flush(self) -> int:
+        """Synchronously drain the queue in the caller's thread.
+
+        Returns the number of requests served. Only valid when no worker
+        thread is running (deterministic tests / benchmarks) — the engine is
+        stateful per pass, so two threads must never drive it concurrently."""
+        if self._worker is not None and self._worker.is_alive():
+            raise RuntimeError(
+                "flush() while the worker thread is running would drive the "
+                "engine from two threads; use the futures instead")
+        served = 0
+        while True:
+            with self._cv:
+                batch = self._take_batch()
+            if not batch:
+                return served
+            self._run_batch(batch)
+            served += len(batch)
+
+    # -- worker lifecycle ---------------------------------------------------
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._pending and not self._stopping:
+                    self._cv.wait()
+                if self._stopping and not self._pending:
+                    return
+                batch = self._take_batch()
+            if batch:
+                self._run_batch(batch)
+
+    def start(self) -> "DetectionService":
+        """Start the background worker (idempotent)."""
+        if self._worker is None or not self._worker.is_alive():
+            self._stopping = False
+            self._worker = threading.Thread(
+                target=self._worker_loop, name="detection-service", daemon=True)
+            self._worker.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain remaining requests, then join the worker."""
+        if self._worker is None:
+            self.flush()
+            return
+        with self._cv:
+            self._stopping = True
+            self._cv.notify_all()
+        self._worker.join()
+        self._worker = None
+        with self._cv:
+            # back to idle under the lock, so a submitter that raced the
+            # shutdown either saw _stopping (and raised) or lands in the
+            # defined idle state: enqueued for a later flush()/start()
+            self._stopping = False
+
+    def __enter__(self) -> "DetectionService":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+__all__ = ["DetectRequest", "DetectResponse", "DetectionService",
+           "ServiceOverloaded", "ServiceStats", "serve_batch"]

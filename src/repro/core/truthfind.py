@@ -48,6 +48,12 @@ class ValueGroups:
 
 
 def build_value_groups(ds: ClaimsDataset) -> ValueGroups:
+    """Group every claim by (item, value) — singletons included.
+
+    Unlike the inverted index (shared values only, §III), truth finding
+    votes over ALL distinct values, so this builds the full (S, E_all)
+    incidence plus the (S, D) claim→entry map used to expand entry
+    probabilities back to per-claim probabilities each round."""
     values = ds.values
     S, D = values.shape
     prov = values >= 0
@@ -127,6 +133,8 @@ DETECTORS: dict[str, Callable] = {
 
 @dataclass
 class FusionResult:
+    """Converged truth-finding state plus per-round history/diagnostics."""
+
     accuracy: np.ndarray            # (S,) final accuracies
     p_entry: np.ndarray             # (E_all,) final value probabilities
     p_claim: np.ndarray             # (S, D) final claim probabilities

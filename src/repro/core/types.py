@@ -31,6 +31,7 @@ class CopyConfig:
 
     @property
     def beta(self) -> float:
+        """β = 1 − 2α: a-priori probability the pair is independent (§II-A)."""
         return 1.0 - 2.0 * self.alpha
 
     @property
@@ -49,6 +50,7 @@ class CopyConfig:
         return float(np.log(1.0 - self.s))
 
     def replace(self, **kw) -> "CopyConfig":
+        """A copy of this config with the given fields replaced."""
         return dataclasses.replace(self, **kw)
 
 
@@ -70,14 +72,17 @@ class ClaimsDataset:
 
     @property
     def n_sources(self) -> int:
+        """|S| — number of sources (rows)."""
         return self.values.shape[0]
 
     @property
     def n_items(self) -> int:
+        """|D| — number of data items (columns)."""
         return self.values.shape[1]
 
     @property
     def provided_mask(self) -> np.ndarray:
+        """(S, D) bool — True where the source provides a value."""
         return self.values >= 0
 
     @property
@@ -97,6 +102,11 @@ class ClaimsDataset:
         return p
 
     def subset_items(self, item_idx: np.ndarray) -> "ClaimsDataset":
+        """The dataset restricted to the given item columns (sources kept).
+
+        This is the sampling projection of §VI: detection on the subset is
+        the cheap candidate-discovery pass of ``sampled``/``sample_verify``
+        (DESIGN.md §4)."""
         return ClaimsDataset(
             values=self.values[:, item_idx],
             accuracy=self.accuracy.copy(),
@@ -117,9 +127,11 @@ class DetectionResult:
 
     @property
     def c_bwd(self) -> np.ndarray:
+        """C← — evidence that j copies from i (the transpose, §II symmetry)."""
         return self.c_fwd.T
 
     def copying_pairs(self) -> set:
+        """The detected unordered copying pairs as a set of (i, j), i < j."""
         s = set()
         idx = np.argwhere(self.copying)
         for i, j in idx:

@@ -1,3 +1,5 @@
+"""Pallas TPU kernels with jnp oracles: copyscore (DESIGN.md §3.3) and
+flash attention; ``repro.kernels.ops`` holds the dispatching wrappers."""
 from repro.kernels.ops import copyscore, copyscore_tile_fused, flash_attention
 
 __all__ = ["copyscore", "copyscore_tile_fused", "flash_attention"]

@@ -218,6 +218,11 @@ def _bwd_dkv_kernel(q_ref, k_ref, v_ref, do_ref, lse_ref, delta_ref,
 )
 def flash_attention_bwd(q, k, v, o, lse, do, *, causal=True, sm_scale=None,
                         window=None, block_q=128, block_k=128, interpret=False):
+    """Flash-attention backward pass: (dq, dk, dv) from the saved (o, lse).
+
+    Shapes mirror the forward: q (B, Hq, S, D); k, v (B, Hkv, S, D) with
+    Hq % Hkv == 0 (GQA); do like o. Three pallas_calls (dq; dk+dv fused)
+    over the same (batch·head, q-block, k-block) grid as the forward."""
     B, Hq, Sq, D = q.shape
     _, Hkv, Sk, _ = k.shape
     group = Hq // Hkv

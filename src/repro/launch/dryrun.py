@@ -180,7 +180,8 @@ def build_serve(cfg, shape, mesh, prefill=False):
 
 def build_copyscore(mesh, n_sources=1_048_576 // 8, n_entries=2_097_152 // 4,
                     n_buckets=16):
-    """The paper's own workload on the production mesh (DESIGN.md §5):
+    """The paper's own workload on the production mesh (launch/mesh.py;
+    the 2-D pair-space decomposition of DESIGN.md §3.3):
     distributed bucketed pair scoring, entries sharded over pods.
     int8 incidence + K=16 buckets per §Perf H3 (9.73 s → 0.48 s memory term)."""
     from repro.core.distributed import distributed_pair_scores_lowerable

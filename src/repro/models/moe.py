@@ -5,7 +5,7 @@ positional slots within their expert's capacity buffer via a cumulative
 count; overflow tokens are dropped (capacity_factor controls slack). The
 expert loop is a ``lax.scan`` so activation memory is one expert's buffer
 (C × d_model), not E of them — this is what keeps 1M-token MoE steps inside
-HBM at the dry-run shapes (DESIGN.md §5: "TP-experts", tokens stay
+HBM at the dry-run shapes ("TP-experts": tokens stay
 data-sharded, expert FFN dims are tensor-sharded; no all-to-all needed).
 """
 from __future__ import annotations

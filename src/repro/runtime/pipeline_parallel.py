@@ -5,7 +5,7 @@ Microbatches stream through: at tick t, stage s computes microbatch t−s and
 passes its activation to stage s+1 with ``collective_permute``; total ticks =
 n_micro + n_stages − 1 (the classic bubble). This is the cross-pod option
 for models whose layer stacks exceed one pod's HBM; the default multi-pod
-config uses the pod axis as DP instead (DESIGN.md §5).
+config uses the pod axis as DP instead (launch/mesh.py).
 """
 from __future__ import annotations
 

@@ -125,6 +125,32 @@ def test_tile_pruning_skips_disjoint_groups():
     assert (res.pr_independent[:half_s, half_s:] == 1.0).all()
 
 
+def test_sample_verify_matches_exact_on_candidates(synthetic):
+    """ISSUE 3 tentpole: every candidate pair's decision equals the exact
+    INDEX (the rescore is exact), and nothing outside the net is reported."""
+    ds, p, exact = synthetic
+    eng = DetectionEngine(CFG, mode="sample_verify", sample_rate=0.2)
+    res = eng.detect(ds, p)
+    cand = eng._last_considered
+    st = eng.last_stats
+    assert st["candidate_pairs"] > 0
+    assert st["sweep_rounds"] >= 1
+    np.testing.assert_array_equal(res.copying[cand], exact.copying[cand])
+    assert not res.copying[~cand].any()
+    # the exact rescore happens on the full dataset: scores at candidate
+    # pairs are bit-equal to the exact INDEX's (both use the same kernel)
+    np.testing.assert_allclose(res.c_fwd[cand], exact.c_fwd[cand], atol=1e-4)
+
+
+def test_sample_verify_deterministic(synthetic):
+    """Fixed sample_seed ⇒ identical sample, candidates, and decisions."""
+    ds, p, _ = synthetic
+    r1 = DetectionEngine(CFG, mode="sample_verify").detect(ds, p)
+    r2 = DetectionEngine(CFG, mode="sample_verify").detect(ds, p)
+    np.testing.assert_array_equal(r1.copying, r2.copying)
+    np.testing.assert_array_equal(r1.c_fwd, r2.c_fwd)
+
+
 def test_sampled_mode_equals_tiled_on_subset(synthetic):
     ds, p, _ = synthetic
     items = np.arange(0, ds.n_items, 3)
@@ -198,3 +224,54 @@ def test_sharded_engine_matches_single_device():
     assert out["dec_18"] and out["dec_exact"]
     # triangular schedule holds on the sharded mesh too
     assert out["tiles_kept"] <= out["tri_bound"]
+
+
+SAMPLE_VERIFY_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import CopyConfig, DetectionEngine
+    from repro.data.claims import SyntheticSpec, oracle_claim_probs, synthetic_claims
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        exact = DetectionEngine(cfg, mode="exact").detect(sc.dataset, p)
+        for n_dev in (1, 8):
+            eng = DetectionEngine(cfg, mode="sample_verify", devices=n_dev,
+                                  tile=64, sample_rate=0.15)
+            res = eng.detect(sc.dataset, p)
+            cand = eng._last_considered
+            out[f"S{S}_dev{n_dev}"] = {
+                "agree": bool((res.copying[cand] == exact.copying[cand]).all()),
+                "none_outside": bool(not res.copying[~cand].any()),
+                "n_cand": int(eng.last_stats["candidate_pairs"]),
+            }
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_sample_verify_matrix_sources_devices():
+    """ISSUE 3 acceptance: sample_verify decisions equal index_detect_exact
+    on the candidate set at S ∈ {64, 512} × {1, 8} devices."""
+    proc = subprocess.run([sys.executable, "-c", SAMPLE_VERIFY_SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert set(out) == {"S64_dev1", "S64_dev8", "S512_dev1", "S512_dev8"}
+    for combo, r in out.items():
+        assert r["agree"], f"{combo}: decisions diverged from exact"
+        assert r["none_outside"], combo
+        assert r["n_cand"] > 0, combo

@@ -1,7 +1,11 @@
-"""Sampling strategies (§VI-E, Table IX) + FAGININPUT baseline (Table X)."""
+"""Sampling strategies (§VI-E, Table IX) + FAGININPUT baseline (Table X),
+plus the sample-then-verify properties of ISSUE 3 (determinism / rate /
+exactness on the candidate set)."""
 import numpy as np
+from hypothesis import given, settings, strategies as st
 
-from repro.core.bucketed import bucketed_index_detect
+from repro.core.bucketed import bucketed_index_detect, index_detect_exact
+from repro.core.engine import DetectionEngine
 from repro.core.fagin import fagin_input
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.types import CopyConfig
@@ -14,6 +18,31 @@ from repro.data.claims import (
 )
 
 CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+# module-level caches (plain functions, not fixtures: hypothesis @given
+# redraws examples inside one test call, where function fixtures misbehave)
+_PROP_CACHE: dict = {}
+
+
+def _prop_dataset():
+    """Small long-tail dataset reused across property examples."""
+    if "ds" not in _PROP_CACHE:
+        _PROP_CACHE["ds"] = synthetic_claims(SyntheticSpec(
+            n_sources=60, n_items=600, coverage="book", n_cliques=4,
+            clique_size=3, clique_items=10, seed=0)).dataset
+    return _PROP_CACHE["ds"]
+
+
+def _verify_case():
+    """(dataset, p_claim, exact result) for the sample_verify property."""
+    if "verify" not in _PROP_CACHE:
+        sc = synthetic_claims(SyntheticSpec(
+            n_sources=64, n_items=384, coverage="book", n_cliques=4,
+            clique_size=3, clique_items=12, seed=0))
+        p = oracle_claim_probs(sc)
+        exact = index_detect_exact(sc.dataset, p, CFG)
+        _PROP_CACHE["verify"] = (sc.dataset, p, exact)
+    return _PROP_CACHE["verify"]
 
 
 def test_sample_by_item_rate():
@@ -64,6 +93,46 @@ def test_scale_sample_beats_naive_on_longtail():
             recalls[name].append(len(res.copying_pairs() & planted) / len(planted))
     assert np.mean(recalls["scalesample"]) > np.mean(recalls["byitem"]) + 0.2, recalls
     assert np.mean(recalls["scalesample"]) >= 0.8
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000), rate=st.floats(0.05, 0.5))
+def test_samplers_deterministic_and_respect_rate(seed, rate):
+    """ISSUE 3: every sampler is a pure function of (dataset, rate, seed),
+    returns sorted unique item indices, and honors the requested rate."""
+    ds = _prop_dataset()
+    D = ds.n_items
+    for fn, kw in ((sample_by_item, {}), (sample_by_cell, {}),
+                   (scale_sample, {"min_per_source": 4})):
+        a = fn(ds, rate, seed=seed, **kw)
+        b = fn(ds, rate, seed=seed, **kw)
+        np.testing.assert_array_equal(a, b)          # deterministic
+        assert (np.diff(a) > 0).all()                # sorted, unique
+        assert a.size and 0 <= a[0] and a[-1] < D    # valid item ids
+
+    assert len(sample_by_item(ds, rate, seed=seed)) == max(int(round(rate * D)), 1)
+    # SCALESAMPLE: at least the requested item rate (the ≥N floor only adds)
+    assert len(scale_sample(ds, rate, seed=seed)) >= int(round(rate * D))
+    # BYCELL: non-empty-cell coverage reaches the requested fraction
+    cells = ds.provided_mask[:, sample_by_cell(ds, rate, seed=seed)].sum()
+    assert cells >= rate * ds.provided_mask.sum()
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 1000), rate=st.floats(0.1, 0.4),
+       strategy=st.sampled_from(["scale", "item", "cell"]))
+def test_sample_verify_equals_exact_on_candidates(seed, rate, strategy):
+    """ISSUE 3 tentpole property: whatever the sample (strategy, rate, seed),
+    every candidate pair's final decision equals ``index_detect_exact`` and
+    no pair outside the candidate set is ever reported copying."""
+    ds, p, exact = _verify_case()
+    eng = DetectionEngine(CFG, mode="sample_verify", tile=32,
+                          sample_rate=rate, sample_strategy=strategy,
+                          sample_seed=seed)
+    res = eng.detect(ds, p)
+    cand = eng._last_considered
+    assert (res.copying[cand] == exact.copying[cand]).all()
+    assert not res.copying[~cand].any()
 
 
 def test_fagin_input_materializes_every_pair_score():

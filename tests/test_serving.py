@@ -1,0 +1,170 @@
+"""Batched detection serving (core/serving.py, DESIGN.md §5).
+
+The load-bearing property: folding many requests into one tiled engine pass
+returns exactly the decisions each request would get from its own pass —
+batching is a pure throughput optimization, never a semantic change.
+"""
+import numpy as np
+import pytest
+
+from repro.core import CopyConfig, DetectionEngine
+from repro.core.serving import (
+    DetectRequest,
+    DetectionService,
+    ServiceOverloaded,
+    serve_batch,
+)
+from repro.data.claims import (
+    SyntheticSpec,
+    oracle_claim_probs,
+    synthetic_claims,
+    synthetic_query_rows,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    sc = synthetic_claims(SyntheticSpec(n_sources=80, n_items=400,
+                                        coverage="stock", n_cliques=4, seed=0))
+    return sc, oracle_claim_probs(sc)
+
+
+@pytest.fixture(scope="module")
+def requests(corpus):
+    sc, _ = corpus
+    vals, acc, pq, origins = synthetic_query_rows(sc, 12, seed=1)
+    reqs = [DetectRequest(rid=i, values=vals[3 * i: 3 * i + 3],
+                          accuracy=acc[3 * i: 3 * i + 3],
+                          p_claim=pq[3 * i: 3 * i + 3])
+            for i in range(4)]
+    return reqs, origins
+
+
+def test_batched_equals_per_request(corpus, requests):
+    sc, p = corpus
+    reqs, _ = requests
+    eng = DetectionEngine(CFG, mode="bucketed", tile=64)
+    batched = serve_batch(sc.dataset, p, eng, reqs)
+    assert [b.rid for b in batched] == [r.rid for r in reqs]
+    for req, b in zip(reqs, batched):
+        (s,) = serve_batch(sc.dataset, p, eng, [req])
+        np.testing.assert_array_equal(b.copying, s.copying)
+        np.testing.assert_array_equal(b.intra_copying, s.intra_copying)
+        assert b.copying.shape == (req.n_rows, sc.dataset.n_sources)
+        assert b.batch_requests == len(reqs)
+        assert b.batch_rows == sum(r.n_rows for r in reqs)
+
+
+def test_planted_copiers_detected(corpus, requests):
+    """Query rows generated as copiers of a corpus source are detected."""
+    sc, p = corpus
+    reqs, origins = requests
+    eng = DetectionEngine(CFG, mode="bucketed", tile=64)
+    responses = serve_batch(sc.dataset, p, eng, reqs)
+    hits = planted = 0
+    for i, resp in enumerate(responses):
+        for row in range(reqs[i].n_rows):
+            o = int(origins[3 * i + row])
+            if o >= 0:
+                planted += 1
+                hits += int(resp.copying[row, o])
+    assert planted >= 4
+    assert hits / planted >= 0.75, (hits, planted)
+
+
+def test_serve_batch_rejects_bad_inputs(corpus, requests):
+    sc, p = corpus
+    reqs, _ = requests
+    inc = DetectionEngine(CFG, mode="incremental")
+    with pytest.raises(ValueError, match="stateless"):
+        serve_batch(sc.dataset, p, inc, reqs)
+    eng = DetectionEngine(CFG, mode="bucketed")
+    bad = DetectRequest(rid=9, values=np.full((1, 7), -1, np.int32),
+                        accuracy=np.array([0.5], np.float32),
+                        p_claim=np.zeros((1, 7), np.float32))
+    with pytest.raises(ValueError, match="items"):
+        serve_batch(sc.dataset, p, eng, [bad])
+    assert serve_batch(sc.dataset, p, eng, []) == []
+
+
+def test_service_async_futures(corpus, requests):
+    """Worker thread drains the queue; futures carry per-request slices
+    identical to the synchronous path, and latency is recorded."""
+    sc, p = corpus
+    reqs, _ = requests
+    eng = DetectionEngine(CFG, mode="bucketed", tile=64)
+    singles = [serve_batch(sc.dataset, p, eng, [r])[0] for r in reqs]
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=4)
+    with svc:
+        futs = [svc.submit(r) for r in reqs]
+        outs = [f.result(timeout=300) for f in futs]
+    for b, s in zip(outs, singles):
+        np.testing.assert_array_equal(b.copying, s.copying)
+        assert b.latency_s > 0
+    assert svc.stats.requests == len(reqs)
+    assert svc.stats.batches <= len(reqs)
+
+
+def test_service_flush_without_worker(corpus, requests):
+    """flush() drains synchronously when no worker thread is running."""
+    sc, p = corpus
+    reqs, _ = requests
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=8)
+    futs = [svc.submit(r) for r in reqs]
+    assert svc.flush() == len(reqs)
+    assert all(f.done() for f in futs)
+    # one engine pass served everything (max_batch_requests ≥ len(reqs))
+    assert svc.stats.batches == 1
+    assert futs[0].result().batch_requests == len(reqs)
+
+
+def test_service_backpressure(corpus, requests):
+    """submit blocks on a full queue and sheds load after the timeout."""
+    sc, p = corpus
+    reqs, _ = requests
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_pending_rows=7)   # fits two 3-row requests
+    svc.submit(reqs[0], timeout=0.05)
+    svc.submit(reqs[1], timeout=0.05)
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(reqs[2], timeout=0.05)
+    assert svc.stats.rejected == 1
+    # a request that could never fit the budget fails fast, not by timeout
+    with pytest.raises(ValueError, match="max_pending_rows"):
+        big = DetectRequest(rid=99, values=np.full((8, 400), -1, np.int32),
+                            accuracy=np.full(8, 0.5, np.float32),
+                            p_claim=np.zeros((8, 400), np.float32))
+        svc.submit(big)
+    assert svc.flush() == 2                      # queued work still serves
+    svc.submit(reqs[2], timeout=0.05)            # and capacity freed up
+    assert svc.flush() == 1
+
+
+def test_cancelled_future_does_not_kill_worker(corpus, requests):
+    """A client cancelling its pending future must not take the batch (or
+    the worker) down — the other requests in the batch still resolve."""
+    sc, p = corpus
+    reqs, _ = requests
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=8)
+    f0 = svc.submit(reqs[0])
+    rest = [svc.submit(r) for r in reqs[1:]]
+    assert f0.cancel()
+    assert svc.flush() == len(reqs)
+    assert f0.cancelled()
+    for f in rest:
+        assert f.result(timeout=60).copying.shape[1] == sc.dataset.n_sources
+
+
+def test_flush_refused_while_worker_runs(corpus):
+    """flush() must not drive the stateful engine from a second thread."""
+    sc, p = corpus
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64)
+    with svc:
+        with pytest.raises(RuntimeError, match="worker"):
+            svc.flush()
+    assert svc.flush() == 0                      # fine again once stopped
