@@ -13,6 +13,9 @@ Public API:
   sample_by_item, sample_by_cell, scale_sample  — sampling (§VI)
   fagin_input                                   — NRA baseline (Table X)
   DetectRequest, DetectionService, serve_batch  — batched serving (DESIGN §5)
+  CorpusStore, engine_chunks, ResidentCorpus    — chunked incidence store +
+                                                  resident serving buffers
+                                                  (DESIGN §6)
 
 The per-algorithm functions remain as references and compatibility wrappers;
 new code should construct a ``DetectionEngine`` with the mode it needs (or a
@@ -27,23 +30,26 @@ from repro.core.incremental import (
     make_incremental_state,
     rescore_pairs_exact,
 )
-from repro.core.index import build_index, bucketize
+from repro.core.index import build_index, bucketize, engine_chunks
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import pairwise_detect
 from repro.core.serving import (
     DetectionService,
     DetectRequest,
     DetectResponse,
+    ResidentCorpus,
     serve_batch,
 )
+from repro.core.store import CorpusStore
 from repro.core.truthfind import fusion_accuracy, truth_finding
 from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult, pair_f_measure
 
 __all__ = [
     "CopyConfig", "ClaimsDataset", "DetectionResult", "pair_f_measure",
-    "DetectionEngine", "EngineOptions",
-    "DetectRequest", "DetectResponse", "DetectionService", "serve_batch",
-    "pairwise_detect", "build_index", "bucketize",
+    "DetectionEngine", "EngineOptions", "CorpusStore",
+    "DetectRequest", "DetectResponse", "DetectionService", "ResidentCorpus",
+    "serve_batch",
+    "pairwise_detect", "build_index", "bucketize", "engine_chunks",
     "index_detect_exact", "bucketed_index_detect",
     "bound_detect", "hybrid_detect",
     "make_incremental_state", "incremental_detect", "rescore_pairs_exact",

@@ -21,6 +21,11 @@ C^max is not re-evaluated until (h − n₀) grew by T₀^max.
 
 HYBRID applies bounds only to pairs sharing more than ``l_threshold`` items
 (default 16, the paper's empirical crossover).
+
+The scan STREAMS buckets out of the chunked ``CorpusStore`` (DESIGN.md §6):
+one jitted per-bucket step is driven from the host, each step gathering only
+its bucket's entry columns — the ``(K, S, w)`` bucket tensor of the legacy
+``pad_buckets`` path is never materialized.
 """
 from __future__ import annotations
 
@@ -32,8 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bucketed import PaddedBuckets, pad_buckets
-from repro.core.index import InvertedIndex, bucketize, build_index
+from repro.core.index import BucketedIndex, InvertedIndex, bucketize, build_index
 from repro.core.scoring import (
     decide_copying,
     pair_scores_subset,
@@ -58,74 +62,102 @@ class BoundState:
 
 
 @partial(jax.jit, static_argnames=("s", "n", "theta_cp", "theta_ind",
-                                   "ln1ms", "ebar_bucket", "use_timers"))
-def _bound_scan(v_ksw, p_hat, m_suffix, acc, l_counts, d_src, considered,
-                boundable, s, n, theta_cp, theta_ind, ln1ms, ebar_bucket,
-                use_timers):
-    K, S, _ = v_ksw.shape
+                                   "ln1ms", "use_timers", "K"))
+def _bound_step(carry, v_k, p_k, m_next, k, acc, l_counts, d_src, considered,
+                boundable, s, n, theta_cp, theta_ind, ln1ms, use_timers, K):
+    """One score-ordered bucket of the BOUND scan (Eqs. 9–10 + timers).
+
+    ``v_k`` is the bucket's (S, w) incidence slice, zero-padded to the fixed
+    maximum bucket width so every step reuses one compiled program. The
+    carry is the 10-tuple the legacy whole-tensor lax.scan threaded; the
+    per-bucket arithmetic is identical, so results are bit-equal.
+    """
+    (c0, n0, n_full, nscan, decided, dec_bucket, min_due, max_due, ve, bc) = carry
     f_a1 = acc[:, None]
     f_a2 = acc[None, :]
     lf = l_counts.astype(jnp.float32)
 
-    def body(carry, xs):
-        (c0, n0, n_full, nscan, decided, dec_bucket,
-         min_due, max_due, ve, bc) = carry
-        v_k, p_k, m_next, k = xs
+    count = jnp.dot(v_k, v_k.T, preferred_element_type=jnp.float32)
+    active = (decided == 0) & considered
+    f = score_same(p_k, f_a1, f_a2, s, n)
 
-        count = jnp.dot(v_k, v_k.T, preferred_element_type=jnp.float32)
-        active = (decided == 0) & considered
-        f = score_same(p_k, f_a1, f_a2, s, n)
+    upd = active.astype(jnp.float32) * count
+    c0 = c0 + f * upd
+    n0 = n0 + upd
+    n_full = n_full + count * considered
+    nscan = nscan + jnp.sum(v_k, axis=1)
+    ve = ve + jnp.sum(jnp.triu(upd, 1))
 
-        upd = active.astype(jnp.float32) * count
-        c0 = c0 + f * upd
-        n0 = n0 + upd
-        n_full = n_full + count * considered
-        nscan = nscan + jnp.sum(v_k, axis=1)
-        ve = ve + jnp.sum(jnp.triu(upd, 1))
+    # ---- bounds (Eqs. 9–10) -----------------------------------------
+    c_min_f = c0 + (lf - n0) * ln1ms
+    c_min = jnp.maximum(c_min_f, c_min_f.T)
+    h_raw = jnp.maximum(
+        nscan[:, None] * lf / jnp.maximum(d_src[:, None], 1.0),
+        nscan[None, :] * lf / jnp.maximum(d_src[None, :], 1.0),
+    )
+    h = jnp.clip(h_raw, n0, lf)
+    c_max_f = c0 + (h - n0) * ln1ms + (lf - h) * m_next
+    c_max = jnp.maximum(c_max_f, c_max_f.T)
 
-        # ---- bounds (Eqs. 9–10) -----------------------------------------
-        c_min_f = c0 + (lf - n0) * ln1ms
-        c_min = jnp.maximum(c_min_f, c_min_f.T)
-        h_raw = jnp.maximum(
-            nscan[:, None] * lf / jnp.maximum(d_src[:, None], 1.0),
-            nscan[None, :] * lf / jnp.maximum(d_src[None, :], 1.0),
-        )
-        h = jnp.clip(h_raw, n0, lf)
-        c_max_f = c0 + (h - n0) * ln1ms + (lf - h) * m_next
-        c_max = jnp.maximum(c_max_f, c_max_f.T)
+    checkable = active & boundable
+    if use_timers:
+        check_min = checkable & (n0 >= min_due)
+        check_max = checkable & ((h - n0) >= max_due)
+    else:
+        check_min = checkable
+        check_max = checkable
+    bc = bc + jnp.sum(jnp.triu(check_min, 1)) + jnp.sum(jnp.triu(check_max, 1))
 
-        checkable = active & boundable
-        if use_timers:
-            check_min = checkable & (n0 >= min_due)
-            check_max = checkable & ((h - n0) >= max_due)
-        else:
-            check_min = checkable
-            check_max = checkable
-        bc = bc + jnp.sum(jnp.triu(check_min, 1)) + jnp.sum(jnp.triu(check_max, 1))
+    cp = check_min & (c_min >= theta_cp)
+    ind = check_max & (c_max < theta_ind) & (c_max.T < theta_ind) & ~cp
 
-        cp = check_min & (c_min >= theta_cp)
-        ind = check_max & (c_max < theta_ind) & (c_max.T < theta_ind) & ~cp
+    if use_timers:
+        denom = jnp.maximum(m_next - ln1ms, 1e-6)
+        t_min = jnp.ceil((theta_cp - c_min) / denom)
+        min_due = jnp.where(check_min & ~cp, n0 + t_min, min_due)
+        t0_max = jnp.ceil((c_max - theta_ind) / denom)
+        max_due = jnp.where(check_max & ~ind, (h - n0) + t0_max, max_due)
 
-        if use_timers:
-            denom = jnp.maximum(m_next - ln1ms, 1e-6)
-            t_min = jnp.ceil((theta_cp - c_min) / denom)
-            min_due = jnp.where(check_min & ~cp, n0 + t_min, min_due)
-            t0_max = jnp.ceil((c_max - theta_ind) / denom)
-            max_due = jnp.where(check_max & ~ind, (h - n0) + t0_max, max_due)
+    newly = jnp.where(cp, 1, jnp.where(ind, -1, 0)).astype(jnp.int8)
+    decided = jnp.where((decided == 0) & (newly != 0), newly, decided)
+    dec_bucket = jnp.where((dec_bucket == K) & (newly != 0), k, dec_bucket)
 
-        newly = jnp.where(cp, 1, jnp.where(ind, -1, 0)).astype(jnp.int8)
-        decided = jnp.where((decided == 0) & (newly != 0), newly, decided)
-        dec_bucket = jnp.where((dec_bucket == K) & (newly != 0), k, dec_bucket)
+    return (c0, n0, n_full, nscan, decided, dec_bucket,
+            min_due, max_due, ve, bc)
 
-        return (c0, n0, n_full, nscan, decided, dec_bucket,
-                min_due, max_due, ve, bc), None
+
+def _bound_stream(idx: InvertedIndex, b: BucketedIndex, acc, l_counts, d_src,
+                  considered, boundable, cfg: CopyConfig, use_timers: bool):
+    """Drive the per-bucket step over buckets streamed from the store.
+
+    Gathers one bucket's columns at a time (``store.slice_entries``) —
+    peak incidence residency is a single bucket slice, not (K, S, w).
+    """
+    S = idx.n_sources
+    K = b.n_buckets
+    starts = b.starts
+    w = int(max(np.diff(starts))) if K else 1
+    dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
 
     zero = jnp.zeros((S, S), jnp.float32)
-    init = (zero, zero, zero, jnp.zeros((S,), jnp.float32),
-            jnp.zeros((S, S), jnp.int8), jnp.full((S, S), K, jnp.int32),
-            zero, zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
-    xs = (v_ksw, p_hat, m_suffix[1:], jnp.arange(K))
-    carry, _ = jax.lax.scan(body, init, xs)
+    carry = (zero, zero, zero, jnp.zeros((S,), jnp.float32),
+             jnp.zeros((S, S), jnp.int8), jnp.full((S, S), K, jnp.int32),
+             zero, zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+    accj = jnp.asarray(acc, jnp.float32)
+    lj = jnp.asarray(l_counts)
+    dj = jnp.asarray(d_src, jnp.float32)
+    cj = jnp.asarray(considered)
+    bj = jnp.asarray(boundable)
+    for k in range(K):
+        s0, s1 = int(starts[k]), int(starts[k + 1])
+        v_np = np.zeros((S, w), np.float32)
+        v_np[:, : s1 - s0] = idx.store.slice_entries(s0, s1, dtype=np.float32)
+        carry = _bound_step(
+            carry, jnp.asarray(v_np, dt), jnp.float32(b.p_hat[k]),
+            jnp.float32(b.m_suffix[k + 1]), jnp.int32(k),
+            accj, lj, dj, cj, bj,
+            s=cfg.s, n=cfg.n, theta_cp=cfg.theta_cp, theta_ind=cfg.theta_ind,
+            ln1ms=cfg.ln_1ms, use_timers=use_timers, K=K)
     return carry
 
 
@@ -138,35 +170,31 @@ def bound_detect(
     l_threshold: int = 0,              # >0 = HYBRID (INDEX for small-overlap pairs)
     rescore_margin: float = 1.0,
     index: InvertedIndex | None = None,
-    padded: PaddedBuckets | None = None,
+    bucketed: BucketedIndex | None = None,
     return_state: bool = False,
 ):
     """BOUND (§IV-A), BOUND+ (§IV-B, use_timers), HYBRID (l_threshold=16)."""
     t0 = time.perf_counter()
     idx = index if index is not None else build_index(ds, p_claim, cfg)
-    if padded is None:
-        padded = pad_buckets(bucketize(idx, n_buckets))
+    if bucketed is None:
+        bucketed = bucketize(idx, n_buckets)
     S = ds.n_sources
-    K = padded.n_buckets
-    acc = jnp.asarray(ds.accuracy, jnp.float32)
-    l_counts = jnp.asarray(idx.l_counts)
-    d_src = jnp.asarray(idx.items_per_source, jnp.float32)
+    K = bucketed.n_buckets
+    l_counts = idx.l_counts
+    d_src = idx.items_per_source
 
-    # considered = co-occurrence outside Ē (one matmul)
-    v_out = jnp.asarray(idx.V[:, : idx.ebar_start], jnp.bfloat16)
-    n_out = np.array(jnp.dot(v_out, v_out.T, preferred_element_type=jnp.float32))
+    # considered = co-occurrence outside Ē, accumulated chunk by chunk
+    # (0/1 products in f32 are exact integers, bit-equal to one dense matmul)
+    n_out = idx.store.cooccurrence(stop=idx.ebar_start)
     considered = n_out > 0.5
     np.fill_diagonal(considered, False)
 
     boundable = idx.l_counts > l_threshold
     np.fill_diagonal(boundable, False)
 
-    (c0, n0, n_full, _nscan, decided, dec_bucket, _md, _xd, ve, bc) = _bound_scan(
-        padded.v_ksw, padded.p_hat, padded.m_suffix, acc, l_counts, d_src,
-        jnp.asarray(considered), jnp.asarray(boundable),
-        cfg.s, cfg.n, cfg.theta_cp, cfg.theta_ind, cfg.ln_1ms,
-        padded.ebar_bucket, use_timers,
-    )
+    (c0, n0, n_full, _nscan, decided, dec_bucket, _md, _xd, ve, bc) = \
+        _bound_stream(idx, bucketed, ds.accuracy, l_counts, d_src,
+                      considered, boundable, cfg, use_timers)
     c0, n0 = np.array(c0), np.array(n0)
     n_full = np.array(n_full)
     decided = np.array(decided)

@@ -129,7 +129,12 @@ class PaddedBuckets:
 
 def pad_buckets(b: BucketedIndex, dtype=None) -> PaddedBuckets:
     """dtype defaults to bf16 on TPU (halves HBM traffic) and f32 on CPU
-    (bf16 matmuls are emulated ~10× slower there)."""
+    (bf16 matmuls are emulated ~10× slower there).
+
+    NOTE: this materializes the full (K, S, w) bucket tensor — it remains
+    only as the single-device oracle / legacy-baseline form. Production
+    paths stream chunks from the ``CorpusStore`` instead (the engine via
+    ``engine_chunks``, BOUND via ``_bound_stream``)."""
     if dtype is None:
         dtype = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
     idx = b.index
@@ -139,7 +144,7 @@ def pad_buckets(b: BucketedIndex, dtype=None) -> PaddedBuckets:
     v = np.zeros((K, S, w), dtype=np.float32)
     for k in range(K):
         s0, s1 = int(b.starts[k]), int(b.starts[k + 1])
-        v[k, :, : s1 - s0] = idx.V[:, s0:s1]
+        v[k, :, : s1 - s0] = idx.store.slice_entries(s0, s1, dtype=np.float32)
     return PaddedBuckets(
         v_ksw=jnp.asarray(v, dtype=dtype),
         p_hat=jnp.asarray(b.p_hat, dtype=jnp.float32),

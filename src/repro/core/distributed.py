@@ -22,6 +22,7 @@ gather of the full V anywhere.
 """
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import jax
@@ -51,22 +52,24 @@ from repro.kernels.ops import copyscore_tile_fused
 # 1-D tile sharding (DetectionEngine production path)
 # ---------------------------------------------------------------------------
 
-def _local_tile_scores(v_skw, acc, p_hat, delta, coords, *, tile, s, n,
-                       ebar_bucket, impl, block_i, block_j):
+def _local_tile_scores(v_skw, acc, p_hat, delta, nout_blk, coords, *, tile,
+                       s, n, impl, block_i, block_j):
     """Per-device: scan this shard's unordered pair tiles (fused dual kernel).
 
-    v_skw:  (S_pad, K, w) bucket-aligned incidence, replicated
+    v_skw:  (S_pad, K, w) chunk-aligned incidence, replicated — K chunks of
+            the ``CorpusStore`` (one group of the engine's stream)
+    nout_blk: (K,) float32 — 1.0 where the chunk lies before the Ē
+            boundary (chunk handles carry this; the boundary is
+            chunk-aligned by construction, so the channel is exact)
     coords: (n_local, 2) int32 — (row-block, col-block) indices of the tiles
             assigned to this device, r ≤ c (triangular schedule); (-1, -1)
-            marks a padding slot, which produces zeros without any compute
+            marks a padding slot — both mesh padding AND tiles chunk-pruned
+            for this group — which produces zeros without any compute
     →       five (n_local, T, T) stacks: C_same→, C_same← (the mirrored
             tile's C→, transposed), shared count, count outside Ē (the
             considered test), and the approximation-error bound.
     """
     S_pad, K, w = v_skw.shape
-    # non-Ē mask per entry block: in the tiled path blocks ARE buckets, so
-    # the n_out channel is exact at the Ē boundary (bucket-aligned)
-    nout_blk = (jnp.arange(K) < ebar_bucket).astype(jnp.float32)
 
     def compute(rc):
         r0 = rc[0] * tile
@@ -95,46 +98,67 @@ def sharded_tile_scores(
     mesh: Mesh,
     v_skw,                   # (S_pad, K, w) incidence, S_pad % tile == 0
     acc,                     # (S_pad,) accuracies (0.5 in padding rows)
-    p_hat,                   # (K,) representative p̂ per bucket
+    p_hat,                   # (K,) representative p̂ per chunk
     coords: np.ndarray,      # (n_tiles, 2) int32 surviving (row, col) tiles
     cfg: CopyConfig,
     *,
     tile: int,
-    ebar_bucket: int,
-    delta: np.ndarray,       # (K,) per-bucket score-error bound δ
+    delta: np.ndarray,       # (K,) per-chunk score-error bound δ
+    nout: np.ndarray = None,  # (K,) 1.0 ⇔ chunk before the Ē boundary
+    ebar_bucket: int | None = None,   # legacy alternative to ``nout``
     impl: str = "auto",
     block_i: int = 128,
     block_j: int = 128,
 ):
     """Shard surviving pair tiles over a 1-D mesh; returns stacked tiles.
 
-    ``coords`` lists unordered (r ≤ c) tiles and is padded to a multiple of
-    the mesh size with (-1, -1) markers — padding slots short-circuit to zero
-    outputs inside the device scan (lax.cond) instead of recomputing a real
-    tile. Output: five (n_tiles_padded, T, T) arrays (C_same→, C_same←,
-    count, count outside Ē, error bound).
+    The incidence argument is one GROUP of chunk handles from the engine's
+    stream — (S_pad, K, w) with per-chunk p̂ / δ / non-Ē arrays riding
+    along — never the full matrix (DESIGN.md §6). ``coords`` lists
+    unordered (r ≤ c) tiles and is padded to a multiple of the mesh size
+    with (-1, -1) markers — padding slots (and tiles the caller chunk-pruned
+    for this group) short-circuit to zero outputs inside the device scan
+    (lax.cond) instead of recomputing a real tile. Output: five
+    (n_tiles_padded, T, T) arrays (C_same→, C_same←, count, count outside
+    Ē, error bound).
     """
     axis = mesh.axis_names[0]
     n_dev = mesh.shape[axis]
     n_tiles = len(coords)
+    K = v_skw.shape[1]
+    if nout is None:
+        eb = K if ebar_bucket is None else int(ebar_bucket)
+        nout = (np.arange(K) < eb).astype(np.float32)
     pad = (-n_tiles) % n_dev
     if pad:
         coords = np.concatenate([coords,
                                  np.full((pad, 2), -1, coords.dtype)])
 
-    local = partial(_local_tile_scores, tile=tile, s=cfg.s, n=cfg.n,
-                    ebar_bucket=ebar_bucket, impl=impl,
-                    block_i=block_i, block_j=block_j)
-    out_spec = (P(axis),) * 5
-    fn = jax.jit(shard_map(
-        local, mesh=mesh,
-        in_specs=(P(), P(), P(), P(), P(axis)),
-        out_specs=out_spec,
-    ))
+    fn = _sharded_tile_fn(mesh, tile, cfg.s, cfg.n, impl, block_i, block_j)
     return fn(jnp.asarray(v_skw), jnp.asarray(acc, jnp.float32),
               jnp.asarray(p_hat, jnp.float32),
               jnp.asarray(delta, jnp.float32),
+              jnp.asarray(nout, jnp.float32),
               jnp.asarray(coords, jnp.int32))
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_tile_fn(mesh: Mesh, tile: int, s: float, n: float, impl: str,
+                     block_i: int, block_j: int):
+    """Cached jitted shard_map for the tile scan.
+
+    The engine streams chunk groups through this in a host loop, so the
+    compiled executable MUST be reused across calls — a fresh
+    ``jax.jit(shard_map(...))`` per group would retrace every time.
+    """
+    axis = mesh.axis_names[0]
+    local = partial(_local_tile_scores, tile=tile, s=s, n=n,
+                    impl=impl, block_i=block_i, block_j=block_j)
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(), P(), P(), P(), P(axis)),
+        out_specs=(P(axis),) * 5,
+    ))
 
 
 # ---------------------------------------------------------------------------

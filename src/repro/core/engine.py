@@ -5,21 +5,29 @@ hybrid early termination, iterative incremental rounds, sampled detection)
 goes through ``DetectionEngine.detect``. The production ``bucketed`` mode is
 the sharded, pair-tiled dataflow of DESIGN.md §3:
 
-  1. build the inverted index (§III) and re-bucket it into p-quantiles on
-     each side of the Ē boundary (``bucketize_engine`` — the accumulation is
-     order-insensitive, so p-homogeneous buckets shrink the p̂ error);
+  1. build the inverted index (§III — streamed into the chunked
+     ``CorpusStore``, never a dense (S, E) array) and re-chunk it p-sorted
+     on each side of the Ē boundary (``engine_chunks`` — the accumulation
+     is order-insensitive, so p-homogeneous chunks shrink the p̂ error;
+     chunks double as the kernel's entry blocks);
   2. cut the S×S pair space into T×T tiles and prune, up front, every tile
      whose sources co-occur only inside the low-contribution suffix Ē — by
      Proposition 3.4 those pairs can never flip to copying, so the whole
      tile is skipped without touching a device (the tile-level test uses the
      OR-reduced incidence, an upper bound on any pair's co-occurrence); the
      keep matrix is symmetric, so only unordered (r ≤ c) tiles survive —
-     the triangular schedule halves the tiles scheduled;
-  3. shard the surviving tiles over a 1-D device mesh (shard_map); each
-     device scans its tiles, slicing the int8 bucket-aligned incidence and
-     feeding the fused dual-direction copyscore kernel one unordered tile
-     at a time — one count matmul per entry block emits C→, C←, the shared
-     count, the non-Ē count, and the error bound;
+     the triangular schedule halves the tiles scheduled. The OR-reduction
+     is kept per chunk, so tile pruning composes with chunk pruning
+     (DESIGN.md §6);
+  3. stream chunk GROUPS (default one chunk per device pass — the peak
+     resident incidence is a single chunk; an optional byte budget groups
+     chunks for dispatch-bound meshes) over a 1-D device
+     mesh (shard_map); each device scans its surviving
+     tiles, slicing the int8 chunk slab and feeding the fused
+     dual-direction copyscore kernel one unordered tile at a time — one
+     count matmul per entry block emits C→, C←, the shared count, the
+     non-Ē count, and the error bound; per-tile accumulators stay on
+     device across groups;
   4. scatter both orientations of every tile back into (S, S) (C← transposed
      lands at the mirrored coordinate), apply the INDEX step-3
      different-value adjustment, exactly rescore every pair whose decision
@@ -52,14 +60,14 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.bound import bound_detect
-from repro.core.bucketed import index_detect_exact, pad_buckets
+from repro.core.bucketed import index_detect_exact
 from repro.core.distributed import sharded_tile_scores
 from repro.core.incremental import (
     incremental_detect,
     make_incremental_state,
     rescore_pairs_exact,
 )
-from repro.core.index import InvertedIndex, bucketize_engine, build_index
+from repro.core.index import InvertedIndex, build_index, engine_chunks
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import (
     decide_copying_np,
@@ -127,6 +135,26 @@ class EngineOptions:
     # holds fewer than this fraction of the current candidate set — the
     # empirical bound on pairs the net might still miss.
     verify_miss_frac: float = 0.02
+    # chunks of the engine store shipped per device pass (count). 1 (the
+    # default) is strict streaming — peak resident incidence is ONE chunk —
+    # and also measured fastest on CPU at S=2048 (8.5 s vs 13.3 s shipping
+    # 63 chunks at once: the chunk-sized working set stays in cache). None →
+    # auto-size from chunk_group_bytes, capped at K−1 so a chunked store's
+    # full incidence is never resident in one allocation.
+    chunk_group: Optional[int] = 1
+    # HARD byte ceiling on the incidence slab shipped per device pass: it
+    # narrows the engine chunk width when one n_buckets-derived chunk would
+    # exceed it (floored at 8 entries × S_pad rows) and clamps any
+    # requested/auto chunk_group. With chunk_group=None it doubles as the
+    # auto group-size target for meshes where dispatch latency, not cache
+    # locality, dominates.
+    chunk_group_bytes: int = 64 << 20
+    # canonical CorpusStore chunk width (entries) for indexes this engine
+    # builds; None → store default (512). Rounded up to a multiple of 8.
+    store_chunk_entries: Optional[int] = None
+    # byte budget for the largest single incidence allocation during index
+    # build (wins over store_chunk_entries; width = bytes // rows).
+    store_chunk_bytes: Optional[int] = None
 
 
 class DetectionEngine:
@@ -192,6 +220,8 @@ class DetectionEngine:
         opt = self.options
         if self.mode == "pairwise":
             return pairwise_detect(ds, p_claim, self.cfg)
+        if index is None and self.mode in ("exact", "bound", "bound+", "hybrid"):
+            index = self._build_index(ds, p_claim)
         if self.mode == "exact":
             return index_detect_exact(ds, p_claim, self.cfg, index=index)
         if self.mode in ("bound", "bound+", "hybrid"):
@@ -206,7 +236,9 @@ class DetectionEngine:
         if self.mode == "incremental":
             if self._inc_state is None:
                 result, self._inc_state = make_incremental_state(
-                    ds, p_claim, self.cfg, n_buckets=opt.n_buckets)
+                    ds, p_claim, self.cfg, n_buckets=opt.n_buckets,
+                    chunk_entries=opt.store_chunk_entries,
+                    chunk_bytes=opt.store_chunk_bytes)
                 return result
             return incremental_detect(ds, p_claim, self.cfg, self._inc_state,
                                       rho=opt.rho, rho_acc=opt.rho_acc)
@@ -329,6 +361,14 @@ class DetectionEngine:
 
     # -- the tiled + sharded production path --------------------------------
 
+    def _build_index(self, ds: ClaimsDataset,
+                     p_claim: np.ndarray) -> InvertedIndex:
+        """Build an index honoring this engine's store-chunking options."""
+        opt = self.options
+        return build_index(ds, p_claim, self.cfg,
+                           chunk_entries=opt.store_chunk_entries,
+                           chunk_bytes=opt.store_chunk_bytes)
+
     def _tile_edge(self, s_sources: int) -> int:
         """Tile edge: the smallest multiple of 8 (f32 sublane alignment) that
         is ≥ min(S, requested tile) — tiny datasets pad by at most 7 sources
@@ -343,9 +383,9 @@ class DetectionEngine:
     DELTA_INFLATION = 1.5
     DELTA_SLACK = 2e-3
 
-    def _bucket_deltas(self, b, p_lo, p_hi, acc: np.ndarray) -> np.ndarray:
-        """Per-bucket bound δ_k ≳ |f(A_i, A_j, p) − f(A_i, A_j, p̂_k)| for any
-        entry p in bucket k: the bucket's p extremes are swept against a grid
+    def _bucket_deltas(self, p_hat, p_lo, p_hi, acc: np.ndarray) -> np.ndarray:
+        """Per-chunk bound δ_k ≳ |f(A_i, A_j, p) − f(A_i, A_j, p̂_k)| for any
+        entry p in chunk k: the chunk's p extremes are swept against a grid
         of dataset accuracy quantiles, then inflated (DELTA_INFLATION /
         DELTA_SLACK) to cover interior maxima the grid misses. Together with
         ``rescore_margin`` this makes decision flips vs the exact INDEX
@@ -354,8 +394,8 @@ class DetectionEngine:
         cfg = self.cfg
         a_grid = np.unique(np.quantile(acc.astype(np.float64),
                                        [0.0, 0.25, 0.5, 0.75, 1.0]))
-        p_hat = b.p_hat.astype(np.float64)
-        delta = np.zeros(b.n_buckets, np.float64)
+        p_hat = np.asarray(p_hat, np.float64)
+        delta = np.zeros(len(p_hat), np.float64)
         for a1 in a_grid:
             for a2 in a_grid:
                 f_hat = score_same_np(p_hat, a1, a2, cfg.s, cfg.n)
@@ -374,36 +414,16 @@ class DetectionEngine:
         t0 = time.perf_counter()
         cfg = self.cfg
         opt = self.options
-        base_idx = index if index is not None else build_index(ds, p_claim, cfg)
-        bucketed, p_lo, p_hi = bucketize_engine(base_idx, opt.n_buckets)
-        idx = bucketed.index                 # reordered copy (p-sorted regions)
-        delta = self._bucket_deltas(bucketed, p_lo, p_hi, ds.accuracy)
         S = ds.n_sources
         T = self._tile_edge(S)
         n_blocks = -(-S // T)
         S_pad = n_blocks * T
-
-        # ---- tile pruning: OR-reduced incidence over non-Ē entries --------
-        # If no source in tile r shares a non-Ē entry with any source in
-        # tile c, no pair in (r, c) is ever considered (Ē suffix bound) —
-        # skip the whole tile. Group-OR ≥ any member, so pruning is safe.
-        # The keep matrix is symmetric and the fused kernel emits both tile
-        # orientations, so only unordered (r ≤ c) tiles are scheduled.
-        e0 = idx.ebar_start
-        prov_out = idx.V[:, :e0].astype(bool)
-        prov_pad = np.zeros((S_pad, max(e0, 1)), bool)
-        if e0:
-            prov_pad[:S, :e0] = prov_out
-        G = prov_pad.reshape(n_blocks, T, -1).any(axis=1)
-        keep = (G.astype(np.int32) @ G.astype(np.int32).T) > 0
-        coords = np.argwhere(np.triu(keep)).astype(np.int32)  # r ≤ c tiles
-        tiles_total = n_blocks * (n_blocks + 1) // 2
-        n_tiles = len(coords)
-
-        # ---- shard surviving tiles over the 1-D mesh ----------------------
-        # Incidence is 0/1, so int8 (the default) is lossless: the kernel
-        # accumulates it exactly in int32 on the MXU at half the HBM traffic
-        # of bf16. bf16/f32 remain selectable for the microbenchmark.
+        base_idx = index if index is not None else self._build_index(ds, p_claim)
+        # Incidence element type, resolved first: the chunk width depends on
+        # its itemsize. 0/1 incidence makes int8 (the default) lossless —
+        # the kernel accumulates it exactly in int32 on the MXU at half the
+        # HBM traffic of bf16; bf16/f32 remain selectable for the
+        # microbenchmark.
         dtypes = {"auto": jnp.int8, "int8": jnp.int8, "bf16": jnp.bfloat16,
                   "f32": jnp.float32}
         if opt.incidence_dtype not in dtypes:
@@ -411,25 +431,104 @@ class DetectionEngine:
                 f"unknown incidence_dtype {opt.incidence_dtype!r}; "
                 f"expected one of {sorted(dtypes)}")
         dtype = dtypes[opt.incidence_dtype]
-        padded = pad_buckets(bucketed, dtype=dtype)
-        v_np = np.asarray(padded.v_ksw)
-        v_skw = np.moveaxis(v_np, 0, 1)
-        if S_pad > S:
-            v_skw = np.concatenate(
-                [v_skw, np.zeros((S_pad - S,) + v_skw.shape[1:], v_np.dtype)])
+        itemsize = np.dtype(np.int8 if dtype == jnp.int8 else
+                            np.float32 if dtype == jnp.float32
+                            else np.float16).itemsize
+        # p-ordered, region-padded, uniform-width chunk store; rows carry the
+        # tile-grid padding so chunks slice straight into pair tiles. The
+        # byte budget caps the chunk width so even ONE shipped chunk
+        # respects it (floored at 8 entries inside engine_chunks).
+        ech = engine_chunks(
+            base_idx, opt.n_buckets, row_capacity=S_pad,
+            max_width=opt.chunk_group_bytes // max(S_pad * itemsize, 1))
+        K = ech.n_chunks
+        b = ech.width
+        delta = self._bucket_deltas(ech.p_hat, ech.p_lo, ech.p_hi, ds.accuracy)
+
+        # ---- tile ∘ chunk pruning on the OR-reduced incidence -------------
+        # Per chunk k, G_k[r] ORs the chunk's incidence over tile r's rows;
+        # chunk_keep[k][r, c] ⇔ some row-block-r source shares some entry of
+        # chunk k with some col-block-c source (an upper bound on any member
+        # pair's co-occurrence, so both prunes are exact). A tile survives
+        # if any NON-Ē chunk keeps it (the Ē suffix bound — pairs that
+        # co-occur only inside Ē can never flip to copying); a surviving
+        # tile then skips every chunk whose chunk_keep bit is off (its
+        # contribution to all five channels would be zero). The keep matrix
+        # is symmetric, so only unordered (r ≤ c) tiles are scheduled.
+        keep = np.zeros((n_blocks, n_blocks), bool)
+        chunk_keep = np.zeros((K, n_blocks, n_blocks), bool)
+        for k in range(K):
+            g_k = (ech.store.chunks[k]
+                   .reshape(n_blocks, T, b).any(axis=1).astype(np.int32))
+            chunk_keep[k] = (g_k @ g_k.T) > 0
+            if k < ech.ebar_chunk:
+                keep |= chunk_keep[k]
+        coords = np.argwhere(np.triu(keep)).astype(np.int32)  # r ≤ c tiles
+        tiles_total = n_blocks * (n_blocks + 1) // 2
+        n_tiles = len(coords)
+
+        # ---- stream chunk groups over the 1-D mesh ------------------------
         acc_pad = np.pad(ds.accuracy.astype(np.float32), (0, S_pad - S),
                          constant_values=0.5)
 
         block = 128 if T % 128 == 0 else T
+        chunk_nbytes = S_pad * b * itemsize
+        # the byte budget clamps every group (floored at one chunk)
+        budget_chunks = max(1, opt.chunk_group_bytes // max(chunk_nbytes, 1))
+        if opt.chunk_group is not None:
+            Gc = min(max(1, int(opt.chunk_group)), budget_chunks)
+        else:
+            # auto: fill the byte budget, but never ship ALL chunks in one
+            # pass when the store is chunked — the full incidence is never
+            # resident in a single allocation
+            Gc = min(budget_chunks, max(1, K - 1))
         c_same = np.zeros((S_pad, S_pad), np.float32)
         n_cnt = np.zeros((S_pad, S_pad), np.float32)
         n_out = np.zeros((S_pad, S_pad), np.float32)
         err = np.zeros((S_pad, S_pad), np.float32)
-        if n_tiles:
-            cf_t, cb_t, n_t, o_t, e_t = sharded_tile_scores(
-                self.mesh(), v_skw, acc_pad, np.asarray(padded.p_hat),
-                coords, cfg, tile=T, ebar_bucket=padded.ebar_bucket,
-                delta=delta, impl=opt.kernel_impl, block_i=block, block_j=block)
+        chunk_tiles_run = 0
+        if n_tiles and K:
+            # per-tile accumulators live on device, KEEPING the mesh-padded
+            # tile sharding (slicing mid-stream would reshard every group);
+            # one host transfer at the end feeds the scatter. Peak resident
+            # incidence = one group: S_pad · Gc · b elements.
+            stacks = None
+            tile_keep = chunk_keep[:, coords[:, 0], coords[:, 1]]  # (K, n_tiles)
+            for g0 in range(0, K, Gc):
+                ks = range(g0, min(g0 + Gc, K))
+                gmask = tile_keep[ks].any(axis=0)
+                if not gmask.any():
+                    continue
+                # actual kernel work: a tile shipped with a group scans ALL
+                # the group's chunks (the kernel can't skip single chunks),
+                # so grouped streaming realizes less chunk pruning than the
+                # per-chunk masks would allow — count what really runs
+                chunk_tiles_run += int(gmask.sum()) * len(ks)
+                # chunk-pruned tiles short-circuit via the (-1,-1) marker
+                coords_g = np.where(gmask[:, None], coords, -1).astype(np.int32)
+                p_g = np.full(Gc, 0.5, np.float32)
+                d_g = np.zeros(Gc, np.float32)
+                o_g = np.zeros(Gc, np.float32)
+                if Gc == 1:
+                    # store chunks are already contiguous (S_pad, b) — ship
+                    # a zero-copy view instead of re-copying the incidence
+                    v_np = ech.store.chunks[g0].reshape(S_pad, 1, b)
+                else:
+                    v_np = np.zeros((S_pad, Gc, b), np.int8)
+                for i, k in enumerate(ks):
+                    if Gc > 1:
+                        v_np[:, i, :] = ech.store.chunks[k]
+                    p_g[i] = ech.p_hat[k]
+                    d_g[i] = delta[k]
+                    o_g[i] = ech.nout[k]
+                v_dev = (v_np if dtype == jnp.int8
+                         else jnp.asarray(v_np, dtype=dtype))
+                outs = sharded_tile_scores(
+                    self.mesh(), v_dev, acc_pad, p_g, coords_g, cfg, tile=T,
+                    delta=d_g, nout=o_g, impl=opt.kernel_impl,
+                    block_i=block, block_j=block)
+                stacks = (list(outs) if stacks is None
+                          else [s + o for s, o in zip(stacks, outs)])
             # scatter both orientations of every unordered tile back into the
             # (S_pad, S_pad) grid: the blocked transpose is a writable view,
             # so fancy assignment on tile coordinates lands each (T, T) block
@@ -437,13 +536,15 @@ class DetectionEngine:
             # score and the plain transpose for the symmetric-role channels;
             # diagonal tiles write identical values twice.
             rr, cc = coords[:, 0], coords[:, 1]
-            c_fwd_t = np.asarray(cf_t[:n_tiles], np.float32)
-            c_bwd_t = np.asarray(cb_t[:n_tiles], np.float32)
+            if stacks is None:
+                stacks = [jnp.zeros((n_tiles, T, T), jnp.float32)] * 5
+            cf_t, cb_t, n_t, o_t, e_t = (np.asarray(s, np.float32)[:n_tiles]
+                                         for s in stacks)
             for grid, fwd, bwd in (
-                (c_same, c_fwd_t, c_bwd_t.transpose(0, 2, 1)),
-                (n_cnt, np.asarray(n_t[:n_tiles], np.float32), None),
-                (n_out, np.asarray(o_t[:n_tiles], np.float32), None),
-                (err, np.asarray(e_t[:n_tiles], np.float32), None),
+                (c_same, cf_t, cb_t.transpose(0, 2, 1)),
+                (n_cnt, n_t, None),
+                (n_out, o_t, None),
+                (err, e_t, None),
             ):
                 g4 = grid.reshape(n_blocks, T, n_blocks, T).transpose(0, 2, 1, 3)
                 g4[rr, cc] = fwd
@@ -456,7 +557,7 @@ class DetectionEngine:
 
         # ---- INDEX step 3 + error-bounded exact rescore -------------------
         c_fwd = np.where(considered,
-                         c_same + (idx.l_counts - n_cnt) * cfg.ln_1ms,
+                         c_same + (base_idx.l_counts - n_cnt) * cfg.ln_1ms,
                          0.0).astype(np.float32)
         np.fill_diagonal(c_fwd, 0.0)
 
@@ -485,7 +586,7 @@ class DetectionEngine:
             pairs_considered=n_pairs,
             shared_values_examined=values_examined,
             score_computations=2 * values_examined + 2 * n_pairs + 2 * n_rescored,
-            index_entries=idx.n_entries,
+            index_entries=ech.n_live,
         )
         self.last_stats = {
             "tile": T,
@@ -496,6 +597,15 @@ class DetectionEngine:
             "incidence_dtype": str(np.dtype(dtype)),
             "n_devices": self.mesh().shape["shards"],
             "rescored_pairs": n_rescored,
+            # chunked-store telemetry (DESIGN.md §6)
+            "chunks": K,
+            "chunk_width": b,
+            "chunk_group": Gc,
+            # chunk pairs over tiles that SURVIVED tile pruning — run/total
+            # isolates the chunk-prune win (pre-tile-prune total = K·tiles_total)
+            "chunk_tiles_total": K * n_tiles,
+            "chunk_tiles_run": chunk_tiles_run,
+            "peak_group_bytes": int(Gc * chunk_nbytes),
         }
         return DetectionResult(c_fwd=c_fwd, pr_independent=pr_ind,
                                copying=copying, counter=counter,

@@ -46,8 +46,7 @@ def fagin_input(
         n_scores += 2 * len(ii)
 
     # different-value list: (l − n)·ln(1−s) per pair that has differences
-    v = idx.V.astype(np.float32)
-    n_counts = v @ v.T
+    n_counts = idx.store.cooccurrence()
     diff = (idx.l_counts - n_counts) * cfg.ln_1ms
     iu = np.triu_indices(S, 1)
     mask = (idx.l_counts[iu] - n_counts[iu]) > 0

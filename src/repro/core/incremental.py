@@ -29,7 +29,6 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.bound import bound_detect
-from repro.core.bucketed import pad_buckets
 from repro.core.index import (
     BucketedIndex,
     InvertedIndex,
@@ -105,23 +104,33 @@ def rescore_pairs_exact(
 def make_incremental_state(
     ds: ClaimsDataset, p_claim: np.ndarray, cfg: CopyConfig,
     n_buckets: int = 64,
+    chunk_entries: int | None = None,
+    chunk_bytes: int | None = None,
 ) -> tuple[DetectionResult, IncrementalState]:
-    """Run HYBRID from scratch and capture the bookkeeping for later rounds."""
-    idx = build_index(ds, p_claim, cfg)
+    """Run HYBRID from scratch and capture the bookkeeping for later rounds.
+
+    ``chunk_entries`` / ``chunk_bytes`` forward to ``build_index`` — they
+    pick the CorpusStore chunking the bookkeeping will iterate forever after.
+    """
+    idx = build_index(ds, p_claim, cfg, chunk_entries=chunk_entries,
+                      chunk_bytes=chunk_bytes)
     bucketed = bucketize(idx, n_buckets)
-    padded = pad_buckets(bucketed)
     result, bstate = bound_detect(
         ds, p_claim, cfg, use_timers=True, l_threshold=16,
-        index=idx, padded=padded, return_state=True,
+        index=idx, bucketed=bucketed, return_state=True,
     )
     E = idx.n_entries
     entry_bucket = (np.searchsorted(bucketed.starts, np.arange(E), side="right") - 1
                     ).astype(np.int32)
-    first_provider = np.argmax(idx.V, axis=0).astype(np.int32)
+    # a provider per entry, chunk by chunk (column argmax over live rows)
+    first_provider = (
+        np.concatenate([ch.V.argmax(axis=0) for ch in idx.store.iter_chunks()])
+        if idx.store.n_chunks else np.zeros(0, np.int64)
+    ).astype(np.int32)
 
     # Prop-3.1 reference accuracies per entry (vectorized case split)
     acc = ds.accuracy.astype(np.float64)
-    amin, asec, amax = entry_extreme_accuracies(idx.V, acc)
+    amin, asec, amax = entry_extreme_accuracies(idx.store, acc)
     a1_ref, a2_ref = prop31_reference_accs(
         idx.entry_p.astype(np.float64), amin, asec, amax, cfg)
 
@@ -182,9 +191,22 @@ def incremental_detect(
     # ---- pass 1b: conservative batched bound for small changes -----------
     d_rho_dec = float(-delta[small_dec].min()) if small_dec.any() else 0.0
     d_rho_inc = float(delta[small_inc].max()) if small_inc.any() else 0.0
-    v8 = idx.V.astype(np.float32)
-    cnt_dec = (v8[:, small_dec] @ v8[:, small_dec].T) if small_dec.any() else np.zeros((S, S), np.float32)
-    cnt_inc = (v8[:, small_inc] @ v8[:, small_inc].T) if small_inc.any() else np.zeros((S, S), np.float32)
+
+    def _masked_counts(mask: np.ndarray) -> np.ndarray:
+        # Σ_chunks V_c[:, m] V_c[:, m]ᵀ — per-chunk partial sums of 0/1
+        # products are exact integers in f32, bit-equal to the dense matmul
+        out = np.zeros((S, S), np.float32)
+        if not mask.any():
+            return out
+        for ch in idx.store.iter_chunks():
+            m = mask[ch.start: ch.start + ch.width]
+            if m.any():
+                v = ch.V[:, m].astype(np.float32)
+                out += v @ v.T
+        return out
+
+    cnt_dec = _masked_counts(small_dec)
+    cnt_inc = _masked_counts(small_inc)
 
     c_base = state.c_hat.astype(np.float64) + d_c
     # worst case against the current decision

@@ -15,7 +15,9 @@ on its own, so pairs that co-occur only inside Ē are skipped.
 
 Index construction is host-side NumPy (the paper: "index building has a much
 lower complexity, O(|S||D|)", and costs ~.9% of PAIRWISE); all detection
-compute on top of it is JAX.
+compute on top of it is JAX. The incidence never exists as one ``(S, E)``
+array: ``build_index`` streams claims into a chunked ``CorpusStore``
+(DESIGN.md §6), and every consumer iterates chunks.
 """
 from __future__ import annotations
 
@@ -25,18 +27,20 @@ from typing import Optional
 import numpy as np
 
 from repro.core.scoring import score_same_np
+from repro.core.store import (
+    DEFAULT_CHUNK_ENTRIES,
+    CorpusStore,
+    align_chunk,
+)
 from repro.core.types import ClaimsDataset, CopyConfig
 
 
 @dataclass
 class InvertedIndex:
-    """Entries sorted by decreasing contribution score."""
+    """Entries sorted by decreasing contribution score, backed by a
+    chunked ``CorpusStore`` (the single source of corpus truth)."""
 
-    V: np.ndarray              # (S, E) uint8 incidence, columns in score order
-    entry_item: np.ndarray     # (E,) int32 — D_E
-    entry_value: np.ndarray    # (E,) int32 — v_E (per-item value id)
-    entry_p: np.ndarray        # (E,) float32 — P(E)
-    entry_score: np.ndarray    # (E,) float32 — C(E) = M̂(D_E.v_E), non-increasing
+    store: CorpusStore         # entry-chunked incidence + entry metadata
     ebar_start: int            # entries [ebar_start:] form Ē
     l_counts: np.ndarray       # (S, S) int32 — shared-item counts l(S1,S2)
     items_per_source: np.ndarray  # (S,) int32 — |D̄(S)|
@@ -44,16 +48,57 @@ class InvertedIndex:
     @property
     def n_entries(self) -> int:
         """|E| — number of shared-value entries (columns of V)."""
-        return self.V.shape[1]
+        return self.store.n_entries
 
     @property
     def n_sources(self) -> int:
-        """|S| — number of sources (rows of V)."""
-        return self.V.shape[0]
+        """|S| — number of live sources (rows of V)."""
+        return self.store.n_rows
+
+    @property
+    def entry_item(self) -> np.ndarray:
+        """(E,) int32 — D_E per entry (view into the store)."""
+        return self.store.entry_item
+
+    @property
+    def entry_value(self) -> np.ndarray:
+        """(E,) int32 — v_E per entry (view into the store)."""
+        return self.store.entry_value
+
+    @property
+    def entry_p(self) -> np.ndarray:
+        """(E,) float32 — P(E) per entry (view into the store)."""
+        return self.store.entry_p
+
+    @property
+    def entry_score(self) -> np.ndarray:
+        """(E,) float32 — C(E) per entry, non-increasing (view)."""
+        return self.store.entry_score
+
+    @property
+    def V(self) -> np.ndarray:
+        """Dense (S, E) incidence — compat/debug accessor ONLY.
+
+        Zero-copy for a single-chunk store; materializes otherwise.
+        Production paths must stream ``store`` chunks instead.
+        """
+        return self.store.to_dense()
 
     def providers(self, e: int) -> np.ndarray:
         """S̄(E) — indices of the sources providing the value of entry ``e``."""
-        return np.nonzero(self.V[:, e])[0]
+        return self.store.providers(e)
+
+    @classmethod
+    def from_dense(cls, V: np.ndarray, entry_item, entry_value, entry_p,
+                   entry_score, ebar_start: int, l_counts, items_per_source,
+                   chunk_entries: Optional[int] = None) -> "InvertedIndex":
+        """Wrap a dense incidence (compat path for reorders/ablations)."""
+        return cls(
+            store=CorpusStore.from_dense(V, entry_item, entry_value, entry_p,
+                                         entry_score,
+                                         chunk_entries=chunk_entries),
+            ebar_start=ebar_start, l_counts=l_counts,
+            items_per_source=items_per_source)
 
 
 def entry_contribution_score(
@@ -92,10 +137,27 @@ def prop31_reference_accs(
 
 
 def entry_extreme_accuracies(
-    V: np.ndarray, acc: np.ndarray, chunk: int = 4096
+    V, acc: np.ndarray, chunk: int = 4096
 ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Per-entry (min, second-min, max) provider accuracies from the
-    incidence matrix, chunked over entries to bound peak memory."""
+    incidence, chunked over entries to bound peak memory. ``V`` may be a
+    ``CorpusStore`` (iterated chunk by chunk) or a dense array."""
+    if isinstance(V, CorpusStore):
+        E = V.n_entries
+        a_min = np.empty(E, np.float64)
+        a_second = np.empty(E, np.float64)
+        a_max = np.empty(E, np.float64)
+        for ch in V.iter_chunks():
+            blk = ch.V.astype(bool).T                      # (w, S)
+            a = np.where(blk, acc[None, :], np.inf)
+            m = a.min(axis=1)
+            a[np.arange(len(a)), np.argmin(a, axis=1)] = np.inf
+            sl = slice(ch.start, ch.start + ch.width)
+            a_min[sl] = m
+            a_second[sl] = a.min(axis=1)
+            a_max[sl] = np.where(blk, acc[None, :], -np.inf).max(axis=1)
+        a_second = np.where(np.isfinite(a_second), a_second, a_min)
+        return a_min, a_second, a_max
     E = V.shape[1]
     a_min = np.empty(E, np.float64)
     a_second = np.empty(E, np.float64)
@@ -127,15 +189,34 @@ def build_index(
     p_claim: np.ndarray,
     cfg: CopyConfig,
     max_entries: Optional[int] = None,
+    chunk_entries: Optional[int] = None,
+    chunk_bytes: Optional[int] = None,
+    row_capacity: Optional[int] = None,
 ) -> InvertedIndex:
-    """Build the inverted index for a claims dataset.
+    """Build the inverted index for a claims dataset, streaming into chunks.
 
     p_claim[s, d] is the truth probability of the value s provides on d
     (identical across providers of the same value).
+
+    The incidence is written one ``(S, chunk_entries)`` chunk at a time —
+    the peak single incidence allocation is one chunk, never ``(S, E)``.
+    ``chunk_bytes`` derives the chunk width from a byte budget for that
+    peak allocation (it wins over ``chunk_entries``); ``row_capacity``
+    preallocates slack rows for ``store.append_rows``.
     """
     values = ds.values
     S, D = values.shape
     prov = values >= 0
+
+    cap = S if row_capacity is None else max(int(row_capacity), S)
+    if chunk_bytes is not None:
+        # the byte budget is a CEILING on one chunk allocation — round the
+        # derived width DOWN to the 8-entry alignment (floored at 8: below
+        # 8·rows bytes the budget is unsatisfiable and 8 is the minimum)
+        chunk_entries = max(((chunk_bytes // max(cap, 1)) // 8) * 8, 8)
+    if chunk_entries is None:
+        chunk_entries = DEFAULT_CHUNK_ENTRIES
+    chunk_entries = align_chunk(chunk_entries)
 
     # --- group claims by (item, value): vectorized via a composite key -----
     max_v = int(values.max()) + 1 if values.size and values.max() >= 0 else 1
@@ -160,14 +241,6 @@ def build_index(
     entry_value = (e_keys % max_v).astype(np.int32)
     entry_p = flat_p[e_starts]
 
-    # incidence matrix: scatter every claim of a shared group into its entry
-    # column (flat arrays are key-sorted, so groups are contiguous)
-    group_id = np.repeat(np.arange(len(uniq_key)), counts)
-    entry_of_group = np.cumsum(shared) - 1
-    in_shared = shared[group_id]
-    V = np.zeros((S, E), dtype=np.uint8)
-    V[claim_src[in_shared], entry_of_group[group_id[in_shared]]] = 1
-
     # extreme provider accuracies per entry: sort claims by (key, accuracy)
     # once, then the group's first / second / last positions are the extremes
     acc = ds.accuracy.astype(np.float64)
@@ -180,13 +253,26 @@ def build_index(
 
     entry_score = _entry_scores_vectorized(entry_p, a_min, a_second, a_max, cfg)
 
-    # sort entries by decreasing contribution score
+    # sort entries by decreasing contribution score (metadata only — the
+    # incidence is scattered straight into its final, sorted column below)
     order = np.argsort(-entry_score, kind="stable")
-    V = np.ascontiguousarray(V[:, order])
+    rank = np.empty(E, np.int64)
+    rank[order] = np.arange(E)
     entry_item = entry_item[order]
     entry_value = entry_value[order]
     entry_p = entry_p[order]
     entry_score = entry_score[order]
+
+    # stream the incidence into chunks: each claim of a shared group lands at
+    # (source, rank-of-its-entry); groups are contiguous in the key-sorted
+    # flat arrays, so the per-claim column is one gather
+    group_id = np.repeat(np.arange(len(uniq_key)), counts)
+    entry_of_group = np.cumsum(shared) - 1
+    in_shared = shared[group_id]
+    claim_col = rank[entry_of_group[group_id[in_shared]]]
+    store = CorpusStore.from_claim_coords(
+        claim_src[in_shared], claim_col, S, entry_item, entry_value,
+        entry_p, entry_score, chunk_entries=chunk_entries, capacity=cap)
 
     # Ē — maximal low-score suffix with Σ C(E) < ln(β/2α)
     pos_scores = np.maximum(entry_score, 0.0)
@@ -198,11 +284,7 @@ def build_index(
     l_counts = (prov64 @ prov64.T).astype(np.int32)
 
     return InvertedIndex(
-        V=V,
-        entry_item=entry_item,
-        entry_value=entry_value,
-        entry_p=entry_p,
-        entry_score=entry_score,
+        store=store,
         ebar_start=ebar_start,
         l_counts=l_counts,
         items_per_source=prov.sum(axis=1).astype(np.int32),
@@ -272,15 +354,11 @@ def bucketize(index: InvertedIndex, n_buckets: int = 64) -> BucketedIndex:
 def bucketize_engine(
     index: InvertedIndex, n_buckets: int = 64
 ) -> tuple[BucketedIndex, np.ndarray, np.ndarray]:
-    """p-homogeneous bucketization for the order-insensitive tiled INDEX.
+    """p-homogeneous bucketization (legacy full-reorder form).
 
-    The engine's accumulation Σ_e f(A_i, A_j, p_e)·(V Vᵀ) does not depend on
-    entry order — only the Ē boundary must stay exact (it defines the
-    considered mask). So entries are re-sorted by truth probability within
-    the non-Ē prefix and within Ē, and buckets become p-quantiles of each
-    region: the within-bucket p spread — and with it the representative-p̂
-    error the engine must cover with exact rescoring — collapses compared to
-    the score-contiguous buckets BOUND needs.
+    Kept for the kernel microbenchmark's legacy baseline; the production
+    engine uses ``engine_chunks`` (below), which produces the same p-sorted
+    regions as a uniform-width chunk store without variable-width buckets.
 
     Returns (bucketed, p_lo, p_hi): a BucketedIndex over a reordered copy of
     the index plus per-bucket p extremes for the engine's rescore bound.
@@ -296,11 +374,7 @@ def bucketize_engine(
         e0 + np.argsort(index.entry_p[e0:], kind="stable"),
     ])
     idx2 = InvertedIndex(
-        V=np.ascontiguousarray(index.V[:, order]),
-        entry_item=index.entry_item[order],
-        entry_value=index.entry_value[order],
-        entry_p=index.entry_p[order],
-        entry_score=index.entry_score[order],
+        store=index.store.gather_entries(order),
         ebar_start=e0,
         l_counts=index.l_counts,
         items_per_source=index.items_per_source,
@@ -332,3 +406,94 @@ def bucketize_engine(
     return (BucketedIndex(index=idx2, starts=bounds, p_hat=p_hat,
                           m_suffix=m_suffix, ebar_bucket=ebar_bucket),
             p_lo, p_hi)
+
+
+@dataclass
+class EngineChunks:
+    """The engine's chunk-handle view of an index (DESIGN.md §6).
+
+    Entries are re-sorted by truth probability within the non-Ē prefix and
+    within Ē (the tiled accumulation is order-insensitive; only the Ē
+    boundary must stay exact), each region is zero-padded to a chunk
+    multiple, and the result is a uniform-width ``CorpusStore`` whose chunks
+    double as the kernel's entry blocks: each chunk k carries one
+    representative p̂_k, its true p extremes (for the rescore bound δ_k),
+    and a non-Ē flag. Row capacity is padded to the engine's tile grid so
+    chunk arrays slice straight into pair tiles.
+    """
+
+    store: CorpusStore        # p-ordered regions, uniform chunk width
+    p_hat: np.ndarray         # (K,) float32 — representative p̂ per chunk
+    p_lo: np.ndarray          # (K,) float32 — min live p per chunk
+    p_hi: np.ndarray          # (K,) float32 — max live p per chunk
+    nout: np.ndarray          # (K,) float32 — 1.0 ⇔ chunk before Ē boundary
+    ebar_chunk: int           # chunks [ebar_chunk:] lie fully inside Ē
+    n_live: int               # E — real (non-padding) entries
+
+    @property
+    def n_chunks(self) -> int:
+        """K — number of uniform-width entry chunks."""
+        return self.store.n_chunks
+
+    @property
+    def width(self) -> int:
+        """Chunk width (= the kernel entry-block size block_e)."""
+        return self.store.chunk_entries
+
+
+def engine_chunks(
+    index: InvertedIndex,
+    n_buckets: int = 64,
+    row_capacity: Optional[int] = None,
+    max_width: Optional[int] = None,
+) -> EngineChunks:
+    """Build the engine's uniform-width chunk store from an index.
+
+    The chunk width is ``ceil(E / n_buckets)`` aligned up to the kernel tile
+    edge (8), so ``n_buckets`` keeps its meaning as the p̂ granularity; the
+    Ē boundary is chunk-aligned by construction (each region is padded with
+    inert zero columns), which keeps the fused kernel's per-chunk non-Ē
+    mask channel exact. ``max_width`` caps the chunk width from above (the
+    engine derives it from its per-pass byte budget) — narrower chunks just
+    mean more of them, with one p̂ each, so the cap never costs accuracy.
+    """
+    E = index.n_entries
+    e0 = index.ebar_start
+    cap = index.n_sources if row_capacity is None else int(row_capacity)
+    if E == 0:
+        empty = index.store.gather_entries(np.zeros(0, np.int64), capacity=cap)
+        z = np.zeros(0, np.float32)
+        return EngineChunks(store=empty, p_hat=z, p_lo=z, p_hi=z, nout=z,
+                            ebar_chunk=0, n_live=0)
+
+    b = align_chunk(-(-E // max(int(n_buckets), 1)))
+    if max_width is not None:
+        b = min(b, max(8, (int(max_width) // 8) * 8))
+    order_pre = np.argsort(index.entry_p[:e0], kind="stable")
+    order_suf = e0 + np.argsort(index.entry_p[e0:], kind="stable")
+    pad0 = (-e0) % b
+    pad1 = (-(E - e0)) % b
+    order = np.concatenate([
+        order_pre, np.full(pad0, -1, np.int64),
+        order_suf, np.full(pad1, -1, np.int64),
+    ])
+    store = index.store.gather_entries(order, chunk_entries=b,
+                                       capacity=cap)
+    K = store.n_chunks
+    ebar_chunk = (e0 + pad0) // b
+
+    live = store.entry_item >= 0
+    logp = np.log(np.clip(store.entry_p, 1e-9, 1.0))
+    p_hat = np.empty(K, np.float32)
+    p_lo = np.empty(K, np.float32)
+    p_hi = np.empty(K, np.float32)
+    for k in range(K):
+        seg = slice(k * b, k * b + b)
+        m = live[seg]
+        ps = store.entry_p[seg][m]
+        p_hat[k] = float(np.exp(logp[seg][m].mean())) if m.any() else 0.5
+        p_lo[k] = float(ps.min()) if m.any() else 0.5
+        p_hi[k] = float(ps.max()) if m.any() else 0.5
+    nout = (np.arange(K) < ebar_chunk).astype(np.float32)
+    return EngineChunks(store=store, p_hat=p_hat, p_lo=p_lo, p_hi=p_hi,
+                        nout=nout, ebar_chunk=ebar_chunk, n_live=E)

@@ -8,9 +8,13 @@ cares about) — and asks which corpus sources they copy from. Running the
 build, bucketize, tile pruning, kernel dispatch) on a tile grid that is
 ~identical across requests.
 
-``serve_batch`` instead stacks every pending request's rows under the corpus
-and runs ONE tiled engine pass over the union, then scatters each request's
-row-slice of the decision matrix back into its own response. This is sound
+``serve_batch`` instead answers the batch with ONE tiled engine pass over
+the union of corpus and query rows. The union is never concatenated: a
+``ResidentCorpus`` preallocates the claims buffers once with ``S_max`` slack
+rows (DESIGN.md §6), each batch writes only its query rows into the slack
+(O(q·D), not O(S·D)), and the engine sees a zero-copy row view. Each
+request's row-slice of the decision matrix is then scattered back into its
+own response. This is sound
 because a pair's exact-INDEX decision is intrinsic to the two sources'
 claims (DESIGN.md §5): co-batched strangers can create new index entries,
 but those entries only ever contribute to pairs that actually share the
@@ -104,10 +108,76 @@ class DetectResponse:
     batch_rows: int = 0           # total query rows in that pass
     engine_wall_s: float = 0.0    # wall time of the shared pass
     latency_s: float = 0.0        # submit → result (filled by the service)
+    host_copy_bytes: int = 0      # bytes staged into the resident buffers
+                                  # for this batch (query rows only)
 
     def copying_sources(self, row: int = 0) -> np.ndarray:
         """Corpus source indices the given query row is detected to copy."""
         return np.nonzero(self.copying[row])[0]
+
+
+class ResidentCorpus:
+    """Preallocated corpus + query-slack claims buffers (DESIGN.md §6).
+
+    The corpus rows are written ONCE at construction; every batch after that
+    writes only its query rows into the ``max_query_rows`` slack and hands
+    the engine a zero-copy row view — the O(S·D) per-batch union
+    concatenation the legacy ``serve_batch`` did is gone. The buffers mirror
+    the ``CorpusStore`` row-slack protocol (``store.append_rows``) one level
+    up, at the claims layer the per-batch index build streams from.
+    """
+
+    def __init__(self, base: ClaimsDataset, base_p: np.ndarray,
+                 max_query_rows: int):
+        S0, D = base.values.shape
+        self.n_corpus = S0
+        self.capacity = S0 + int(max_query_rows)
+        self.values = np.full((self.capacity, D), -1, np.int32)
+        self.accuracy = np.full(self.capacity, 0.5, np.float32)
+        self.p_claim = np.zeros((self.capacity, D), np.float32)
+        self.values[:S0] = base.values
+        self.accuracy[:S0] = base.accuracy
+        self.p_claim[:S0] = base_p
+        self._full = ClaimsDataset(values=self.values, accuracy=self.accuracy,
+                                   item_names=base.item_names)
+
+    @property
+    def n_items(self) -> int:
+        """D — item columns of the resident buffers."""
+        return self.values.shape[1]
+
+    def corpus_view(self) -> ClaimsDataset:
+        """Zero-copy dataset over the corpus rows only (no query slack).
+
+        Long-lived owners (``DetectionService``) rebind their corpus
+        reference to this view so the resident buffers are the SINGLE copy
+        of the corpus in memory — not a second one next to the caller's."""
+        return self._full.row_view(self.n_corpus)
+
+    def stage(self, requests: Sequence[DetectRequest]
+              ) -> tuple[ClaimsDataset, np.ndarray, int]:
+        """Write the batch's query rows into the slack; return the union view.
+
+        Returns ``(union_dataset, union_p, bytes_written)`` where both union
+        arrays are zero-copy views of the resident buffers covering the
+        corpus plus the staged rows, and ``bytes_written`` counts only the
+        query-row bytes (the measurable win over the legacy concat).
+        """
+        off = self.n_corpus
+        written = 0
+        for r in requests:
+            if off + r.n_rows > self.capacity:
+                raise ValueError(
+                    f"batch of {sum(q.n_rows for q in requests)} query rows "
+                    f"exceeds resident slack "
+                    f"({self.capacity - self.n_corpus} rows)")
+            rows = slice(off, off + r.n_rows)
+            self.values[rows] = r.values
+            self.accuracy[rows] = r.accuracy
+            self.p_claim[rows] = r.p_claim
+            written += r.values.nbytes + r.accuracy.nbytes + r.p_claim.nbytes
+            off += r.n_rows
+        return self._full.row_view(off), self.p_claim[:off], written
 
 
 def serve_batch(
@@ -115,6 +185,7 @@ def serve_batch(
     base_p: np.ndarray,
     engine: DetectionEngine,
     requests: Sequence[DetectRequest],
+    resident: Optional[ResidentCorpus] = None,
 ) -> list[DetectResponse]:
     """Answer a batch of requests with ONE tiled engine pass (DESIGN.md §5).
 
@@ -125,8 +196,12 @@ def serve_batch(
         serving, ``sample_verify`` for sampled serving at scale);
         ``incremental`` is rejected — its bookkeeping assumes a fixed source
         axis, which batching changes every call.
-      requests: the pending requests; their rows are stacked under the
-        corpus rows in order.
+      requests: the pending requests; their rows are staged into the
+        resident slack under the corpus rows, in order.
+      resident: the preallocated buffers to stage into. ``DetectionService``
+        passes its own (built once); a standalone call builds a transient
+        one sized for this batch — the corpus copy then happens once here
+        rather than once per batch.
 
     Returns one ``DetectResponse`` per request, in request order.
     """
@@ -140,16 +215,22 @@ def serve_batch(
             raise ValueError(
                 f"request {r.rid}: {r.values.shape[1]} items, corpus has {D}")
     S0 = base.n_sources
-    values = np.concatenate([base.values] + [r.values for r in requests])
-    acc = np.concatenate([base.accuracy] + [r.accuracy for r in requests])
-    p = np.concatenate([base_p] + [r.p_claim for r in requests])
-    union = ClaimsDataset(values=values, accuracy=acc)
+    n_rows = sum(r.n_rows for r in requests)
+    if resident is None:
+        resident = ResidentCorpus(base, base_p, max_query_rows=n_rows)
+    elif resident.n_corpus != S0 or resident.n_items != D:
+        # detection would silently run against the resident's corpus, not
+        # ``base``, and the response slices would misalign — fail fast
+        raise ValueError(
+            f"resident corpus is {resident.n_corpus}×{resident.n_items}, "
+            f"base is {S0}×{D}; serve_batch requires the resident to be "
+            f"built over the same corpus")
+    union, p, copied = resident.stage(requests)
 
     res = engine.detect(union, p)
 
     out = []
     off = S0
-    n_rows = sum(r.n_rows for r in requests)
     for r in requests:
         rows = slice(off, off + r.n_rows)
         out.append(DetectResponse(
@@ -161,6 +242,7 @@ def serve_batch(
             batch_requests=len(requests),
             batch_rows=n_rows,
             engine_wall_s=res.wall_time_s,
+            host_copy_bytes=copied,
         ))
         off += r.n_rows
     return out
@@ -174,6 +256,9 @@ class ServiceStats:
     batches: int = 0
     rows: int = 0
     rejected: int = 0             # submits that timed out on backpressure
+    host_copy_bytes: int = 0      # total bytes staged into the resident
+                                  # buffers (query rows only — the corpus is
+                                  # written once, at service construction)
 
     @property
     def mean_batch(self) -> float:
@@ -221,11 +306,17 @@ class DetectionService:
             raise ValueError(
                 "DetectionService requires a stateless engine mode "
                 "(incremental bookkeeping assumes a fixed source axis)")
-        self.base = base
-        self.base_p = np.asarray(base_p, dtype=np.float32)
         self.engine = DetectionEngine(cfg, mode=mode, **engine_options)
         self.max_batch_requests = int(max_batch_requests)
         self.max_pending_rows = int(max_pending_rows)
+        # ONE resident buffer for the service's lifetime: corpus written
+        # here once, every batch stages only its query rows (DESIGN.md §6).
+        # base/base_p are then rebound to views of it, so the service holds
+        # a single corpus copy (the caller's arrays are theirs to drop).
+        self.resident = ResidentCorpus(base, np.asarray(base_p, np.float32),
+                                       max_query_rows=self.max_pending_rows)
+        self.base = self.resident.corpus_view()
+        self.base_p = self.resident.p_claim[: self.resident.n_corpus]
         self.stats = ServiceStats()
         self._pending: deque = deque()   # (request, future, t_submit)
         self._pending_rows = 0
@@ -299,7 +390,8 @@ class DetectionService:
         """One serve_batch call; resolve (or fail) every future in it."""
         reqs = [entry[0] for entry in batch]
         try:
-            responses = serve_batch(self.base, self.base_p, self.engine, reqs)
+            responses = serve_batch(self.base, self.base_p, self.engine, reqs,
+                                    resident=self.resident)
         except Exception as exc:                      # noqa: BLE001
             for _, fut, _ in batch:
                 self._resolve(fut, exc=exc)
@@ -311,6 +403,7 @@ class DetectionService:
         self.stats.requests += len(batch)
         self.stats.batches += 1
         self.stats.rows += sum(r.n_rows for r in reqs)
+        self.stats.host_copy_bytes += responses[0].host_copy_bytes if responses else 0
 
     def flush(self) -> int:
         """Synchronously drain the queue in the caller's thread.
@@ -377,4 +470,5 @@ class DetectionService:
 
 
 __all__ = ["DetectRequest", "DetectResponse", "DetectionService",
-           "ServiceOverloaded", "ServiceStats", "serve_batch"]
+           "ResidentCorpus", "ServiceOverloaded", "ServiceStats",
+           "serve_batch"]

@@ -1,0 +1,357 @@
+"""CorpusStore — the entry-chunked incidence store (DESIGN.md §6).
+
+The inverted index's source×entry incidence matrix V is the one object that
+grows as S·E; at the ROADMAP's million-source target a dense ``(S, E)``
+array is a hard wall long before detection compute is. ``CorpusStore``
+replaces it as the single source of corpus truth across every layer:
+
+  * the incidence lives as **entry-chunked blocks** — dense int8 arrays of
+    ``(capacity, chunk_entries)``, the chunk width a multiple of the kernel
+    tile edge (8, the f32 sublane) so chunks feed the Pallas copyscore
+    kernels without relayout;
+  * per-chunk **entry metadata** (item, value id, truth probability,
+    contribution score) rides along as zero-copy views of the store's
+    entry arrays;
+  * rows are allocated with **slack capacity** so a serving layer can write
+    query rows in place (``append_rows`` / ``truncate_rows``) instead of
+    concatenating a new corpus per batch.
+
+``build_index`` streams claims into chunks without ever allocating the
+``(S, E)`` incidence whole; the engine gathers one chunk (group) at a time;
+``bound``/``incremental`` iterate chunks. The only dense materialization
+left is the explicit ``to_dense()`` compat accessor (tests, tiny data).
+
+No chunk is ever wider than ``chunk_entries`` columns, so the largest
+single incidence allocation anywhere in the pipeline is bounded by
+``capacity · chunk_entries`` bytes — ``build_index(chunk_bytes=...)``
+derives the width from that budget (the CI memory smoke asserts it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+import numpy as np
+
+#: Default entry-chunk width (columns). A multiple of the kernel entry block
+#: (512 = default block_e) and of the pair-tile edge alignment (8).
+DEFAULT_CHUNK_ENTRIES = 512
+
+
+def align_chunk(width: int) -> int:
+    """Round a requested chunk width up to the kernel tile-edge multiple (8)."""
+    return max(8, -(-int(width) // 8) * 8)
+
+
+@dataclass
+class ChunkView:
+    """One chunk handle: live incidence rows + its entry-metadata views."""
+
+    start: int                 # global index of this chunk's first entry
+    V: np.ndarray              # (n_rows, width) int8 incidence (a view)
+    item: np.ndarray           # (width,) int32 — D_E (−1 for padding columns)
+    value: np.ndarray          # (width,) int32 — v_E (−1 for padding columns)
+    p: np.ndarray              # (width,) float32 — P(E)
+    score: np.ndarray          # (width,) float32 — C(E)
+
+    @property
+    def width(self) -> int:
+        """Number of entry columns in this chunk."""
+        return self.V.shape[1]
+
+
+@dataclass
+class CorpusStore:
+    """Entry-chunked incidence + metadata; rows have slack capacity.
+
+    Invariants: every chunk except the last is exactly ``chunk_entries``
+    wide (a multiple of 8); chunk row dimension is ``capacity`` with rows
+    ``[n_rows:]`` zero (slack for ``append_rows``). Columns may be inert
+    padding (``entry_item == -1``, all-zero incidence) — they contribute
+    nothing to any co-occurrence count, so every consumer can ignore them.
+    """
+
+    chunks: list = field(default_factory=list)   # list[np.ndarray] (capacity, w)
+    entry_item: np.ndarray = None                # (E,) int32
+    entry_value: np.ndarray = None               # (E,) int32
+    entry_p: np.ndarray = None                   # (E,) float32
+    entry_score: np.ndarray = None               # (E,) float32
+    chunk_entries: int = DEFAULT_CHUNK_ENTRIES
+    n_rows: int = 0
+    capacity: int = 0
+
+    def __post_init__(self):
+        if self.entry_item is None:
+            self.entry_item = np.zeros(0, np.int32)
+        if self.entry_value is None:
+            self.entry_value = np.zeros(0, np.int32)
+        if self.entry_p is None:
+            self.entry_p = np.zeros(0, np.float32)
+        if self.entry_score is None:
+            self.entry_score = np.zeros(0, np.float32)
+        if self.capacity < self.n_rows:
+            self.capacity = self.n_rows
+
+    # -- geometry -----------------------------------------------------------
+
+    @property
+    def n_entries(self) -> int:
+        """E — total entry columns across chunks (padding included)."""
+        return len(self.entry_item)
+
+    @property
+    def n_chunks(self) -> int:
+        """Number of entry chunks."""
+        return len(self.chunks)
+
+    @property
+    def max_chunk_nbytes(self) -> int:
+        """Largest single incidence allocation held by this store."""
+        return max((c.nbytes for c in self.chunks), default=0)
+
+    def chunk_start(self, c: int) -> int:
+        """Global index of chunk ``c``'s first entry column."""
+        return c * self.chunk_entries
+
+    def chunk(self, c: int) -> ChunkView:
+        """Chunk ``c`` as a handle: live rows + metadata views (zero copy)."""
+        s0 = self.chunk_start(c)
+        s1 = s0 + self.chunks[c].shape[1]
+        return ChunkView(
+            start=s0,
+            V=self.chunks[c][: self.n_rows],
+            item=self.entry_item[s0:s1],
+            value=self.entry_value[s0:s1],
+            p=self.entry_p[s0:s1],
+            score=self.entry_score[s0:s1],
+        )
+
+    def iter_chunks(self) -> Iterator[ChunkView]:
+        """Iterate chunk handles in entry order."""
+        for c in range(self.n_chunks):
+            yield self.chunk(c)
+
+    # -- column access ------------------------------------------------------
+
+    def column(self, e: int) -> np.ndarray:
+        """Incidence column of entry ``e`` over live rows (a view)."""
+        c, off = divmod(int(e), self.chunk_entries)
+        return self.chunks[c][: self.n_rows, off]
+
+    def providers(self, e: int) -> np.ndarray:
+        """S̄(E) — indices of the sources providing entry ``e``'s value."""
+        return np.nonzero(self.column(e))[0]
+
+    def slice_entries(self, e0: int, e1: int,
+                      dtype=np.int8, rows: Optional[int] = None) -> np.ndarray:
+        """Dense ``(rows, e1 − e0)`` gather of an entry range across chunks.
+
+        Intended for *narrow* ranges (one bucket / one kernel block) — the
+        result is a fresh allocation of exactly the requested width, so the
+        caller controls peak memory. ``rows`` defaults to the live rows.
+        """
+        e0, e1 = int(e0), int(e1)
+        n = self.n_rows if rows is None else int(rows)
+        out = np.zeros((n, e1 - e0), dtype=dtype)
+        w = self.chunk_entries
+        c0 = e0 // w if w else 0
+        for c in range(c0, self.n_chunks):
+            s0 = self.chunk_start(c)
+            if s0 >= e1:
+                break
+            s1 = s0 + self.chunks[c].shape[1]
+            lo, hi = max(e0, s0), min(e1, s1)
+            if lo < hi:
+                out[: min(n, self.n_rows), lo - e0: hi - e0] = \
+                    self.chunks[c][: min(n, self.n_rows), lo - s0: hi - s0]
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        """The full ``(n_rows, E)`` incidence — compat/debug accessor ONLY.
+
+        This is the one densifying path; production code must stream chunks
+        instead (the engine, bound, and incremental all do). With a single
+        chunk this is a zero-copy view.
+        """
+        if self.n_chunks == 1:
+            return self.chunks[0][: self.n_rows]
+        if self.n_chunks == 0:
+            return np.zeros((self.n_rows, 0), np.int8)
+        return np.concatenate(
+            [c[: self.n_rows] for c in self.chunks], axis=1)
+
+    def cooccurrence(self, stop: Optional[int] = None,
+                     dtype=np.float32) -> np.ndarray:
+        """Pair co-occurrence counts Σ_e V[i,e]·V[j,e] for entries < ``stop``.
+
+        Accumulated chunk by chunk — peak incidence residency is one chunk.
+        0/1 products in float32 are exact integers (< 2²⁴), so the result is
+        bit-equal to the dense matmul for any chunking.
+        """
+        stop = self.n_entries if stop is None else int(stop)
+        S = self.n_rows
+        out = np.zeros((S, S), dtype)
+        for ch in self.iter_chunks():
+            if ch.start >= stop:
+                break
+            w = min(ch.width, stop - ch.start)
+            v = ch.V[:, :w].astype(dtype)
+            out += v @ v.T
+        return out
+
+    # -- derived stores -----------------------------------------------------
+
+    def gather_entries(self, order: np.ndarray,
+                       chunk_entries: Optional[int] = None,
+                       capacity: Optional[int] = None) -> "CorpusStore":
+        """A new store whose column ``j`` is this store's column ``order[j]``.
+
+        ``order`` may contain ``-1`` markers for inert zero-padding columns
+        (the engine uses them to align region boundaries to chunk edges).
+        Built chunk by chunk — never materializes either incidence whole.
+        """
+        order = np.asarray(order, np.int64)
+        E_out = len(order)
+        w = self.chunk_entries if chunk_entries is None else align_chunk(chunk_entries)
+        cap = self.capacity if capacity is None else max(int(capacity), self.n_rows)
+        live = order >= 0
+        safe = np.where(live, order, 0)
+
+        item = np.full(E_out, -1, np.int32)
+        value = np.full(E_out, -1, np.int32)
+        p = np.zeros(E_out, np.float32)
+        score = np.zeros(E_out, np.float32)
+        item[live] = self.entry_item[safe[live]]
+        value[live] = self.entry_value[safe[live]]
+        p[live] = self.entry_p[safe[live]]
+        score[live] = self.entry_score[safe[live]]
+
+        chunks = []
+        src_w = max(self.chunk_entries, 1)
+        for j0 in range(0, E_out, max(w, 1)):
+            width = min(w, E_out - j0)
+            blk = np.zeros((cap, width), np.int8)
+            sel = order[j0: j0 + width]
+            lv = sel >= 0
+            if lv.any():
+                src_cols = sel[lv]
+                dst_cols = np.nonzero(lv)[0]
+                # group source columns by their chunk to keep slicing local
+                cids = src_cols // src_w
+                for cid in np.unique(cids):
+                    m = cids == cid
+                    blk[: self.n_rows, dst_cols[m]] = \
+                        self.chunks[cid][: self.n_rows, src_cols[m] - cid * src_w]
+            chunks.append(blk)
+        return CorpusStore(chunks=chunks, entry_item=item, entry_value=value,
+                           entry_p=p, entry_score=score, chunk_entries=w,
+                           n_rows=self.n_rows, capacity=cap)
+
+    # -- row mutation (serving / corpus-mutation follow-on) ------------------
+
+    def append_rows(self, values_rows: np.ndarray) -> int:
+        """Write incidence rows for new sources into the slack capacity.
+
+        ``values_rows`` is ``(q, D)`` int32 in the corpus's value coding. For
+        every *existing* entry (D_E, v_E) the new rows' membership bit is set
+        where their claim matches — one vectorized ``(q, width)`` comparison
+        per chunk, so the cost is O(q·E), independent of the corpus rows.
+        Values the new rows share only with each other (or that turn a
+        singleton into a shared value) are NOT in the entry set — they need
+        the incremental re-index of the corpus-mutation follow-on
+        (ROADMAP). Returns the number of incidence bits set.
+        """
+        values_rows = np.asarray(values_rows, np.int32)
+        q = values_rows.shape[0]
+        if self.n_rows + q > self.capacity:
+            raise ValueError(
+                f"append_rows: {q} rows exceed capacity "
+                f"({self.n_rows}/{self.capacity} used)")
+        bits = 0
+        for c in range(self.n_chunks):
+            s0 = self.chunk_start(c)
+            s1 = s0 + self.chunks[c].shape[1]
+            it = self.entry_item[s0:s1]
+            va = self.entry_value[s0:s1]
+            ok = it >= 0
+            hit = np.zeros((q, s1 - s0), np.int8)
+            if ok.any():
+                hit[:, ok] = (
+                    values_rows[:, it[ok]] == va[ok][None, :]
+                ).astype(np.int8)
+            self.chunks[c][self.n_rows: self.n_rows + q] = hit
+            bits += int(hit.sum())
+        self.n_rows += q
+        return bits
+
+    def truncate_rows(self, n_rows: int) -> None:
+        """Drop appended rows back down to ``n_rows`` (zeroing their slack)."""
+        n_rows = int(n_rows)
+        if n_rows > self.n_rows:
+            raise ValueError(f"truncate_rows({n_rows}) above n_rows={self.n_rows}")
+        for c in self.chunks:
+            c[n_rows: self.n_rows] = 0
+        self.n_rows = n_rows
+
+    # -- constructors -------------------------------------------------------
+
+    @classmethod
+    def from_dense(cls, V: np.ndarray, entry_item, entry_value, entry_p,
+                   entry_score, chunk_entries: Optional[int] = None,
+                   capacity: Optional[int] = None) -> "CorpusStore":
+        """Wrap a dense ``(S, E)`` incidence (compat path; tests, reorders).
+
+        Default keeps one chunk spanning all entries, so no re-chunking copy
+        happens and ``to_dense()`` stays a view.
+        """
+        S, E = V.shape
+        cap = S if capacity is None else int(capacity)
+        w = max(E, 1) if chunk_entries is None else align_chunk(chunk_entries)
+        chunks = []
+        for j0 in range(0, E, w):
+            blk = np.zeros((cap, min(w, E - j0)), np.int8)
+            blk[:S] = V[:, j0: j0 + blk.shape[1]]
+            chunks.append(blk)
+        return cls(chunks=chunks,
+                   entry_item=np.asarray(entry_item, np.int32),
+                   entry_value=np.asarray(entry_value, np.int32),
+                   entry_p=np.asarray(entry_p, np.float32),
+                   entry_score=np.asarray(entry_score, np.float32),
+                   chunk_entries=w, n_rows=S, capacity=cap)
+
+    @classmethod
+    def from_claim_coords(cls, src: np.ndarray, col: np.ndarray,
+                          n_rows: int, entry_item, entry_value, entry_p,
+                          entry_score, chunk_entries: int,
+                          capacity: Optional[int] = None) -> "CorpusStore":
+        """Stream claim coordinates into chunks (the ``build_index`` path).
+
+        ``src[k]`` / ``col[k]`` place claim k at incidence position
+        (source, entry column). Claims are bucketed by chunk with one sort,
+        then each chunk is allocated and scattered independently — the peak
+        incidence allocation is ONE chunk (``capacity · chunk_entries``
+        int8 bytes), never the ``(S, E)`` whole.
+        """
+        w = align_chunk(chunk_entries)
+        E = len(entry_item)
+        cap = n_rows if capacity is None else int(capacity)
+        order = np.argsort(col, kind="stable")
+        src, col = src[order], col[order]
+        n_chunks = -(-E // w) if E else 0
+        bounds = np.searchsorted(col, np.arange(0, n_chunks + 1) * w)
+        chunks = []
+        for c in range(n_chunks):
+            width = min(w, E - c * w)
+            blk = np.zeros((cap, width), np.int8)
+            lo, hi = bounds[c], bounds[c + 1]
+            blk[src[lo:hi], col[lo:hi] - c * w] = 1
+            chunks.append(blk)
+        return cls(chunks=chunks,
+                   entry_item=np.asarray(entry_item, np.int32),
+                   entry_value=np.asarray(entry_value, np.int32),
+                   entry_p=np.asarray(entry_p, np.float32),
+                   entry_score=np.asarray(entry_score, np.float32),
+                   chunk_entries=w, n_rows=n_rows, capacity=cap)
+
+
+__all__ = ["CorpusStore", "ChunkView", "DEFAULT_CHUNK_ENTRIES", "align_chunk"]

@@ -101,6 +101,20 @@ class ClaimsDataset:
                     p[s, d] = value_probs[(d, int(v))]
         return p
 
+    def row_view(self, n_rows: int) -> "ClaimsDataset":
+        """A ZERO-COPY view of the first ``n_rows`` sources.
+
+        The returned dataset shares this dataset's buffers — the serving
+        layer's resident corpus (``core/serving.ResidentCorpus``) uses this
+        to expose corpus + staged query rows without concatenating a new
+        dataset per batch (DESIGN.md §6). Mutating either aliases the other.
+        """
+        return ClaimsDataset(
+            values=self.values[:n_rows],
+            accuracy=self.accuracy[:n_rows],
+            item_names=self.item_names,
+        )
+
     def subset_items(self, item_idx: np.ndarray) -> "ClaimsDataset":
         """The dataset restricted to the given item columns (sources kept).
 

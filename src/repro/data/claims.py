@@ -128,7 +128,18 @@ def synthetic_claims(spec: SyntheticSpec) -> SyntheticClaims:
     """Generate sources with planted accuracies, coverage profile, and
     copying cliques (each clique: one original + members that copy a random
     `copy_selectivity` fraction of its claims and independently fill the rest).
+
+    Raises ``ValueError`` when the clique plan needs more distinct sources
+    than exist — clique members are drawn without replacement, so
+    ``n_cliques · clique_size > n_sources`` would spin the rejection loop
+    below forever instead of ever returning.
     """
+    needed = spec.n_cliques * spec.clique_size
+    if needed > spec.n_sources:
+        raise ValueError(
+            f"spec needs {spec.n_cliques} cliques × {spec.clique_size} "
+            f"distinct sources = {needed}, but n_sources={spec.n_sources}; "
+            f"shrink the cliques or add sources")
     rng = np.random.default_rng(spec.seed)
     S, D = spec.n_sources, spec.n_items
     true_vals = np.zeros(D, dtype=np.int32)    # truth coded as value 0

@@ -2,6 +2,11 @@
 
 ``copyscore``      — pads sources/entries to block multiples, dispatches to
                      the Pallas kernel (TPU) or its jnp oracle (CPU/dry-run).
+``copyscore_store``— the chunked-store dispatch (DESIGN.md §6): streams a
+                     ``CorpusStore``'s entry chunks through the kernel one
+                     at a time, accumulating on the host — peak incidence
+                     residency is one chunk, results bit-equal to the dense
+                     ``copyscore`` (f32 additions happen in the same order).
 ``flash_attention``— differentiable (custom_vjp) flash attention; dispatches
                      to the Pallas kernels on TPU, interpret mode in tests,
                      and the jnp reference on CPU otherwise.
@@ -85,6 +90,43 @@ def copyscore(
         s=s, n_false=n_false, block_i=block_i, block_j=block_j,
         block_e=block_e, interpret=(impl == "interpret"))
     return c[:S, :S], n[:S, :S]
+
+
+def copyscore_store(
+    store,                  # core.store.CorpusStore — entry-chunked incidence
+    p_hat,                  # (n_chunks,) representative p̂ per chunk
+    acc,                    # (S,) accuracies
+    *,
+    s: float,
+    n_false: float,
+    block_i: int = 128,
+    block_j: int = 128,
+    impl: str = "auto",     # auto | pallas | interpret | ref
+):
+    """Full-square C_same→ / shared counts streamed from a chunked store.
+
+    Each chunk is one kernel entry block carrying one representative p̂ —
+    the chunked twin of ``copyscore`` over a dense, bucket-aligned
+    incidence, with the incidence only ever resident one chunk at a time.
+    The per-chunk outputs are accumulated on the host in float32 in chunk
+    order: counts are BIT-equal to one dense call (0/1 sums stay integer-
+    exact), scores agree to f32 round-off (same addition order, but each
+    chunk's elementwise score math compiles separately and may fuse
+    differently than inside the dense scan). Asserted by
+    tests/test_store.py.
+    """
+    S = store.n_rows
+    p_hat = np.asarray(p_hat, np.float32)
+    c = np.zeros((S, S), np.float32)
+    n = np.zeros((S, S), np.float32)
+    for k, ch in enumerate(store.iter_chunks()):
+        ck, nk = copyscore(
+            ch.V.astype(np.float32), p_hat[k: k + 1], acc,
+            s=s, n_false=n_false, block_i=block_i, block_j=block_j,
+            block_e=ch.width, impl=impl)
+        c += np.asarray(ck, np.float32)
+        n += np.asarray(nk, np.float32)
+    return c, n
 
 
 def copyscore_tile(

@@ -160,6 +160,54 @@ def test_cancelled_future_does_not_kill_worker(corpus, requests):
         assert f.result(timeout=60).copying.shape[1] == sc.dataset.n_sources
 
 
+def test_resident_store_zero_full_corpus_concat(corpus, requests, monkeypatch):
+    """ISSUE 4: the service's resident buffers kill the per-batch O(S·D)
+    union concat — no np.concatenate anywhere near corpus size happens while
+    serving, the engine sees zero-copy views of the resident buffers, and
+    the staged bytes are only the query rows."""
+    sc, p = corpus
+    reqs, _ = requests
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=4)
+    # the union handed to the engine is a view of the resident buffers
+    union, union_p, staged = svc.resident.stage(reqs)
+    assert np.shares_memory(union.values, svc.resident.values)
+    assert np.shares_memory(union_p, svc.resident.p_claim)
+    assert staged == sum(r.values.nbytes + r.accuracy.nbytes +
+                         r.p_claim.nbytes for r in reqs)
+
+    corpus_bytes = sc.dataset.values.nbytes
+    concat_sizes = []
+    orig = np.concatenate
+
+    def spy(arrays, *a, **kw):
+        out = orig(arrays, *a, **kw)
+        concat_sizes.append(out.nbytes)
+        return out
+
+    monkeypatch.setattr(np, "concatenate", spy)
+    futs = [svc.submit(r) for r in reqs]
+    assert svc.flush() == len(reqs)
+    monkeypatch.undo()
+    assert max(concat_sizes, default=0) < corpus_bytes // 2, \
+        "a full-corpus-sized concatenation happened during serving"
+    resp = futs[0].result()
+    assert resp.host_copy_bytes > 0
+    assert resp.host_copy_bytes < corpus_bytes          # query rows only
+    assert svc.stats.host_copy_bytes == resp.host_copy_bytes
+
+
+def test_serve_batch_overflowing_resident_slack_rejected(corpus, requests):
+    """A batch larger than the resident slack fails fast with a clear error."""
+    sc, p = corpus
+    reqs, _ = requests
+    from repro.core.serving import ResidentCorpus
+    rc = ResidentCorpus(sc.dataset, p, max_query_rows=2)
+    eng = DetectionEngine(CFG, mode="bucketed", tile=64)
+    with pytest.raises(ValueError, match="slack"):
+        serve_batch(sc.dataset, p, eng, reqs, resident=rc)
+
+
 def test_flush_refused_while_worker_runs(corpus):
     """flush() must not drive the stateful engine from a second thread."""
     sc, p = corpus

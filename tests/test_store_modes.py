@@ -1,0 +1,83 @@
+"""ISSUE 4 acceptance: engine decisions are identical store-vs-dense —
+chunked CorpusStore (narrow chunks) against a single-chunk (dense) store —
+for every engine mode, at S ∈ {64, 512} × {1, 8} devices.
+
+Runs in a subprocess with 8 virtual devices (as the other sharded tests);
+device counts are exercised via the engine's ``devices`` option inside one
+process. Modes that never touch the mesh (pairwise, exact, bound family,
+incremental) are compared once; the tiled modes run under both mesh sizes.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import CopyConfig, DetectionEngine, build_index
+    from repro.data.claims import SyntheticSpec, oracle_claim_probs, synthetic_claims
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    CHUNKED, DENSE = 24, 1 << 22
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+
+    def decisions(mode, sc, p, chunk, devices):
+        eng = DetectionEngine(cfg, mode=mode, tile=64, devices=devices,
+                              sample_rate=0.2, sample_seed=1,
+                              store_chunk_entries=chunk)
+        if mode in ("exact", "bound", "bound+", "hybrid", "bucketed"):
+            idx = build_index(sc.dataset, p, cfg, chunk_entries=chunk)
+            if mode == "bucketed" and chunk == CHUNKED:
+                assert idx.store.n_chunks > 1, "chunked run must be multi-chunk"
+            out = [eng.detect(sc.dataset, p, index=idx).copying]
+        elif mode == "incremental":
+            out = [eng.detect(sc.dataset, p).copying]
+            rng = np.random.default_rng(7)
+            p2 = np.clip(p + np.where(p > 0, rng.normal(0, 0.004, p.shape), 0),
+                         1e-3, 0.999).astype(np.float32)
+            out.append(eng.detect(sc.dataset, p2).copying)
+        else:
+            out = [eng.detect(sc.dataset, p).copying]
+        return out
+
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        for mode in ("pairwise", "exact", "bound", "bound+", "hybrid",
+                     "incremental", "sampled", "sample_verify", "bucketed"):
+            dev_counts = (1, 8) if mode in ("bucketed", "sampled",
+                                            "sample_verify") else (1,)
+            for n_dev in dev_counts:
+                a = decisions(mode, sc, p, CHUNKED, n_dev)
+                b = decisions(mode, sc, p, DENSE, n_dev)
+                eq = all(np.array_equal(x, y) for x, y in zip(a, b))
+                nz = int(sum(x.sum() for x in a))
+                out[f"S{S}/{mode}/dev{n_dev}"] = {"equal": bool(eq),
+                                                  "copying_bits": nz}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_all_modes_store_vs_dense_identical():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=600,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    # 9 modes; 3 tiled modes get an extra dev8 entry → 12 combos per S
+    assert len(out) == 24, sorted(out)
+    for combo, r in out.items():
+        assert r["equal"], f"{combo}: store-vs-dense decisions diverged"
+    # the worlds actually contain copying to disagree about
+    assert any(r["copying_bits"] > 0 for r in out.values())
