@@ -15,6 +15,10 @@ CI and future PRs can diff the perf trajectory.
   store   chunked CorpusStore: serve_batch host-copy bytes +   (store)
           req/s before/after the preallocated resident store;
           chunk-bytes-cap telemetry; decisions asserted equal
+  mutate  live corpus mutation: commit_rows latency vs full    (mutation)
+          re-index rebuild (≥5× asserted), commit+detect vs
+          rebuild+detect under a skewed request mix (cache hit
+          rate emitted), decisions asserted == rebuild
   serve   batched serving: req/s + p50/p99 latency vs batch    (serving)
           size; asserts batched == per-request decisions and
           sample_verify == exact on its candidate set
@@ -598,6 +602,179 @@ def store():
          f"decisions_match_exact={int(agree)}")
 
 
+def mutate():
+    """Live corpus mutation scenario (ISSUE 5): delta-chunk commits vs full
+    re-index rebuilds, and cached serving across commits.
+
+    A 256-source corpus takes a stream of commits whose rows claim only the
+    UPPER half of the item axis, while a zipf-skewed request mix claims only
+    the LOWER half — so no commit can touch an entry any cached pair shares,
+    and the invalidation-aware ResultCache keeps serving across epochs
+    (an epoch-keyed cache would drop everything). Asserts:
+
+      * ``commit_rows`` ≥ 5× faster than ``build_index`` over the union;
+      * commit+detect (mutation path, cache on) ≥ 5× faster than
+        rebuild+detect (fresh index + uncached passes) per wave;
+      * decisions after the full commit schedule equal a rebuild from the
+        union claim set, for the served mix AND fresh probe requests.
+    """
+    import jax
+    from repro.core import build_index
+    from repro.core.index import commit_rows as index_commit
+    from repro.core.serving import DetectRequest, DetectionService, serve_batch
+    from repro.core.types import ClaimsDataset
+    from repro.data.claims import (
+        SyntheticSpec,
+        oracle_claim_probs,
+        synthetic_claims,
+    )
+
+    S, D, q = 256, 1024, 8
+    n_pool, n_waves, mix_per_wave = 6, 3, 12
+    sc = synthetic_claims(SyntheticSpec(
+        n_sources=S, n_items=D, coverage="book", n_cliques=6, clique_size=3,
+        clique_items=12, seed=0))
+    p = oracle_claim_probs(sc)
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(7)
+    n_false = int(max(sc.dataset.values.max(), 1))
+
+    def rows_on(lo, hi, n_rows, copy_of=None):
+        """Query rows claiming only items in [lo, hi); optionally copiers."""
+        vals = -np.ones((n_rows, D), np.int32)
+        for r in range(n_rows):
+            if copy_of is not None:
+                o = int(rng.integers(0, S))
+                o_idx = np.nonzero(sc.dataset.values[o, lo:hi] >= 0)[0] + lo
+                take = o_idx[rng.random(o_idx.size) < 0.8]
+                vals[r, take] = sc.dataset.values[o, take]
+            idx = lo + rng.choice(hi - lo, size=24, replace=False)
+            idx = idx[vals[r, idx] < 0]
+            correct = rng.random(idx.size) < 0.7
+            vals[r, idx] = np.where(correct, 0,
+                                    rng.integers(1, n_false + 1, idx.size))
+        acc = np.full(n_rows, 0.7, np.float32)
+        pc = np.where(vals == 0, 0.95,
+                      np.where(vals > 0, 0.02, 0.0)).astype(np.float32)
+        return vals, acc, pc
+
+    # request pool on the lower item half (half of them corpus copiers)
+    pool = []
+    for i in range(n_pool):
+        vals, acc, pc = rows_on(0, D // 2, q,
+                                copy_of=(i % 2 == 0) or None)
+        pool.append(DetectRequest(rid=i, values=vals, accuracy=acc, p_claim=pc))
+    # zipf-skewed mix over the pool, fixed across waves
+    mix_ids = (rng.zipf(1.5, size=n_waves * mix_per_wave) - 1) % n_pool
+    commits = [rows_on(D // 2, D, q) for _ in range(n_waves)]
+
+    # ---- 1. raw index maintenance: commit_rows vs build_index rebuild -----
+    idx = build_index(sc.dataset, p, CFG, row_capacity=S + n_waves * q)
+    union_vals, union_acc, union_p = sc.dataset.values, sc.dataset.accuracy, p
+    t_commit_total = t_rebuild_total = 0.0
+    for vals, acc, pc in commits:
+        union_vals = np.concatenate([union_vals, vals])
+        union_acc = np.concatenate([union_acc, acc])
+        union_p = np.concatenate([union_p, pc])
+        union = ClaimsDataset(values=union_vals, accuracy=union_acc)
+        t0 = time.perf_counter()
+        info = index_commit(idx, union, union_p, CFG, q, compact=False)
+        t_commit_total += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        idx_rebuilt = build_index(union, union_p, CFG)
+        t_rebuild_total += time.perf_counter() - t0
+    speedup = t_rebuild_total / max(t_commit_total, 1e-9)
+    emit(f"mutate/S{S}/dev{n_dev}/commit_ms_per_wave",
+         round(t_commit_total / n_waves * 1e3, 2),
+         f"bits={info.bits_set} new_entries={info.new_entries} "
+         f"delta_chunks={idx.store.n_delta_chunks}")
+    emit(f"mutate/S{S}/dev{n_dev}/rebuild_ms_per_wave",
+         round(t_rebuild_total / n_waves * 1e3, 2),
+         f"speedup={speedup:.1f}x")
+    assert speedup >= 5.0, (t_commit_total, t_rebuild_total)
+    # the committed index must decide exactly like the rebuilt one
+    eng_c, eng_r = _engine("bucketed", tile=64), _engine("bucketed", tile=64)
+    union = ClaimsDataset(values=union_vals, accuracy=union_acc)
+    res_c = eng_c.detect(union, union_p, index=idx)
+    res_r = eng_r.detect(union, union_p, index=idx_rebuilt)
+    match = bool(np.array_equal(res_c.copying, res_r.copying))
+    assert match, "committed-index decisions diverged from rebuild"
+    emit(f"mutate/S{S}/dev{n_dev}/decisions_match_rebuild", int(match),
+         f"entries={idx.store.n_live_entries}")
+
+    # ---- 2. end-to-end: commit+detect vs rebuild+detect -------------------
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=8, max_pending_rows=256)
+    for r in pool:                                    # warm-up + JIT compile
+        svc.submit(r)
+    svc.flush()
+    svc.stats = type(svc.stats)()
+
+    def serve_mix(target, wave):
+        ids = mix_ids[wave * mix_per_wave: (wave + 1) * mix_per_wave]
+        futs = [target.submit(pool[i]) for i in ids]
+        target.flush()
+        return [f.result() for f in futs]
+
+    corpus_v, corpus_a, corpus_p = (sc.dataset.values, sc.dataset.accuracy, p)
+    t_mutate = 0.0
+    t_rebuild = 0.0
+    resp_a = []
+    resp_b = []
+    for wave, (vals, acc, pc) in enumerate(commits):
+        corpus_v = np.concatenate([corpus_v, vals])
+        corpus_a = np.concatenate([corpus_a, acc])
+        corpus_p = np.concatenate([corpus_p, pc])
+        # path A — the mutation path: commit into the live service, then
+        # serve the wave's skewed mix (repeats hit the ResultCache)
+        t0 = time.perf_counter()
+        svc.commit(vals, acc, pc)
+        resp_a.append(serve_mix(svc, wave))
+        t_mutate += time.perf_counter() - t0
+        # path B — the rebuild path: fresh index over the grown corpus (a
+        # new service == build_index + resident copy), uncached passes
+        t0 = time.perf_counter()
+        cold = DetectionService(
+            ClaimsDataset(values=corpus_v, accuracy=corpus_a), corpus_p, CFG,
+            mode="bucketed", tile=64, max_batch_requests=8,
+            result_cache=False)
+        resp_b.append(serve_mix(cold, wave))
+        t_rebuild += time.perf_counter() - t0
+    st = svc.stats
+    e2e = t_rebuild / max(t_mutate, 1e-9)
+    emit(f"mutate/S{S}/dev{n_dev}/commit_detect_s", round(t_mutate, 3),
+         f"cache_hit_rate={st.cache_hit_rate:.2f} hits={st.cache_hits} "
+         f"misses={st.cache_misses}")
+    emit(f"mutate/S{S}/dev{n_dev}/rebuild_detect_s", round(t_rebuild, 3),
+         f"speedup={e2e:.1f}x")
+    assert st.cache_hit_rate > 0.5, st
+    assert e2e >= 5.0, (t_mutate, t_rebuild)
+    emit(f"mutate/S{S}/dev{n_dev}/commit_detect_speedup", round(e2e, 1),
+         f"bar=5.0 waves={n_waves}")
+
+    # ---- 3. served decisions equal the rebuild path, wave by wave ---------
+    agree = all(
+        np.array_equal(a.copying, b.copying)
+        and np.array_equal(a.intra_copying, b.intra_copying)
+        for wa, wb in zip(resp_a, resp_b) for a, b in zip(wa, wb))
+    assert agree, "cached/committed serving diverged from rebuild"
+    # fresh probes (never cached) against the final corpus
+    probe_vals, probe_acc, probe_p = rows_on(0, D, q, copy_of=True)
+    probe = DetectRequest(rid=99, values=probe_vals, accuracy=probe_acc,
+                          p_claim=probe_p)
+    fut = svc.submit(probe)
+    svc.flush()
+    a = fut.result()
+    eng = _engine("bucketed", tile=64)
+    b = serve_batch(ClaimsDataset(values=corpus_v, accuracy=corpus_a),
+                    corpus_p, eng, [probe])[0]
+    probe_match = bool(np.array_equal(a.copying, b.copying))
+    assert probe_match, "probe decisions diverged from rebuild"
+    emit(f"mutate/S{S}/dev{n_dev}/served_decisions_match_rebuild",
+         int(agree and probe_match),
+         f"cache_invalidations={st.cache_invalidations}")
+
+
 def lm():
     """Training-substrate throughput smoke (tiny llama on CPU)."""
     import jax
@@ -630,9 +807,9 @@ def lm():
 
 # default order: cheapest first so partial runs still cover most tables
 TABLES = {
-    "lm": lm, "fig2": fig2, "fig3": fig3, "store": store, "serve": serve,
-    "scaling": scaling, "kernel": kernel, "table8": table8, "table9": table9,
-    "table10": table10, "table6": table6, "table7": table7,
+    "lm": lm, "fig2": fig2, "fig3": fig3, "store": store, "mutate": mutate,
+    "serve": serve, "scaling": scaling, "kernel": kernel, "table8": table8,
+    "table9": table9, "table10": table10, "table6": table6, "table7": table7,
 }
 
 

@@ -30,26 +30,44 @@ from repro.core.incremental import (
     make_incremental_state,
     rescore_pairs_exact,
 )
-from repro.core.index import build_index, bucketize, engine_chunks
+from repro.core.index import (
+    CommitInfo,
+    build_index,
+    bucketize,
+    commit_rows,
+    compact_index,
+    engine_chunks,
+    rollback_commit,
+)
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import pairwise_detect
 from repro.core.serving import (
     DetectionService,
     DetectRequest,
     DetectResponse,
+    ReplicaRouter,
     ResidentCorpus,
+    ResultCache,
     serve_batch,
 )
 from repro.core.store import CorpusStore
 from repro.core.truthfind import fusion_accuracy, truth_finding
-from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult, pair_f_measure
+from repro.core.types import (
+    ClaimsDataset,
+    CopyConfig,
+    DetectionResult,
+    claim_value_keys,
+    pair_f_measure,
+)
 
 __all__ = [
     "CopyConfig", "ClaimsDataset", "DetectionResult", "pair_f_measure",
+    "claim_value_keys",
     "DetectionEngine", "EngineOptions", "CorpusStore",
-    "DetectRequest", "DetectResponse", "DetectionService", "ResidentCorpus",
-    "serve_batch",
+    "DetectRequest", "DetectResponse", "DetectionService", "ReplicaRouter",
+    "ResidentCorpus", "ResultCache", "serve_batch",
     "pairwise_detect", "build_index", "bucketize", "engine_chunks",
+    "commit_rows", "rollback_commit", "compact_index", "CommitInfo",
     "index_detect_exact", "bucketed_index_detect",
     "bound_detect", "hybrid_detect",
     "make_incremental_state", "incremental_detect", "rescore_pairs_exact",

@@ -37,8 +37,15 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.index import BucketedIndex, InvertedIndex, bucketize, build_index
+from repro.core.index import (
+    BucketedIndex,
+    InvertedIndex,
+    bucketize,
+    build_index,
+    canonicalized,
+)
 from repro.core.scoring import (
+    bucket_score_deltas,
     decide_copying,
     pair_scores_subset,
     posterior_independence,
@@ -59,20 +66,26 @@ class BoundState:
     dec_bucket: np.ndarray     # bucket index of the decision (K if undecided)
     considered: np.ndarray     # co-occur outside Ē
     c_hat: np.ndarray          # Ĉ→ = C⁰_dec + (l − n)·ln(1−s)  (§V preparation)
+    err: np.ndarray = None     # Σ δ_k·count accumulated p̂-error bound on C⁰→
 
 
 @partial(jax.jit, static_argnames=("s", "n", "theta_cp", "theta_ind",
                                    "ln1ms", "use_timers", "K"))
-def _bound_step(carry, v_k, p_k, m_next, k, acc, l_counts, d_src, considered,
-                boundable, s, n, theta_cp, theta_ind, ln1ms, use_timers, K):
+def _bound_step(carry, v_k, p_k, m_next, delta_k, k, acc, l_counts, d_src,
+                considered, boundable, s, n, theta_cp, theta_ind, ln1ms,
+                use_timers, K):
     """One score-ordered bucket of the BOUND scan (Eqs. 9–10 + timers).
 
     ``v_k`` is the bucket's (S, w) incidence slice, zero-padded to the fixed
     maximum bucket width so every step reuses one compiled program. The
-    carry is the 10-tuple the legacy whole-tensor lax.scan threaded; the
-    per-bucket arithmetic is identical, so results are bit-equal.
+    carry threads the legacy 10-tuple plus the ``err`` accumulator:
+    Σ δ_k·count bounds |C⁰ − C⁰_exact| (the p̂ approximation), and every
+    freeze must now hold BEYOND the pair's accumulated error — which makes
+    frozen decisions provably equal the exact INDEX for any bucketing,
+    including a committed index's base+delta layout (DESIGN.md §7).
     """
-    (c0, n0, n_full, nscan, decided, dec_bucket, min_due, max_due, ve, bc) = carry
+    (c0, n0, n_full, nscan, decided, dec_bucket, min_due, max_due,
+     err, ve, bc) = carry
     f_a1 = acc[:, None]
     f_a2 = acc[None, :]
     lf = l_counts.astype(jnp.float32)
@@ -84,19 +97,20 @@ def _bound_step(carry, v_k, p_k, m_next, k, acc, l_counts, d_src, considered,
     upd = active.astype(jnp.float32) * count
     c0 = c0 + f * upd
     n0 = n0 + upd
+    err = err + delta_k * upd
     n_full = n_full + count * considered
     nscan = nscan + jnp.sum(v_k, axis=1)
     ve = ve + jnp.sum(jnp.triu(upd, 1))
 
-    # ---- bounds (Eqs. 9–10) -----------------------------------------
-    c_min_f = c0 + (lf - n0) * ln1ms
+    # ---- bounds (Eqs. 9–10), tightened by the accumulated p̂ error ----
+    c_min_f = c0 - err + (lf - n0) * ln1ms
     c_min = jnp.maximum(c_min_f, c_min_f.T)
     h_raw = jnp.maximum(
         nscan[:, None] * lf / jnp.maximum(d_src[:, None], 1.0),
         nscan[None, :] * lf / jnp.maximum(d_src[None, :], 1.0),
     )
     h = jnp.clip(h_raw, n0, lf)
-    c_max_f = c0 + (h - n0) * ln1ms + (lf - h) * m_next
+    c_max_f = c0 + err + (h - n0) * ln1ms + (lf - h) * m_next
     c_max = jnp.maximum(c_max_f, c_max_f.T)
 
     checkable = active & boundable
@@ -123,7 +137,7 @@ def _bound_step(carry, v_k, p_k, m_next, k, acc, l_counts, d_src, considered,
     dec_bucket = jnp.where((dec_bucket == K) & (newly != 0), k, dec_bucket)
 
     return (c0, n0, n_full, nscan, decided, dec_bucket,
-            min_due, max_due, ve, bc)
+            min_due, max_due, err, ve, bc)
 
 
 def _bound_stream(idx: InvertedIndex, b: BucketedIndex, acc, l_counts, d_src,
@@ -139,10 +153,18 @@ def _bound_stream(idx: InvertedIndex, b: BucketedIndex, acc, l_counts, d_src,
     w = int(max(np.diff(starts))) if K else 1
     dt = jnp.bfloat16 if jax.default_backend() == "tpu" else jnp.float32
 
+    # δ_k per bucket — bounds the p̂ approximation of every accumulated score
+    # term (scoring.bucket_score_deltas; p extremes live-masked by bucketize)
+    p_lo = b.p_lo if b.p_lo is not None else b.p_hat
+    p_hi = b.p_hi if b.p_hi is not None else b.p_hat
+    deltas = bucket_score_deltas(b.p_hat, p_lo, p_hi, acc, cfg) if K else \
+        np.zeros(0, np.float32)
+
     zero = jnp.zeros((S, S), jnp.float32)
     carry = (zero, zero, zero, jnp.zeros((S,), jnp.float32),
              jnp.zeros((S, S), jnp.int8), jnp.full((S, S), K, jnp.int32),
-             zero, zero, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
+             zero, zero, zero,
+             jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32))
     accj = jnp.asarray(acc, jnp.float32)
     lj = jnp.asarray(l_counts)
     dj = jnp.asarray(d_src, jnp.float32)
@@ -154,8 +176,8 @@ def _bound_stream(idx: InvertedIndex, b: BucketedIndex, acc, l_counts, d_src,
         v_np[:, : s1 - s0] = idx.store.slice_entries(s0, s1, dtype=np.float32)
         carry = _bound_step(
             carry, jnp.asarray(v_np, dt), jnp.float32(b.p_hat[k]),
-            jnp.float32(b.m_suffix[k + 1]), jnp.int32(k),
-            accj, lj, dj, cj, bj,
+            jnp.float32(b.m_suffix[k + 1]), jnp.float32(deltas[k]),
+            jnp.int32(k), accj, lj, dj, cj, bj,
             s=cfg.s, n=cfg.n, theta_cp=cfg.theta_cp, theta_ind=cfg.theta_ind,
             ln1ms=cfg.ln_1ms, use_timers=use_timers, K=K)
     return carry
@@ -177,6 +199,11 @@ def bound_detect(
     t0 = time.perf_counter()
     idx = index if index is not None else build_index(ds, p_claim, cfg)
     if bucketed is None:
+        # a committed index is re-gathered into score-sorted prefix-Ē form
+        # first, so the bucket geometry (and Eq. 10's scan-order-dependent h
+        # estimate) matches a from-scratch rebuild exactly (DESIGN.md §7);
+        # callers that pass their own ``bucketed`` keep the physical order
+        idx = canonicalized(idx, cfg)
         bucketed = bucketize(idx, n_buckets)
     S = ds.n_sources
     K = bucketed.n_buckets
@@ -184,21 +211,24 @@ def bound_detect(
     d_src = idx.items_per_source
 
     # considered = co-occurrence outside Ē, accumulated chunk by chunk
-    # (0/1 products in f32 are exact integers, bit-equal to one dense matmul)
-    n_out = idx.store.cooccurrence(stop=idx.ebar_start)
+    # (0/1 products in f32 are exact integers, bit-equal to one dense
+    # matmul); the mask form covers committed indexes, where Ē is no longer
+    # a physical suffix (DESIGN.md §7)
+    n_out = idx.store.cooccurrence(mask=idx.nonebar_mask)
     considered = n_out > 0.5
     np.fill_diagonal(considered, False)
 
     boundable = idx.l_counts > l_threshold
     np.fill_diagonal(boundable, False)
 
-    (c0, n0, n_full, _nscan, decided, dec_bucket, _md, _xd, ve, bc) = \
+    (c0, n0, n_full, _nscan, decided, dec_bucket, _md, _xd, err, ve, bc) = \
         _bound_stream(idx, bucketed, ds.accuracy, l_counts, d_src,
                       considered, boundable, cfg, use_timers)
     c0, n0 = np.array(c0), np.array(n0)
     n_full = np.array(n_full)
     decided = np.array(decided)
     dec_bucket = np.array(dec_bucket)
+    err = np.array(err)
 
     lf = idx.l_counts.astype(np.float32)
     # Step IV for still-active pairs (n0 == n_full there): C→ = C^min
@@ -210,7 +240,12 @@ def bound_detect(
 
     active = (decided == 0) & considered
     z = np.log(cfg.alpha / cfg.beta) + np.logaddexp(c_fwd, c_fwd.T)
-    near = active & (np.abs(z) < rescore_margin) & np.triu(np.ones((S, S), bool), 1)
+    # a still-active pair's decision can only differ from the exact INDEX if
+    # the accumulated p̂ error reaches its decision margin — widen the band
+    # by it, exactly as the engine's §3.4 rescore does
+    near = (active
+            & (np.abs(z) < rescore_margin + np.maximum(err, err.T))
+            & np.triu(np.ones((S, S), bool), 1))
     pi, pj = np.nonzero(near)
     if len(pi):
         c_fwd[pi, pj] = pair_scores_subset(ds, p_claim, cfg, pi, pj)
@@ -238,7 +273,8 @@ def bound_detect(
                              counter=counter, wall_time_s=time.perf_counter() - t0)
     if return_state:
         state = BoundState(c0=c0, n0=n0, n_full=n_full, decided=decided,
-                           dec_bucket=dec_bucket, considered=considered, c_hat=c_hat)
+                           dec_bucket=dec_bucket, considered=considered,
+                           c_hat=c_hat, err=err)
         return result, state
     return result
 

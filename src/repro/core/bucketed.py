@@ -60,11 +60,21 @@ def index_detect_exact(
     considered = np.zeros((S, S), dtype=bool)
     values_examined = 0
 
-    for e in range(idx.n_entries):
+    # Scan non-Ē entries first, then Ē entries: for a fresh index this IS
+    # the physical 0..E−1 order (Ē is the score suffix); for a committed
+    # index (base + delta chunks, Ē as a mask — DESIGN.md §7) the split
+    # restores the invariant step 2 relies on — every Ē entry sees the
+    # FINAL considered set, exactly as in the score-ordered scan.
+    nonebar = idx.nonebar_mask
+    live = idx.live_mask
+    scan_order = np.concatenate([np.nonzero(nonebar)[0],
+                                 np.nonzero(live & ~nonebar)[0]])
+    n_nonebar = int(nonebar.sum())
+    for rank, e in enumerate(scan_order):
         srcs = idx.providers(e)
         if len(srcs) < 2:
             continue
-        in_ebar = e >= idx.ebar_start
+        in_ebar = rank >= n_nonebar
         a = acc[srcs]
         # f[i, j] = C→ contribution for (copier=srcs[i], source=srcs[j])
         f = score_same_np(float(idx.entry_p[e]), a[:, None], a[None, :], cfg.s, cfg.n)

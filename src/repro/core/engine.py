@@ -70,10 +70,10 @@ from repro.core.incremental import (
 from repro.core.index import InvertedIndex, build_index, engine_chunks
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import (
+    bucket_score_deltas,
     decide_copying_np,
     pairwise_detect,
     posterior_independence_np,
-    score_same_np,
 )
 from repro.core.types import ClaimsDataset, CopyConfig, DetectionResult
 from repro.utils.counters import ComputeCounter
@@ -238,7 +238,7 @@ class DetectionEngine:
                 result, self._inc_state = make_incremental_state(
                     ds, p_claim, self.cfg, n_buckets=opt.n_buckets,
                     chunk_entries=opt.store_chunk_entries,
-                    chunk_bytes=opt.store_chunk_bytes)
+                    chunk_bytes=opt.store_chunk_bytes, index=index)
                 return result
             return incremental_detect(ds, p_claim, self.cfg, self._inc_state,
                                       rho=opt.rho, rho_acc=opt.rho_acc)
@@ -376,34 +376,21 @@ class DetectionEngine:
         t = min(self.options.tile, max(1, s_sources))
         return max(8, -(-t // 8) * 8)
 
-    # Inflation + slack on top of the sampled maximum: the accuracy sweep is
-    # a grid, not an analytic bound — |f(p) − f(p̂)| can peak at interior
-    # accuracies (≲2e-3/entry beyond the corner max at default s, n), and
-    # f's monotonicity in p is conditional (see tests/test_properties.py).
+    # Inflation + slack constants live in scoring.bucket_score_deltas now
+    # (shared with BOUND's error-aware freezes); kept as class attributes for
+    # back-compat with callers that tuned them per engine.
     DELTA_INFLATION = 1.5
     DELTA_SLACK = 2e-3
 
     def _bucket_deltas(self, p_hat, p_lo, p_hi, acc: np.ndarray) -> np.ndarray:
         """Per-chunk bound δ_k ≳ |f(A_i, A_j, p) − f(A_i, A_j, p̂_k)| for any
-        entry p in chunk k: the chunk's p extremes are swept against a grid
-        of dataset accuracy quantiles, then inflated (DELTA_INFLATION /
-        DELTA_SLACK) to cover interior maxima the grid misses. Together with
-        ``rescore_margin`` this makes decision flips vs the exact INDEX
-        vanishingly unlikely — and the scaling benchmark cross-checks
-        decision equality on every run."""
-        cfg = self.cfg
-        a_grid = np.unique(np.quantile(acc.astype(np.float64),
-                                       [0.0, 0.25, 0.5, 0.75, 1.0]))
-        p_hat = np.asarray(p_hat, np.float64)
-        delta = np.zeros(len(p_hat), np.float64)
-        for a1 in a_grid:
-            for a2 in a_grid:
-                f_hat = score_same_np(p_hat, a1, a2, cfg.s, cfg.n)
-                for pe in (p_lo.astype(np.float64), p_hi.astype(np.float64)):
-                    f_edge = score_same_np(pe, a1, a2, cfg.s, cfg.n)
-                    delta = np.maximum(delta, np.abs(f_edge - f_hat))
-        delta = self.DELTA_INFLATION * delta + self.DELTA_SLACK
-        return delta.astype(np.float32)
+        entry p in chunk k (``scoring.bucket_score_deltas``). Together with
+        ``rescore_margin`` this makes the tiled decisions provably equal the
+        exact INDEX — and the scaling benchmark cross-checks decision
+        equality on every run."""
+        return bucket_score_deltas(p_hat, p_lo, p_hi, acc, self.cfg,
+                                   inflation=self.DELTA_INFLATION,
+                                   slack=self.DELTA_SLACK)
 
     def _detect_tiled(
         self,

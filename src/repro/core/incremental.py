@@ -66,6 +66,8 @@ class IncrementalState:
     dec_bucket: np.ndarray        # (S,S)
     l_counts: np.ndarray
     pass1_settled: float = 1.0
+    err: np.ndarray = None        # (S,S) accumulated p̂-error bound on c_hat
+                                  # (0 where a round has rescored exactly)
 
 
 def rescore_pairs_exact(
@@ -106,14 +108,20 @@ def make_incremental_state(
     n_buckets: int = 64,
     chunk_entries: int | None = None,
     chunk_bytes: int | None = None,
+    index: InvertedIndex | None = None,
 ) -> tuple[DetectionResult, IncrementalState]:
     """Run HYBRID from scratch and capture the bookkeeping for later rounds.
 
     ``chunk_entries`` / ``chunk_bytes`` forward to ``build_index`` — they
     pick the CorpusStore chunking the bookkeeping will iterate forever after.
+    ``index`` bootstraps from a prebuilt index instead — including a
+    COMMITTED one (base + delta chunk sequence, Ē as a mask): the
+    bookkeeping below iterates whatever chunk layout the store has, and the
+    per-entry arrays are position-indexed, so the delta layout rides along
+    (DESIGN.md §7).
     """
-    idx = build_index(ds, p_claim, cfg, chunk_entries=chunk_entries,
-                      chunk_bytes=chunk_bytes)
+    idx = index if index is not None else build_index(
+        ds, p_claim, cfg, chunk_entries=chunk_entries, chunk_bytes=chunk_bytes)
     bucketed = bucketize(idx, n_buckets)
     result, bstate = bound_detect(
         ds, p_claim, cfg, use_timers=True, l_threshold=16,
@@ -141,7 +149,7 @@ def make_incremental_state(
         a1_ref=a1_ref, a2_ref=a2_ref, acc_old=ds.accuracy.copy(),
         c_hat=bstate.c_hat.copy(), copying=result.copying.copy(),
         considered=bstate.considered.copy(), dec_bucket=bstate.dec_bucket.copy(),
-        l_counts=idx.l_counts,
+        l_counts=idx.l_counts, err=bstate.err.copy(),
     )
     return result, state
 
@@ -161,12 +169,17 @@ def incremental_detect(
     E = idx.n_entries
     acc_new = ds.accuracy.astype(np.float64)
 
-    # new entry probabilities via any provider's claim
-    p_new = p_claim[state.first_provider, idx.entry_item].astype(np.float32)
+    # new entry probabilities via any provider's claim (padding columns of a
+    # committed store have no providers — clamp the lookup and zero their
+    # deltas so they never join the big/small classification)
+    live = idx.entry_item >= 0
+    p_new = p_claim[state.first_provider,
+                    np.maximum(idx.entry_item, 0)].astype(np.float32)
+    p_new = np.where(live, p_new, state.p_old)
     score_new = score_same_np(
         p_new.astype(np.float64), state.a1_ref, state.a2_ref, cfg.s, cfg.n
     ).astype(np.float32)
-    delta = score_new - state.score_old
+    delta = np.where(live, score_new - state.score_old, 0.0)
     big = np.abs(delta) > rho
     small_dec = (~big) & (delta < 0)
     small_inc = (~big) & (delta > 0)
@@ -209,9 +222,14 @@ def incremental_detect(
     cnt_inc = _masked_counts(small_inc)
 
     c_base = state.c_hat.astype(np.float64) + d_c
+    # the bootstrap's accumulated p̂-error bound (zeroed wherever a previous
+    # round rescored exactly) — the keep rules must hold BEYOND it, so kept
+    # decisions stay provably exact for any index layout (DESIGN.md §7)
+    err = (state.err if state.err is not None
+           else np.zeros((S, S), np.float32)).astype(np.float64)
     # worst case against the current decision
-    worst_down = c_base - d_rho_dec * cnt_dec
-    worst_up = c_base + d_rho_inc * cnt_inc
+    worst_down = c_base - d_rho_dec * cnt_dec - err
+    worst_up = c_base + d_rho_inc * cnt_inc + err
 
     log_ratio = np.log(cfg.alpha / cfg.beta)
     was_copy = state.copying
@@ -250,6 +268,9 @@ def incremental_detect(
     state.p_old[big] = p_new[big]
     state.score_old[big] = score_new[big]
     state.acc_old[big_acc] = ds.accuracy[big_acc]
+    if state.err is not None and len(pi):
+        state.err = state.err.copy()
+        state.err[pi, pj] = state.err[pj, pi] = 0.0   # rescored ⇒ now exact
 
     counter = ComputeCounter(
         pairs_considered=n_cand,

@@ -18,10 +18,20 @@ lower complexity, O(|S||D|)", and costs ~.9% of PAIRWISE); all detection
 compute on top of it is JAX. The incidence never exists as one ``(S, E)``
 array: ``build_index`` streams claims into a chunked ``CorpusStore``
 (DESIGN.md §6), and every consumer iterates chunks.
+
+Live mutation (DESIGN.md §7): ``commit_rows`` folds accepted query rows into
+an existing index without rebuilding — membership bits for existing entries,
+**delta chunks** for newly-shared values (score-ordered within the delta),
+refreshed contribution scores for entries whose provider set grew, block
+updates of ``l_counts``, and an Ē **mask** re-derived from the merged score
+metadata without re-sorting the resident incidence. ``rollback_commit``
+restores the pre-commit state bit-exact; ``compact_index`` folds deltas back
+into one score-sorted base once they exceed a corpus fraction.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import time
+from dataclasses import dataclass, field
 from typing import Optional
 
 import numpy as np
@@ -30,20 +40,29 @@ from repro.core.scoring import score_same_np
 from repro.core.store import (
     DEFAULT_CHUNK_ENTRIES,
     CorpusStore,
+    StoreSnapshot,
     align_chunk,
 )
-from repro.core.types import ClaimsDataset, CopyConfig
+from repro.core.types import CLAIM_KEY_BASE, ClaimsDataset, CopyConfig, claim_value_keys
 
 
 @dataclass
 class InvertedIndex:
     """Entries sorted by decreasing contribution score, backed by a
-    chunked ``CorpusStore`` (the single source of corpus truth)."""
+    chunked ``CorpusStore`` (the single source of corpus truth).
+
+    After ``commit_rows`` the physical order is base entries followed by
+    delta chunks — no longer globally score-sorted — and Ē becomes the
+    explicit ``ebar_mask`` (``nonebar_mask`` is the consumer-facing API;
+    when the mask is ``None`` it reduces to the classic prefix split at
+    ``ebar_start``)."""
 
     store: CorpusStore         # entry-chunked incidence + entry metadata
-    ebar_start: int            # entries [ebar_start:] form Ē
+    ebar_start: int            # entries [ebar_start:] form Ē (prefix form)
     l_counts: np.ndarray       # (S, S) int32 — shared-item counts l(S1,S2)
     items_per_source: np.ndarray  # (S,) int32 — |D̄(S)|
+    ebar_mask: Optional[np.ndarray] = None  # (E,) bool Ē membership; set by
+                                            # commit_rows (wins over ebar_start)
 
     @property
     def n_entries(self) -> int:
@@ -74,6 +93,26 @@ class InvertedIndex:
     def entry_score(self) -> np.ndarray:
         """(E,) float32 — C(E) per entry, non-increasing (view)."""
         return self.store.entry_score
+
+    @property
+    def live_mask(self) -> np.ndarray:
+        """(E,) bool — True for real entry columns (False for inert padding)."""
+        return self.store.entry_item >= 0
+
+    @property
+    def nonebar_mask(self) -> np.ndarray:
+        """(E,) bool — live entries OUTSIDE Ē (the consumer-facing Ē API).
+
+        Every consumer of the Ē boundary (engine chunking, BOUND's
+        considered test, the exact INDEX scan) goes through this mask, so
+        the prefix form (fresh builds) and the mask form (after
+        ``commit_rows``) are interchangeable.
+        """
+        live = self.live_mask
+        if self.ebar_mask is not None:
+            return live & ~self.ebar_mask
+        pre = np.arange(self.store.n_entries) < self.ebar_start
+        return live & pre
 
     @property
     def V(self) -> np.ndarray:
@@ -275,10 +314,7 @@ def build_index(
         entry_p, entry_score, chunk_entries=chunk_entries, capacity=cap)
 
     # Ē — maximal low-score suffix with Σ C(E) < ln(β/2α)
-    pos_scores = np.maximum(entry_score, 0.0)
-    suffix_sum = np.cumsum(pos_scores[::-1])[::-1]
-    below = suffix_sum < cfg.theta_ind
-    ebar_start = int(np.argmax(below)) if below.any() else E
+    ebar_start = _ebar_boundary(entry_score, cfg.theta_ind)
 
     prov64 = prov.astype(np.int64)
     l_counts = (prov64 @ prov64.T).astype(np.int32)
@@ -289,6 +325,314 @@ def build_index(
         l_counts=l_counts,
         items_per_source=prov.sum(axis=1).astype(np.int32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Live corpus mutation: commit / rollback / compact (DESIGN.md §7)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CommitInfo:
+    """Receipt of one ``commit_rows`` call (stats + the rollback snapshot).
+
+    ``touched_keys`` is the commit's invalidation currency: the sorted
+    composite (item, value) keys of EVERY claim the committed rows carry.
+    A pair of sources can only share an entry this commit touched if one of
+    them claims a key in this set — the serving cache's exactness argument
+    (DESIGN.md §7) rests on that superset property.
+    """
+
+    rows: int                      # query rows folded into the corpus
+    bits_set: int                  # membership bits set on existing entries
+    new_entries: int               # newly-shared values appended as deltas
+    touched_entries: int           # existing entries whose providers grew
+    delta_chunks_added: int        # chunks appended this commit
+    compacted: bool                # deltas folded back into the base?
+    epoch: int                     # store epoch after the commit
+    touched_keys: np.ndarray       # sorted int64 claim keys of the new rows
+    wall_s: float                  # host time spent committing
+    _snap: StoreSnapshot = field(repr=False, default=None)
+    _ebar_start: int = field(repr=False, default=0)
+    _ebar_mask: Optional[np.ndarray] = field(repr=False, default=None)
+    _l_counts: np.ndarray = field(repr=False, default=None)
+    _items_per_source: np.ndarray = field(repr=False, default=None)
+
+
+def _ebar_boundary(scores_desc: np.ndarray, theta_ind: float) -> int:
+    """First index of the maximal low-score suffix with Σ max(C, 0) < θ_ind.
+
+    ``scores_desc`` is a decreasing-score sequence; the ONE implementation
+    of the Ē rule shared by ``build_index`` (fresh prefix), ``commit_rows``
+    (mask over the merged order), and ``compact_index`` (restored prefix).
+    """
+    pos = np.maximum(np.asarray(scores_desc, np.float64), 0.0)
+    if not len(pos):
+        return 0
+    suffix = np.cumsum(pos[::-1])[::-1]
+    below = suffix < theta_ind
+    return int(np.argmax(below)) if below.any() else len(pos)
+
+
+def _derive_ebar_mask(store: CorpusStore, theta_ind: float) -> np.ndarray:
+    """Ē membership over the MERGED score metadata, without moving incidence.
+
+    Virtually sorts the live entries by decreasing contribution score
+    (metadata argsort only — base and delta columns stay where they are) and
+    marks the maximal low-score suffix with Σ max(C, 0) < θ_ind. Restricted
+    to any score-sorted subsequence (the base region, each commit's delta)
+    the marked set is still a suffix, which is the layout invariant
+    DESIGN.md §7 argues the Ē-skip rule from. Padding columns are marked
+    in-Ē (they carry no incidence, so no consumer ever counts them).
+    """
+    live = store.entry_item >= 0
+    ids = np.nonzero(live)[0]
+    scores = store.entry_score[ids].astype(np.float64)
+    order = np.argsort(-scores, kind="stable")
+    start = _ebar_boundary(scores[order], theta_ind)
+    mask = np.ones(store.n_entries, bool)
+    mask[ids[order[:start]]] = False
+    return mask
+
+
+def _extremes_of(acc: np.ndarray, provider_lists: list) -> tuple:
+    """(min, second-min, max) provider accuracy per provider list."""
+    n = len(provider_lists)
+    a_min = np.empty(n, np.float64)
+    a_second = np.empty(n, np.float64)
+    a_max = np.empty(n, np.float64)
+    for i, provs in enumerate(provider_lists):
+        a = np.sort(acc[provs])
+        a_min[i] = a[0]
+        a_second[i] = a[min(1, len(a) - 1)]
+        a_max[i] = a[-1]
+    return a_min, a_second, a_max
+
+
+def commit_rows(
+    index: InvertedIndex,
+    ds: ClaimsDataset,
+    p_claim: np.ndarray,
+    cfg: CopyConfig,
+    n_new: int,
+    *,
+    compact: bool = True,
+    compact_threshold: float = 0.25,
+) -> CommitInfo:
+    """Fold the last ``n_new`` rows of ``ds`` into the index, incrementally.
+
+    ``ds``/``p_claim`` are the UNION claims (corpus rows first, the accepted
+    query rows last); the index currently covers the first
+    ``ds.n_sources − n_new`` rows. The commit:
+
+      1. stages the rows' membership bits for every existing entry
+         (``store.append_rows`` — O(q·E));
+      2. detects the (item, value) groups the new rows turn into *shared*
+         values (union provider count ≥ 2, not yet indexed) and appends them
+         as **delta chunks**, score-ordered within the delta and chunk-
+         aligned exactly like a fresh build;
+      3. refreshes C(E) of existing entries whose provider set grew (M̂ is a
+         max over provider pairs, so stale scores would under-bound BOUND's
+         m_suffix);
+      4. extends ``l_counts``/``items_per_source`` by block updates
+         (O(S·q·D), never the O(S²·D) rebuild matmul);
+      5. re-derives the Ē boundary from the merged score metadata as
+         ``ebar_mask`` — the resident incidence is never re-sorted;
+      6. optionally compacts: once live delta entries exceed
+         ``compact_threshold`` of all live entries, deltas fold back into
+         one score-sorted base (``compact_index``).
+
+    Returns a ``CommitInfo`` receipt; ``rollback_commit(index, info)``
+    restores the pre-commit state bit-exact (mid-batch failure recovery and
+    the serving layer's per-batch transient unions both rely on it).
+    """
+    t0 = time.perf_counter()
+    store = index.store
+    S = ds.n_sources
+    q = int(n_new)
+    S0 = S - q
+    if store.n_rows != S0:
+        raise ValueError(
+            f"commit_rows: index covers {store.n_rows} rows, union has "
+            f"{S} with {q} new — expected {S0}")
+    snap = store.snapshot()
+    info = CommitInfo(
+        rows=q, bits_set=0, new_entries=0, touched_entries=0,
+        delta_chunks_added=0, compacted=False, epoch=store.epoch,
+        touched_keys=np.zeros(0, np.int64), wall_s=0.0,
+        _snap=snap, _ebar_start=index.ebar_start, _ebar_mask=index.ebar_mask,
+        _l_counts=index.l_counts, _items_per_source=index.items_per_source)
+
+    new_vals = ds.values[S0:S]
+    bits, touched = store.append_rows(new_vals, collect_touched=True)
+
+    # -- 2. newly-shared (item, value) groups → delta entries ---------------
+    live = store.entry_item >= 0
+    existing = np.unique(
+        store.entry_item[live].astype(np.int64) * CLAIM_KEY_BASE
+        + store.entry_value[live])
+    new_keys = claim_value_keys(new_vals)
+    cand = new_keys[~np.isin(new_keys, existing)]
+    # provider discovery is inherently one union-column scan per NOVEL key
+    # (O(|cand|·S)); the serving path keeps |cand| at O(q · claims/row),
+    # far under the O(S·D log) a rebuild pays — a commit whose rows are
+    # mostly novel claims on a huge corpus should just rebuild instead
+    e_item, e_value, e_p, e_provs = [], [], [], []
+    for key in cand:
+        d = int(key // CLAIM_KEY_BASE)
+        v = int(key % CLAIM_KEY_BASE)
+        provs = np.nonzero(ds.values[:, d] == v)[0]
+        if len(provs) < 2:
+            continue                      # still a singleton in the union
+        e_item.append(d)
+        e_value.append(v)
+        e_p.append(float(p_claim[provs[0], d]))
+        e_provs.append(provs)
+    n_newe = len(e_item)
+    if n_newe:
+        acc = ds.accuracy.astype(np.float64)
+        a_min, a_second, a_max = _extremes_of(acc, e_provs)
+        p_arr = np.asarray(e_p, np.float64)
+        scores = _entry_scores_vectorized(p_arr.astype(np.float32),
+                                          a_min, a_second, a_max, cfg)
+        order = np.argsort(-scores, kind="stable")
+        cols = np.zeros((S, n_newe), np.int8)
+        for j, src in enumerate(order):
+            cols[e_provs[src], j] = 1
+        info.delta_chunks_added = store.append_entries(
+            cols,
+            np.asarray(e_item, np.int32)[order],
+            np.asarray(e_value, np.int32)[order],
+            p_arr.astype(np.float32)[order],
+            scores[order])
+        info.new_entries = n_newe
+
+    # -- 3. refresh scores of entries whose provider set grew ---------------
+    if len(touched):
+        if store.entry_score is snap.entry_score:
+            # no deltas were appended, so the metadata array is still the
+            # snapshot's — copy-on-write keeps the rollback point bit-exact
+            store.entry_score = store.entry_score.copy()
+            store.epoch += 1
+        acc = ds.accuracy.astype(np.float64)
+        provider_lists = [store.providers(e) for e in touched]
+        a_min, a_second, a_max = _extremes_of(acc, provider_lists)
+        store.entry_score[touched] = _entry_scores_vectorized(
+            store.entry_p[touched], a_min, a_second, a_max, cfg)
+        info.touched_entries = len(touched)
+
+    # -- 4. block updates of the pair/source aggregates ---------------------
+    if q:
+        prov = ds.provided_mask
+        prov_old = prov[:S0].astype(np.int64)
+        prov_new = prov[S0:].astype(np.int64)
+        l_new = np.zeros((S, S), np.int32)
+        l_new[:S0, :S0] = index.l_counts
+        cross = (prov_old @ prov_new.T).astype(np.int32)
+        l_new[:S0, S0:] = cross
+        l_new[S0:, :S0] = cross.T
+        l_new[S0:, S0:] = (prov_new @ prov_new.T).astype(np.int32)
+        index.l_counts = l_new
+        index.items_per_source = np.concatenate(
+            [index.items_per_source,
+             prov[S0:].sum(axis=1).astype(np.int32)])
+
+    # -- 5. Ē from merged score metadata ------------------------------------
+    index.ebar_mask = _derive_ebar_mask(store, cfg.theta_ind)
+
+    # -- 6. compaction ------------------------------------------------------
+    if compact and store.delta_start is not None:
+        n_live = store.n_live_entries
+        if n_live and store.n_delta_entries > compact_threshold * n_live:
+            compact_index(index, cfg)
+            info.compacted = True
+
+    info.bits_set = bits
+    info.epoch = index.store.epoch
+    info.touched_keys = new_keys
+    info.wall_s = time.perf_counter() - t0
+    return info
+
+
+def rollback_commit(index: InvertedIndex, info: CommitInfo) -> None:
+    """Restore the index to its pre-commit state, bit-exact.
+
+    Valid for the LAST commit applied (commits must unwind LIFO). Works
+    across compaction too: the snapshot holds the pre-commit store object,
+    which the mutation path never writes in place (appended rows are zeroed
+    back, replaced arrays are restored by reference).
+    """
+    info._snap.restore()
+    index.store = info._snap.store
+    index.ebar_start = info._ebar_start
+    index.ebar_mask = info._ebar_mask
+    index.l_counts = info._l_counts
+    index.items_per_source = info._items_per_source
+
+
+def compact_index(index: InvertedIndex, cfg: CopyConfig) -> None:
+    """Fold delta chunks back into one score-sorted base (DESIGN.md §7).
+
+    Gathers the live entries in decreasing-score order into a fresh
+    uniform-chunk store (one chunk resident at a time), drops the inert
+    padding columns, and restores the classic prefix Ē (``ebar_mask`` back
+    to ``None``). O(S·E) copy — amortized by the ``compact_threshold``
+    fraction in ``commit_rows``.
+    """
+    store = index.store
+    live_ids = np.nonzero(store.entry_item >= 0)[0]
+    order = live_ids[np.argsort(-store.entry_score[live_ids], kind="stable")]
+    new_store = store.gather_entries(order, chunk_entries=store.chunk_entries,
+                                     capacity=store.capacity)
+    new_store.epoch = store.epoch + 1
+    index.ebar_start = _ebar_boundary(new_store.entry_score, cfg.theta_ind)
+    index.ebar_mask = None
+    index.store = new_store
+
+
+def _segment_p_stats(entry_p: np.ndarray, live: np.ndarray,
+                     bounds: np.ndarray) -> tuple:
+    """Per-segment (p̂, p_lo, p_hi) over the LIVE columns of each
+    ``[bounds[k], bounds[k+1])`` range — geometric-mean representative and
+    true extremes, 0.5 fallbacks for all-padding segments. The one
+    implementation behind both ``bucketize`` and ``engine_chunks``, so the
+    p̂ feeding BOUND's and the engine's shared δ error channel can never
+    drift apart.
+    """
+    logp = np.log(np.clip(entry_p, 1e-9, 1.0))
+    K = len(bounds) - 1
+    p_hat = np.empty(K, np.float32)
+    p_lo = np.empty(K, np.float32)
+    p_hi = np.empty(K, np.float32)
+    for k in range(K):
+        seg = slice(int(bounds[k]), int(bounds[k + 1]))
+        m = live[seg]
+        lp = logp[seg] if m.all() else logp[seg][m]
+        ps = entry_p[seg] if m.all() else entry_p[seg][m]
+        p_hat[k] = float(np.exp(lp.mean())) if len(lp) else 0.5
+        p_lo[k] = float(ps.min()) if len(ps) else 0.5
+        p_hi[k] = float(ps.max()) if len(ps) else 0.5
+    return p_hat, p_lo, p_hi
+
+
+def canonicalized(index: InvertedIndex, cfg: CopyConfig) -> InvertedIndex:
+    """A score-sorted, prefix-Ē VIEW of a committed index (gathered copy).
+
+    Returns ``index`` unchanged when it is already canonical. Otherwise
+    gathers the live entries in decreasing-score order into a fresh store —
+    a detection-time copy exactly like ``engine_chunks``' per-call gather,
+    NOT a mutation of the committed index. BOUND's scan uses this so its
+    bucket geometry (and with it the Eq. 10 ``h`` overlap estimate, which is
+    scan-order-dependent by design) is identical whether the index was
+    committed into or rebuilt from scratch (DESIGN.md §7).
+    """
+    if index.ebar_mask is None:
+        return index
+    view = InvertedIndex(store=index.store, ebar_start=index.ebar_start,
+                         l_counts=index.l_counts,
+                         items_per_source=index.items_per_source,
+                         ebar_mask=index.ebar_mask)
+    compact_index(view, cfg)          # mutates only the shallow view
+    return view
 
 
 @dataclass
@@ -306,6 +650,8 @@ class BucketedIndex:
     p_hat: np.ndarray         # (K,) float32
     m_suffix: np.ndarray      # (K+1,) float32; m_suffix[K] = 0
     ebar_bucket: int          # first bucket that lies fully inside Ē
+    p_lo: Optional[np.ndarray] = None  # (K,) min live p per bucket (for the
+    p_hi: Optional[np.ndarray] = None  # (K,) max — δ_k error bound, §2.2)
 
     @property
     def n_buckets(self) -> int:
@@ -319,36 +665,50 @@ def bucketize(index: InvertedIndex, n_buckets: int = 64) -> BucketedIndex:
     Buckets are contiguous in score order, so processing buckets in order is
     the paper's BYCONTRIBUTION scan at coarser granularity. Bucket boundaries
     are chosen on quantiles of ln p so that within-bucket p spread is small.
+
+    A committed index (delta chunks, ``ebar_mask``) buckets the PHYSICAL
+    order instead: ``m_suffix`` is the true suffix max (exact for any
+    ordering), p̂ averages only live columns, and the Ē-boundary pin is
+    skipped — Ē-dependent consumers read ``index.nonebar_mask`` directly.
     """
     E = index.n_entries
     if E == 0:
         return BucketedIndex(index, np.zeros(1, np.int32), np.zeros(0, np.float32),
                              np.zeros(1, np.float32), 0)
     K = min(n_buckets, E)
+    live = index.live_mask
+
     # contiguous equal-count split in score order
     bounds = np.linspace(0, E, K + 1).round().astype(np.int32)
     bounds = np.unique(bounds)
-    K = len(bounds) - 1
-    p_hat = np.empty(K, dtype=np.float32)
-    logp = np.log(np.clip(index.entry_p, 1e-9, 1.0))
-    for k in range(K):
-        p_hat[k] = float(np.exp(logp[bounds[k]: bounds[k + 1]].mean()))
+    p_hat, p_lo, p_hi = _segment_p_stats(index.entry_p, live, bounds)
     # ensure Ē boundary is also a bucket boundary so the Ē-skip rule is exact
-    if 0 < index.ebar_start < E and index.ebar_start not in bounds:
+    # (prefix-Ē indexes only; committed indexes carry the mask instead)
+    if (index.ebar_mask is None and 0 < index.ebar_start < E
+            and index.ebar_start not in bounds):
         bounds = np.sort(np.unique(np.append(bounds, index.ebar_start)))
-        K = len(bounds) - 1
-        p_hat = np.empty(K, dtype=np.float32)
-        for k in range(K):
-            p_hat[k] = float(np.exp(logp[bounds[k]: bounds[k + 1]].mean()))
+        p_hat, p_lo, p_hi = _segment_p_stats(index.entry_p, live, bounds)
+    K = len(bounds) - 1
     m_suffix = np.zeros(K + 1, dtype=np.float32)
     # true suffix max (exact for any entry ordering, incl. the RANDOM /
-    # BYPROVIDER ablations of §VI-C)
+    # BYPROVIDER ablations of §VI-C and the post-commit base+delta layout)
     for k in range(K - 1, -1, -1):
         blk_max = float(index.entry_score[bounds[k]: bounds[k + 1]].max())
         m_suffix[k] = max(blk_max, m_suffix[k + 1])
-    ebar_bucket = int(np.searchsorted(bounds, index.ebar_start))
+    if index.ebar_mask is None:
+        ebar_bucket = int(np.searchsorted(bounds, index.ebar_start))
+    else:
+        # first bucket from which EVERY later bucket is fully inside Ē
+        nonebar = index.nonebar_mask
+        full = [not nonebar[bounds[k]: bounds[k + 1]].any() for k in range(K)]
+        ebar_bucket = K
+        for k in range(K - 1, -1, -1):
+            if not full[k]:
+                break
+            ebar_bucket = k
     return BucketedIndex(index=index, starts=bounds, p_hat=p_hat,
-                         m_suffix=m_suffix, ebar_bucket=ebar_bucket)
+                         m_suffix=m_suffix, ebar_bucket=ebar_bucket,
+                         p_lo=p_lo, p_hi=p_hi)
 
 
 def bucketize_engine(
@@ -456,23 +816,31 @@ def engine_chunks(
     mask channel exact. ``max_width`` caps the chunk width from above (the
     engine derives it from its per-pass byte budget) — narrower chunks just
     mean more of them, with one p̂ each, so the cap never costs accuracy.
+
+    The regions come from ``index.nonebar_mask``, so a committed index
+    (base + delta chunks, Ē as a mask — DESIGN.md §7) chunks exactly like a
+    fresh one: the gather pulls each region's live columns wherever they
+    physically sit, and the delta layout dissolves into the p-sorted order.
     """
-    E = index.n_entries
-    e0 = index.ebar_start
+    nonebar = index.nonebar_mask
+    live = index.live_mask
+    non = np.nonzero(nonebar)[0]
+    ebar = np.nonzero(live & ~nonebar)[0]
+    n_live = len(non) + len(ebar)
     cap = index.n_sources if row_capacity is None else int(row_capacity)
-    if E == 0:
+    if n_live == 0:
         empty = index.store.gather_entries(np.zeros(0, np.int64), capacity=cap)
         z = np.zeros(0, np.float32)
         return EngineChunks(store=empty, p_hat=z, p_lo=z, p_hi=z, nout=z,
                             ebar_chunk=0, n_live=0)
 
-    b = align_chunk(-(-E // max(int(n_buckets), 1)))
+    b = align_chunk(-(-n_live // max(int(n_buckets), 1)))
     if max_width is not None:
         b = min(b, max(8, (int(max_width) // 8) * 8))
-    order_pre = np.argsort(index.entry_p[:e0], kind="stable")
-    order_suf = e0 + np.argsort(index.entry_p[e0:], kind="stable")
-    pad0 = (-e0) % b
-    pad1 = (-(E - e0)) % b
+    order_pre = non[np.argsort(index.entry_p[non], kind="stable")]
+    order_suf = ebar[np.argsort(index.entry_p[ebar], kind="stable")]
+    pad0 = (-len(non)) % b
+    pad1 = (-len(ebar)) % b
     order = np.concatenate([
         order_pre, np.full(pad0, -1, np.int64),
         order_suf, np.full(pad1, -1, np.int64),
@@ -480,20 +848,10 @@ def engine_chunks(
     store = index.store.gather_entries(order, chunk_entries=b,
                                        capacity=cap)
     K = store.n_chunks
-    ebar_chunk = (e0 + pad0) // b
+    ebar_chunk = (len(non) + pad0) // b
 
-    live = store.entry_item >= 0
-    logp = np.log(np.clip(store.entry_p, 1e-9, 1.0))
-    p_hat = np.empty(K, np.float32)
-    p_lo = np.empty(K, np.float32)
-    p_hi = np.empty(K, np.float32)
-    for k in range(K):
-        seg = slice(k * b, k * b + b)
-        m = live[seg]
-        ps = store.entry_p[seg][m]
-        p_hat[k] = float(np.exp(logp[seg][m].mean())) if m.any() else 0.5
-        p_lo[k] = float(ps.min()) if m.any() else 0.5
-        p_hi[k] = float(ps.max()) if m.any() else 0.5
+    p_hat, p_lo, p_hi = _segment_p_stats(
+        store.entry_p, store.entry_item >= 0, np.arange(K + 1) * b)
     nout = (np.arange(K) < ebar_chunk).astype(np.float32)
     return EngineChunks(store=store, p_hat=p_hat, p_lo=p_lo, p_hi=p_hi,
-                        nout=nout, ebar_chunk=ebar_chunk, n_live=E)
+                        nout=nout, ebar_chunk=ebar_chunk, n_live=n_live)

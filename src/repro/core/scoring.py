@@ -55,6 +55,42 @@ def score_same_np(p, a_copier, a_source, s, n):
     return np.log(1.0 - s + s * ratio)
 
 
+# Inflation + slack on top of the sampled maximum of the δ sweep below: the
+# accuracy sweep is a grid, not an analytic bound — |f(p) − f(p̂)| can peak at
+# interior accuracies (≲2e-3/entry beyond the corner max at default s, n),
+# and f's monotonicity in p is conditional (tests/test_properties.py).
+DELTA_INFLATION = 1.5
+DELTA_SLACK = 2e-3
+
+
+def bucket_score_deltas(p_hat, p_lo, p_hi, acc: np.ndarray, cfg: CopyConfig,
+                        inflation: float = DELTA_INFLATION,
+                        slack: float = DELTA_SLACK) -> np.ndarray:
+    """Per-bucket bound δ_k ≳ |f(A_i, A_j, p) − f(A_i, A_j, p̂_k)|.
+
+    For any entry probability p in bucket k's [p_lo, p_hi] range: the
+    extremes are swept against a grid of dataset accuracy quantiles, then
+    inflated to cover interior maxima the grid misses. The sweep covers both
+    role orders, so one δ_k bounds f→ and f← alike. Shared by the engine's
+    tiled error channel (DESIGN.md §3.4) and BOUND's error-aware freezes
+    (§2.2) — with it, accumulated Σ δ_k·count bounds the p̂ approximation of
+    any pair score, which is what makes approximate decisions provably equal
+    the exact INDEX for ANY bucketing or chunk layout (DESIGN.md §7).
+    """
+    a_grid = np.unique(np.quantile(acc.astype(np.float64),
+                                   [0.0, 0.25, 0.5, 0.75, 1.0]))
+    p_hat = np.asarray(p_hat, np.float64)
+    delta = np.zeros(len(p_hat), np.float64)
+    for a1 in a_grid:
+        for a2 in a_grid:
+            f_hat = score_same_np(p_hat, a1, a2, cfg.s, cfg.n)
+            for pe in (np.asarray(p_lo, np.float64),
+                       np.asarray(p_hi, np.float64)):
+                f_edge = score_same_np(pe, a1, a2, cfg.s, cfg.n)
+                delta = np.maximum(delta, np.abs(f_edge - f_hat))
+    return (inflation * delta + slack).astype(np.float32)
+
+
 def posterior_independence(c_fwd, c_bwd, cfg: CopyConfig):
     """Eq. (2) computed stably:  Pr(⊥|Φ) = σ(−(ln(α/β) + logaddexp(C→, C←)))."""
     log_ratio = np.log(cfg.alpha / cfg.beta)

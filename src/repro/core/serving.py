@@ -37,12 +37,26 @@ bounded queue into ``serve_batch`` calls, ``submit`` hands back a
 rows are queued (backpressure — the caller slows down instead of the queue
 growing without bound). ``launch/serve.py --task detect`` is the CLI on top
 of this module.
+
+Live corpus mutation (DESIGN.md §7): ``DetectionService.commit`` folds
+accepted query rows into the resident corpus AND the service's committed
+``InvertedIndex`` (``index.commit_rows`` — delta chunks, no rebuild);
+per-batch unions reuse that index through a transient commit + rollback, so
+the per-batch index rebuild is gone for index-backed modes. A ``ResultCache``
+memoizes per-request responses across batches, keyed by request content and
+corpus epoch, and invalidates an entry exactly when a commit since its epoch
+touches a claim key the request shares (the provable-unaffected rule §7
+argues). ``ReplicaRouter`` fans submits over N service replicas and
+broadcasts commits under one lock — reads scale, writes stay serialized with
+epoch-consistent state.
 """
 from __future__ import annotations
 
+import hashlib
 import threading
 import time
-from collections import deque
+import dataclasses
+from collections import OrderedDict, deque
 from concurrent.futures import Future
 from dataclasses import dataclass
 from typing import Optional, Sequence
@@ -50,7 +64,18 @@ from typing import Optional, Sequence
 import numpy as np
 
 from repro.core.engine import DetectionEngine
-from repro.core.types import ClaimsDataset, CopyConfig
+from repro.core.index import (
+    InvertedIndex,
+    build_index,
+    commit_rows,
+    rollback_commit,
+)
+from repro.core.types import ClaimsDataset, CopyConfig, claim_value_keys
+
+#: Engine modes that consume a prebuilt InvertedIndex — for these the service
+#: maintains ONE committed index across batches (per-batch transient commits
+#: replace the per-batch rebuild); other modes index internally per pass.
+INDEXED_MODES = ("exact", "bound", "bound+", "hybrid", "bucketed")
 
 
 class ServiceOverloaded(TimeoutError):
@@ -110,6 +135,9 @@ class DetectResponse:
     latency_s: float = 0.0        # submit → result (filled by the service)
     host_copy_bytes: int = 0      # bytes staged into the resident buffers
                                   # for this batch (query rows only)
+    cache_hit: bool = False       # served from the cross-batch ResultCache
+                                  # (decisions provably unaffected by every
+                                  # commit since the cached epoch — §7)
 
     def copying_sources(self, row: int = 0) -> np.ndarray:
         """Corpus source indices the given query row is detected to copy."""
@@ -131,13 +159,15 @@ class ResidentCorpus:
                  max_query_rows: int):
         S0, D = base.values.shape
         self.n_corpus = S0
-        self.capacity = S0 + int(max_query_rows)
+        self.max_query_rows = int(max_query_rows)
+        self.capacity = S0 + self.max_query_rows
         self.values = np.full((self.capacity, D), -1, np.int32)
         self.accuracy = np.full(self.capacity, 0.5, np.float32)
         self.p_claim = np.zeros((self.capacity, D), np.float32)
         self.values[:S0] = base.values
         self.accuracy[:S0] = base.accuracy
         self.p_claim[:S0] = base_p
+        self._item_names = base.item_names
         self._full = ClaimsDataset(values=self.values, accuracy=self.accuracy,
                                    item_names=base.item_names)
 
@@ -179,6 +209,44 @@ class ResidentCorpus:
             off += r.n_rows
         return self._full.row_view(off), self.p_claim[:off], written
 
+    # -- permanent commits (corpus mutation, DESIGN.md §7) -------------------
+
+    def _grow(self, new_capacity: int) -> None:
+        """Reallocate the resident buffers at a larger row capacity."""
+        D = self.n_items
+        values = np.full((new_capacity, D), -1, np.int32)
+        accuracy = np.full(new_capacity, 0.5, np.float32)
+        p_claim = np.zeros((new_capacity, D), np.float32)
+        values[: self.capacity] = self.values
+        accuracy[: self.capacity] = self.accuracy
+        p_claim[: self.capacity] = self.p_claim
+        self.values, self.accuracy, self.p_claim = values, accuracy, p_claim
+        self.capacity = new_capacity
+        self._full = ClaimsDataset(values=self.values, accuracy=self.accuracy,
+                                   item_names=self._item_names)
+
+    def commit_rows(self, values: np.ndarray, accuracy: np.ndarray,
+                    p_claim: np.ndarray) -> int:
+        """Make query rows PERMANENT corpus rows (they stop being slack).
+
+        Grows the buffers geometrically when the committed corpus would eat
+        into the ``max_query_rows`` staging slack — the invariant
+        ``capacity ≥ n_corpus + max_query_rows`` survives any number of
+        commits. Returns the new corpus row count. Callers holding views
+        from ``corpus_view()`` must re-acquire them after a commit (growth
+        reallocates; ``DetectionService.commit`` rebinds its own).
+        """
+        q = values.shape[0]
+        needed = self.n_corpus + q + self.max_query_rows
+        if needed > self.capacity:
+            self._grow(max(needed, 2 * self.capacity))
+        rows = slice(self.n_corpus, self.n_corpus + q)
+        self.values[rows] = values
+        self.accuracy[rows] = accuracy
+        self.p_claim[rows] = p_claim
+        self.n_corpus += q
+        return self.n_corpus
+
 
 def serve_batch(
     base: ClaimsDataset,
@@ -186,6 +254,7 @@ def serve_batch(
     engine: DetectionEngine,
     requests: Sequence[DetectRequest],
     resident: Optional[ResidentCorpus] = None,
+    index: Optional[InvertedIndex] = None,
 ) -> list[DetectResponse]:
     """Answer a batch of requests with ONE tiled engine pass (DESIGN.md §5).
 
@@ -202,6 +271,12 @@ def serve_batch(
         passes its own (built once); a standalone call builds a transient
         one sized for this batch — the corpus copy then happens once here
         rather than once per batch.
+      index: a committed ``InvertedIndex`` over the corpus rows (DESIGN.md
+        §7). When given (and the engine mode consumes indexes), the batch's
+        query rows join it through a TRANSIENT ``commit_rows`` — membership
+        bits + delta chunks for newly-shared values — which is rolled back
+        bit-exact after the pass, even on failure. This replaces the
+        per-batch index rebuild the engine would otherwise do.
 
     Returns one ``DetectResponse`` per request, in request order.
     """
@@ -227,7 +302,18 @@ def serve_batch(
             f"built over the same corpus")
     union, p, copied = resident.stage(requests)
 
-    res = engine.detect(union, p)
+    if index is not None and engine.mode in INDEXED_MODES:
+        index.store.ensure_row_capacity(union.n_sources)
+        info = commit_rows(index, union, p, engine.cfg,
+                           union.n_sources - S0, compact=False)
+        try:
+            res = engine.detect(union, p, index=index)
+        finally:
+            # bit-exact unwind — a mid-batch engine failure must never leave
+            # the batch's transient rows/deltas in the committed index
+            rollback_commit(index, info)
+    else:
+        res = engine.detect(union, p)
 
     out = []
     off = S0
@@ -259,11 +345,138 @@ class ServiceStats:
     host_copy_bytes: int = 0      # total bytes staged into the resident
                                   # buffers (query rows only — the corpus is
                                   # written once, at service construction)
+    cache_hits: int = 0           # requests served from the ResultCache
+    cache_misses: int = 0         # requests that needed an engine pass
+    cache_invalidations: int = 0  # cached entries killed by a commit's
+                                  # touched-key overlap (DESIGN.md §7)
+    commits: int = 0              # corpus mutations applied
+    committed_rows: int = 0       # query rows folded into the corpus
+    new_entries: int = 0          # delta entries appended across commits
+    reindexed_entries: int = 0    # existing entries re-scored (providers grew)
+    delta_chunks: int = 0         # delta chunks appended across commits
+    compactions: int = 0          # delta→base folds
 
     @property
     def mean_batch(self) -> float:
         """Mean requests per engine pass (1.0 ⇒ batching never kicked in)."""
         return self.requests / self.batches if self.batches else 0.0
+
+    @property
+    def cache_hit_rate(self) -> float:
+        """Fraction of requests answered without an engine pass."""
+        total = self.cache_hits + self.cache_misses
+        return self.cache_hits / total if total else 0.0
+
+
+class ResultCache:
+    """Cross-batch response cache with commit-exact invalidation (§7).
+
+    Entries are keyed by request CONTENT (a digest of values/accuracy/
+    p_claim — the rid is echoed, not keyed) and stamped with the corpus
+    epoch they were computed at. The conceptual key is (source pair, epoch):
+    a cached response is the request's row-slice of pair decisions vs the
+    corpus. On lookup, the entry is replayed against every commit since its
+    epoch: if any commit's ``touched_keys`` (ALL claim keys of its committed
+    rows) intersects the request's claim keys, some (query row, corpus
+    source) pair may share a touched entry and the cache entry dies;
+    otherwise NO pair the response reports can share any value a delta
+    created or extended, so its decisions provably equal a fresh pass —
+    including vs corpus sources committed later, which are padded in as
+    independent (a pair sharing no value can never reach the copying
+    threshold for α < .25, and is never *considered*, so the padding's
+    False / 1.0 / 0.0 matches the fresh pass bit-for-bit, continuous
+    fields included). DESIGN.md §7 carries the full argument.
+    """
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = int(max_entries)
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+        self._entries: OrderedDict = OrderedDict()
+
+    @staticmethod
+    def digest(request: DetectRequest) -> bytes:
+        """Content digest of a request (rid excluded — it is echoed back)."""
+        h = hashlib.sha1()
+        h.update(np.ascontiguousarray(request.values).tobytes())
+        h.update(np.ascontiguousarray(request.accuracy).tobytes())
+        h.update(np.ascontiguousarray(request.p_claim).tobytes())
+        return h.digest()
+
+    def lookup(self, request: DetectRequest, epoch: int, n_corpus: int,
+               touched_log: Sequence) -> Optional[DetectResponse]:
+        """Serve a request from cache, or None on miss/invalidation.
+
+        ``touched_log`` is the service's [(epoch, touched_keys)] history;
+        only commits AFTER the entry's validation epoch are replayed, and a
+        surviving entry is re-stamped at ``epoch`` so each commit is tested
+        at most once per entry.
+        """
+        key = self.digest(request)
+        ent = self._entries.get(key)
+        if ent is None:
+            self.misses += 1
+            return None
+        for e, touched in touched_log:
+            if e <= ent["epoch"]:
+                continue
+            if np.isin(ent["claim_keys"], touched,
+                       assume_unique=True).any():
+                del self._entries[key]
+                self.invalidations += 1
+                self.misses += 1
+                return None
+        s_at = ent["copying"].shape[1]
+        if s_at < n_corpus:
+            # corpus sources committed since the entry: provably independent
+            # of these rows (no shared touched key), pad the columns in
+            q = ent["copying"].shape[0]
+            grow = n_corpus - s_at
+            ent["copying"] = np.concatenate(
+                [ent["copying"], np.zeros((q, grow), bool)], axis=1)
+            ent["pr_independent"] = np.concatenate(
+                [ent["pr_independent"], np.ones((q, grow), np.float32)], axis=1)
+            ent["c_fwd"] = np.concatenate(
+                [ent["c_fwd"], np.zeros((q, grow), np.float32)], axis=1)
+        ent["epoch"] = epoch
+        self._entries.move_to_end(key)
+        self.hits += 1
+        return DetectResponse(
+            rid=request.rid,
+            copying=ent["copying"].copy(),
+            pr_independent=ent["pr_independent"].copy(),
+            c_fwd=ent["c_fwd"].copy(),
+            intra_copying=ent["intra_copying"].copy(),
+            cache_hit=True,
+        )
+
+    def oldest_epoch(self, default: int) -> int:
+        """The oldest validation epoch any cached entry carries.
+
+        Commits at or before this epoch can never be replayed again (every
+        lookup skips them), so the service prunes its touched-key log down
+        to this floor. ``default`` is returned for an empty cache.
+        """
+        if not self._entries:
+            return default
+        return min(e["epoch"] for e in self._entries.values())
+
+    def put(self, request: DetectRequest, response: DetectResponse,
+            epoch: int) -> None:
+        """Memoize a freshly computed response at the given epoch (LRU)."""
+        key = self.digest(request)
+        self._entries[key] = {
+            "epoch": epoch,
+            "claim_keys": claim_value_keys(request.values),
+            "copying": response.copying.copy(),
+            "pr_independent": response.pr_independent.copy(),
+            "c_fwd": response.c_fwd.copy(),
+            "intra_copying": response.intra_copying.copy(),
+        }
+        self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
 
 
 class DetectionService:
@@ -293,6 +506,9 @@ class DetectionService:
         mode: str = "bucketed",
         max_batch_requests: int = 8,
         max_pending_rows: int = 256,
+        result_cache: bool = True,
+        cache_entries: int = 256,
+        compact_threshold: float = 0.25,
         **engine_options,
     ):
         """Build the service around a fresh engine.
@@ -300,6 +516,11 @@ class DetectionService:
         max_batch_requests: requests folded into one engine pass (the bench
           sweeps this; ≥ 3× throughput at 8 on the serve benchmark).
         max_pending_rows: backpressure bound on queued query rows.
+        result_cache: keep the cross-batch ``ResultCache`` (DESIGN.md §7);
+          False disables memoization (every request runs an engine pass).
+        cache_entries: LRU capacity of the result cache.
+        compact_threshold: delta fraction above which a ``commit`` folds
+          delta chunks back into the score-sorted base.
         engine_options: forwarded to ``EngineOptions`` (tile, devices, ...).
         """
         if mode == "incremental":
@@ -309,6 +530,7 @@ class DetectionService:
         self.engine = DetectionEngine(cfg, mode=mode, **engine_options)
         self.max_batch_requests = int(max_batch_requests)
         self.max_pending_rows = int(max_pending_rows)
+        self.compact_threshold = float(compact_threshold)
         # ONE resident buffer for the service's lifetime: corpus written
         # here once, every batch stages only its query rows (DESIGN.md §6).
         # base/base_p are then rebound to views of it, so the service holds
@@ -317,10 +539,31 @@ class DetectionService:
                                        max_query_rows=self.max_pending_rows)
         self.base = self.resident.corpus_view()
         self.base_p = self.resident.p_claim[: self.resident.n_corpus]
+        # committed index (DESIGN.md §7): built ONCE for index-backed modes,
+        # then mutated by commit() and reused by every batch through the
+        # transient commit/rollback in serve_batch — no per-batch rebuild
+        opt = self.engine.options
+        self._index: Optional[InvertedIndex] = None
+        if mode in INDEXED_MODES:
+            self._index = build_index(
+                self.base, self.base_p, cfg,
+                chunk_entries=opt.store_chunk_entries,
+                chunk_bytes=opt.store_chunk_bytes,
+                row_capacity=self.resident.n_corpus + self.max_pending_rows)
+        self.epoch = 0
+        # the cache's exactness argument (§7.5) needs (a) considered-gated
+        # decisions — pairwise scores EVERY pair, so disjoint-pair padding
+        # would diverge from it; sampled nets shift as the corpus grows —
+        # and (b) α < ¼ so no-shared-value pairs stay sub-threshold
+        cacheable = mode in INDEXED_MODES and cfg.alpha < 0.25
+        self.cache = (ResultCache(cache_entries)
+                      if result_cache and cacheable else None)
+        self._touched_log: list = []     # [(epoch, touched_keys)] per commit
         self.stats = ServiceStats()
         self._pending: deque = deque()   # (request, future, t_submit)
         self._pending_rows = 0
         self._cv = threading.Condition()
+        self._corpus_lock = threading.Lock()   # serializes batches & commits
         self._worker: Optional[threading.Thread] = None
         self._stopping = False
 
@@ -387,15 +630,56 @@ class DetectionService:
             fut.set_result(result)
 
     def _run_batch(self, batch: list) -> None:
-        """One serve_batch call; resolve (or fail) every future in it."""
-        reqs = [entry[0] for entry in batch]
-        try:
-            responses = serve_batch(self.base, self.base_p, self.engine, reqs,
-                                    resident=self.resident)
-        except Exception as exc:                      # noqa: BLE001
-            for _, fut, _ in batch:
-                self._resolve(fut, exc=exc)
-            return
+        """One batch: cache lookups, ONE serve_batch for the misses, resolve.
+
+        Runs under ``_corpus_lock`` so commits never interleave with a
+        batch's cache-validate → detect → memoize sequence (the cache entry
+        epoch must match the corpus the engine saw).
+        """
+        with self._corpus_lock:
+            reqs = [entry[0] for entry in batch]
+            responses: list = [None] * len(batch)
+            miss_idx = list(range(len(batch)))
+            if self.cache is not None:
+                miss_idx = []
+                inv0 = self.cache.invalidations
+                for i, r in enumerate(reqs):
+                    hit = self.cache.lookup(r, self.epoch,
+                                            self.resident.n_corpus,
+                                            self._touched_log)
+                    if hit is None:
+                        miss_idx.append(i)
+                    else:
+                        hit.batch_requests = len(batch)
+                        hit.batch_rows = sum(q.n_rows for q in reqs)
+                        responses[i] = hit
+                self.stats.cache_hits += len(batch) - len(miss_idx)
+                self.stats.cache_misses += len(miss_idx)
+                # accumulate the delta so the counter survives the
+                # stats-reset pattern the benchmarks use
+                self.stats.cache_invalidations += \
+                    self.cache.invalidations - inv0
+            try:
+                fresh = (serve_batch(self.base, self.base_p, self.engine,
+                                     [reqs[i] for i in miss_idx],
+                                     resident=self.resident,
+                                     index=self._index)
+                         if miss_idx else [])
+            except Exception as exc:                  # noqa: BLE001
+                # cache hits already have their exact responses in hand —
+                # only the futures waiting on the failed engine pass fail
+                done = time.monotonic()
+                for i, (_, fut, t_sub) in enumerate(batch):
+                    if responses[i] is None:
+                        self._resolve(fut, exc=exc)
+                    else:
+                        responses[i].latency_s = done - t_sub
+                        self._resolve(fut, result=responses[i])
+                return
+            for i, resp in zip(miss_idx, fresh):
+                responses[i] = resp
+                if self.cache is not None:
+                    self.cache.put(reqs[i], resp, self.epoch)
         done = time.monotonic()
         for (_, fut, t_sub), resp in zip(batch, responses):
             resp.latency_s = done - t_sub
@@ -403,7 +687,62 @@ class DetectionService:
         self.stats.requests += len(batch)
         self.stats.batches += 1
         self.stats.rows += sum(r.n_rows for r in reqs)
-        self.stats.host_copy_bytes += responses[0].host_copy_bytes if responses else 0
+        self.stats.host_copy_bytes += fresh[0].host_copy_bytes if fresh else 0
+
+    # -- corpus mutation (DESIGN.md §7) --------------------------------------
+
+    def commit(self, values: np.ndarray, accuracy: np.ndarray,
+               p_claim: np.ndarray, *, compact: bool = True):
+        """Fold accepted query rows into the corpus, permanently.
+
+        Appends the rows to the resident buffers, advances the committed
+        index through ``index.commit_rows`` (membership bits, delta chunks,
+        refreshed scores, Ē mask — optionally compacting once deltas exceed
+        ``compact_threshold``), bumps the corpus epoch, and records the
+        commit's touched claim keys for the cache's exact invalidation.
+        Serialized against in-flight batches by ``_corpus_lock`` — reads
+        keep flowing between commits, writes never interleave with a pass.
+
+        Returns the ``CommitInfo`` receipt (None for index-less modes).
+        """
+        values = np.asarray(values, np.int32)
+        accuracy = np.asarray(accuracy, np.float32)
+        p_claim = np.asarray(p_claim, np.float32)
+        if values.shape[1] != self.resident.n_items:
+            raise ValueError(
+                f"commit: {values.shape[1]} items, corpus has "
+                f"{self.resident.n_items}")
+        q = values.shape[0]
+        with self._corpus_lock:
+            touched = claim_value_keys(values)
+            self.resident.commit_rows(values, accuracy, p_claim)
+            # growth may have reallocated — rebind the corpus views
+            self.base = self.resident.corpus_view()
+            self.base_p = self.resident.p_claim[: self.resident.n_corpus]
+            info = None
+            if self._index is not None:
+                self._index.store.ensure_row_capacity(
+                    self.resident.n_corpus + self.max_pending_rows)
+                info = commit_rows(
+                    self._index, self.base, self.base_p, self.engine.cfg, q,
+                    compact=compact,
+                    compact_threshold=self.compact_threshold)
+                self.stats.new_entries += info.new_entries
+                self.stats.reindexed_entries += info.touched_entries
+                self.stats.delta_chunks += info.delta_chunks_added
+                self.stats.compactions += int(info.compacted)
+            self.epoch += 1
+            if self.cache is not None:
+                self._touched_log.append((self.epoch, touched))
+                # log entries no surviving cache entry predates are dead
+                # (lookups skip commits ≤ the entry's validation epoch) —
+                # prune them so a long-lived service stays O(live entries)
+                floor = self.cache.oldest_epoch(self.epoch)
+                self._touched_log = [t for t in self._touched_log
+                                     if t[0] > floor]
+            self.stats.commits += 1
+            self.stats.committed_rows += q
+            return info
 
     def flush(self) -> int:
         """Synchronously drain the queue in the caller's thread.
@@ -469,6 +808,105 @@ class DetectionService:
         self.stop()
 
 
+class ReplicaRouter:
+    """Fan requests across N ``DetectionService`` replicas (DESIGN.md §7).
+
+    Reads scale: ``submit`` round-robins over the replicas, each with its
+    own engine, resident corpus, committed index, and result cache, so
+    independent batches run concurrently. Writes stay serialized:
+    ``commit`` holds the router's write lock while broadcasting the same
+    rows to EVERY replica in order — each replica's own ``_corpus_lock``
+    fences the commit against its in-flight batches, and because every
+    replica applies the identical commit sequence, their corpus epochs stay
+    equal (asserted after each broadcast — the epoch protocol §7 documents).
+    A read routed to any replica therefore sees some prefix of the commit
+    history, and the responses it returns are exactly the decisions of that
+    epoch's corpus — never a torn mix of two epochs.
+    """
+
+    def __init__(self, base: ClaimsDataset, base_p: np.ndarray,
+                 cfg: CopyConfig, *, n_replicas: int = 2, **service_kw):
+        """Build ``n_replicas`` identical services over one corpus."""
+        if n_replicas < 1:
+            raise ValueError(f"n_replicas must be ≥ 1, got {n_replicas}")
+        self.replicas = [
+            DetectionService(base, base_p, cfg, **service_kw)
+            for _ in range(n_replicas)
+        ]
+        self._rr = 0
+        self._route_lock = threading.Lock()
+        self._write_lock = threading.Lock()
+
+    def _epoch_locked(self) -> int:
+        """Common epoch check; caller must hold ``_write_lock`` (a read
+        during a commit broadcast would otherwise see a healthy mid-
+        broadcast prefix as divergence)."""
+        epochs = {svc.epoch for svc in self.replicas}
+        if len(epochs) != 1:
+            raise RuntimeError(f"replica epochs diverged: {sorted(epochs)}")
+        return epochs.pop()
+
+    @property
+    def epoch(self) -> int:
+        """The (common) corpus epoch; raises if replicas ever diverge."""
+        with self._write_lock:
+            return self._epoch_locked()
+
+    @property
+    def stats(self) -> ServiceStats:
+        """Aggregate counters summed over every replica."""
+        agg = ServiceStats()
+        for svc in self.replicas:
+            for f in dataclasses.fields(ServiceStats):
+                setattr(agg, f.name,
+                        getattr(agg, f.name) + getattr(svc.stats, f.name))
+        return agg
+
+    def submit(self, request: DetectRequest,
+               timeout: Optional[float] = 30.0) -> Future:
+        """Route one request to the next replica (round-robin)."""
+        with self._route_lock:
+            svc = self.replicas[self._rr]
+            self._rr = (self._rr + 1) % len(self.replicas)
+        return svc.submit(request, timeout=timeout)
+
+    def commit(self, values: np.ndarray, accuracy: np.ndarray,
+               p_claim: np.ndarray, *, compact: bool = True) -> list:
+        """Broadcast one commit to every replica, serialized (§7 protocol).
+
+        Returns the per-replica ``CommitInfo`` receipts. The post-broadcast
+        epoch check turns any divergence (a replica that saw a different
+        write order) into a hard error instead of silent split-brain.
+        """
+        with self._write_lock:
+            infos = [svc.commit(values, accuracy, p_claim, compact=compact)
+                     for svc in self.replicas]
+            self._epoch_locked()                       # divergence check
+            return infos
+
+    def flush(self) -> int:
+        """Drain every replica synchronously; returns requests served."""
+        return sum(svc.flush() for svc in self.replicas)
+
+    def start(self) -> "ReplicaRouter":
+        """Start every replica's worker thread."""
+        for svc in self.replicas:
+            svc.start()
+        return self
+
+    def stop(self) -> None:
+        """Drain and join every replica's worker."""
+        for svc in self.replicas:
+            svc.stop()
+
+    def __enter__(self) -> "ReplicaRouter":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
 __all__ = ["DetectRequest", "DetectResponse", "DetectionService",
-           "ResidentCorpus", "ServiceOverloaded", "ServiceStats",
-           "serve_batch"]
+           "ReplicaRouter", "ResidentCorpus", "ResultCache",
+           "ServiceOverloaded", "ServiceStats", "serve_batch",
+           "INDEXED_MODES"]

@@ -25,6 +25,15 @@ No chunk is ever wider than ``chunk_entries`` columns, so the largest
 single incidence allocation anywhere in the pipeline is bounded by
 ``capacity · chunk_entries`` bytes — ``build_index(chunk_bytes=...)``
 derives the width from that budget (the CI memory smoke asserts it).
+
+Mutation (DESIGN.md §7): the store is append-commit-compact. ``append_rows``
+/ ``truncate_rows`` stage query rows in the slack; ``append_entries`` grows
+the entry axis with **delta chunks** (the last resident chunk is padded to
+full width with inert columns first, so the uniform ``chunk_start``
+addressing survives); ``index.commit_rows`` orchestrates both plus the
+metadata/Ē updates, and folds deltas back into a score-sorted base via
+compaction. ``epoch`` counts structural mutations; per-chunk metadata views
+are memoized per ``(epoch, n_rows)`` so hot loops stop rebuilding them.
 """
 from __future__ import annotations
 
@@ -79,6 +88,8 @@ class CorpusStore:
     chunk_entries: int = DEFAULT_CHUNK_ENTRIES
     n_rows: int = 0
     capacity: int = 0
+    delta_start: Optional[int] = None            # first delta entry; None = no deltas
+    epoch: int = 0                               # bumped on structural mutation
 
     def __post_init__(self):
         if self.entry_item is None:
@@ -91,6 +102,10 @@ class CorpusStore:
             self.entry_score = np.zeros(0, np.float32)
         if self.capacity < self.n_rows:
             self.capacity = self.n_rows
+        # per-(epoch, n_rows) memo of ChunkView handles (satellite: the
+        # engine's per-group hot loop must not rebuild metadata views)
+        self._views: dict = {}
+        self._views_key = None
 
     # -- geometry -----------------------------------------------------------
 
@@ -109,22 +124,57 @@ class CorpusStore:
         """Largest single incidence allocation held by this store."""
         return max((c.nbytes for c in self.chunks), default=0)
 
+    @property
+    def n_live_entries(self) -> int:
+        """Entries that are real (non-padding) columns."""
+        return int(np.count_nonzero(self.entry_item >= 0))
+
+    @property
+    def n_delta_entries(self) -> int:
+        """Live entries in the delta region (appended since the last base)."""
+        if self.delta_start is None:
+            return 0
+        return int(np.count_nonzero(self.entry_item[self.delta_start:] >= 0))
+
+    @property
+    def n_delta_chunks(self) -> int:
+        """Chunks that hold at least one delta entry."""
+        if self.delta_start is None:
+            return 0
+        return self.n_chunks - self.delta_start // self.chunk_entries
+
     def chunk_start(self, c: int) -> int:
         """Global index of chunk ``c``'s first entry column."""
         return c * self.chunk_entries
 
     def chunk(self, c: int) -> ChunkView:
-        """Chunk ``c`` as a handle: live rows + metadata views (zero copy)."""
-        s0 = self.chunk_start(c)
-        s1 = s0 + self.chunks[c].shape[1]
-        return ChunkView(
-            start=s0,
-            V=self.chunks[c][: self.n_rows],
-            item=self.entry_item[s0:s1],
-            value=self.entry_value[s0:s1],
-            p=self.entry_p[s0:s1],
-            score=self.entry_score[s0:s1],
-        )
+        """Chunk ``c`` as a handle: live rows + metadata views (zero copy).
+
+        Handles are memoized per ``(epoch, n_rows)`` — within one epoch the
+        same ``ChunkView`` object is returned on every access, so per-group
+        hot loops (engine streaming, INCREMENTAL's masked counts) never
+        rebuild the metadata slices. Structural mutations (``append_entries``,
+        ``ensure_row_capacity``, compaction) bump ``epoch``; row staging
+        changes ``n_rows`` — either invalidates the memo.
+        """
+        key = (self.epoch, self.n_rows)
+        if self._views_key != key:
+            self._views = {}
+            self._views_key = key
+        view = self._views.get(c)
+        if view is None:
+            s0 = self.chunk_start(c)
+            s1 = s0 + self.chunks[c].shape[1]
+            view = ChunkView(
+                start=s0,
+                V=self.chunks[c][: self.n_rows],
+                item=self.entry_item[s0:s1],
+                value=self.entry_value[s0:s1],
+                p=self.entry_p[s0:s1],
+                score=self.entry_score[s0:s1],
+            )
+            self._views[c] = view
+        return view
 
     def iter_chunks(self) -> Iterator[ChunkView]:
         """Iterate chunk handles in entry order."""
@@ -181,16 +231,31 @@ class CorpusStore:
             [c[: self.n_rows] for c in self.chunks], axis=1)
 
     def cooccurrence(self, stop: Optional[int] = None,
-                     dtype=np.float32) -> np.ndarray:
-        """Pair co-occurrence counts Σ_e V[i,e]·V[j,e] for entries < ``stop``.
+                     dtype=np.float32,
+                     mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Pair co-occurrence counts Σ_e V[i,e]·V[j,e] over selected entries.
 
+        ``stop`` keeps the prefix ``[:stop]``; ``mask`` (an (E,) bool array)
+        keeps an arbitrary entry subset instead — the form the Ē test needs
+        once delta chunks make Ē a mask rather than a suffix (DESIGN.md §7).
         Accumulated chunk by chunk — peak incidence residency is one chunk.
         0/1 products in float32 are exact integers (< 2²⁴), so the result is
         bit-equal to the dense matmul for any chunking.
         """
-        stop = self.n_entries if stop is None else int(stop)
         S = self.n_rows
         out = np.zeros((S, S), dtype)
+        if mask is not None:
+            for ch in self.iter_chunks():
+                m = mask[ch.start: ch.start + ch.width]
+                if m.all():
+                    v = ch.V.astype(dtype)
+                elif m.any():
+                    v = ch.V[:, m].astype(dtype)
+                else:
+                    continue
+                out += v @ v.T
+            return out
+        stop = self.n_entries if stop is None else int(stop)
         for ch in self.iter_chunks():
             if ch.start >= stop:
                 break
@@ -249,7 +314,8 @@ class CorpusStore:
 
     # -- row mutation (serving / corpus-mutation follow-on) ------------------
 
-    def append_rows(self, values_rows: np.ndarray) -> int:
+    def append_rows(self, values_rows: np.ndarray,
+                    collect_touched: bool = False):
         """Write incidence rows for new sources into the slack capacity.
 
         ``values_rows`` is ``(q, D)`` int32 in the corpus's value coding. For
@@ -257,9 +323,11 @@ class CorpusStore:
         where their claim matches — one vectorized ``(q, width)`` comparison
         per chunk, so the cost is O(q·E), independent of the corpus rows.
         Values the new rows share only with each other (or that turn a
-        singleton into a shared value) are NOT in the entry set — they need
-        the incremental re-index of the corpus-mutation follow-on
-        (ROADMAP). Returns the number of incidence bits set.
+        singleton into a shared value) are NOT in the entry set — they get
+        their entry columns from ``index.commit_rows``'s delta re-index
+        (DESIGN.md §7), which also needs the set of entries whose provider
+        set grew: pass ``collect_touched=True`` to get
+        ``(bits, touched_entry_ids)`` instead of the bare bit count.
         """
         values_rows = np.asarray(values_rows, np.int32)
         q = values_rows.shape[0]
@@ -268,6 +336,7 @@ class CorpusStore:
                 f"append_rows: {q} rows exceed capacity "
                 f"({self.n_rows}/{self.capacity} used)")
         bits = 0
+        touched = []
         for c in range(self.n_chunks):
             s0 = self.chunk_start(c)
             s1 = s0 + self.chunks[c].shape[1]
@@ -275,13 +344,18 @@ class CorpusStore:
             va = self.entry_value[s0:s1]
             ok = it >= 0
             hit = np.zeros((q, s1 - s0), np.int8)
-            if ok.any():
+            if ok.any() and q:
                 hit[:, ok] = (
                     values_rows[:, it[ok]] == va[ok][None, :]
                 ).astype(np.int8)
             self.chunks[c][self.n_rows: self.n_rows + q] = hit
             bits += int(hit.sum())
+            if collect_touched:
+                touched.append(s0 + np.nonzero(hit.any(axis=0))[0])
         self.n_rows += q
+        if collect_touched:
+            return bits, (np.concatenate(touched) if touched
+                          else np.zeros(0, np.int64))
         return bits
 
     def truncate_rows(self, n_rows: int) -> None:
@@ -292,6 +366,107 @@ class CorpusStore:
         for c in self.chunks:
             c[n_rows: self.n_rows] = 0
         self.n_rows = n_rows
+
+    # -- entry mutation (delta chunks, DESIGN.md §7) -------------------------
+
+    def _pad_last_chunk_full(self) -> None:
+        """Pad the trailing chunk to the uniform width with inert columns.
+
+        Keeps the ``chunk_start(c) = c·chunk_entries`` addressing valid when
+        delta chunks are appended after a partial base chunk. The replaced
+        chunk array is NOT mutated (a padded copy takes its place), so a
+        pre-commit snapshot's chunk refs stay bit-exact for rollback.
+        """
+        if not self.chunks:
+            return
+        last = self.chunks[-1]
+        w = last.shape[1]
+        if w == self.chunk_entries:
+            return
+        pad = self.chunk_entries - w
+        blk = np.zeros((last.shape[0], self.chunk_entries), np.int8)
+        blk[:, :w] = last
+        self.chunks[-1] = blk
+        self.entry_item = np.concatenate(
+            [self.entry_item, np.full(pad, -1, np.int32)])
+        self.entry_value = np.concatenate(
+            [self.entry_value, np.full(pad, -1, np.int32)])
+        self.entry_p = np.concatenate(
+            [self.entry_p, np.zeros(pad, np.float32)])
+        self.entry_score = np.concatenate(
+            [self.entry_score, np.zeros(pad, np.float32)])
+
+    def append_entries(self, cols: np.ndarray, item, value, p, score) -> int:
+        """Append new entry columns as delta chunks (DESIGN.md §7).
+
+        ``cols`` is ``(n_rows, n_new)`` int8 incidence over the live rows;
+        the caller orders columns by decreasing contribution score (the
+        within-delta BYCONTRIBUTION order). The last resident chunk is first
+        padded to the uniform width with inert columns, then the new columns
+        land in fresh ``(capacity, chunk_entries)`` blocks — the resident
+        incidence is never re-sorted or re-copied. Returns the number of
+        delta chunks added. Bumps ``epoch``.
+        """
+        cols = np.asarray(cols, np.int8)
+        n_new = cols.shape[1]
+        if n_new == 0:
+            return 0
+        if cols.shape[0] != self.n_rows:
+            raise ValueError(
+                f"append_entries: {cols.shape[0]} rows, store has {self.n_rows}")
+        self._pad_last_chunk_full()
+        if self.delta_start is None:
+            self.delta_start = self.n_entries
+        w = self.chunk_entries
+        added = 0
+        for j0 in range(0, n_new, w):
+            width = min(w, n_new - j0)
+            blk = np.zeros((self.capacity, width), np.int8)
+            blk[: self.n_rows] = cols[:, j0: j0 + width]
+            self.chunks.append(blk)
+            added += 1
+        self.entry_item = np.concatenate(
+            [self.entry_item, np.asarray(item, np.int32)])
+        self.entry_value = np.concatenate(
+            [self.entry_value, np.asarray(value, np.int32)])
+        self.entry_p = np.concatenate(
+            [self.entry_p, np.asarray(p, np.float32)])
+        self.entry_score = np.concatenate(
+            [self.entry_score, np.asarray(score, np.float32)])
+        self.epoch += 1
+        return added
+
+    def ensure_row_capacity(self, n: int) -> None:
+        """Grow every chunk's row capacity to at least ``n`` (geometric).
+
+        Reallocates each chunk once (copying only the live rows); a no-op
+        when the capacity already suffices. Bumps ``epoch`` (views alias the
+        old arrays).
+        """
+        if n <= self.capacity:
+            return
+        new_cap = max(int(n), 2 * self.capacity)
+        for c in range(self.n_chunks):
+            blk = np.zeros((new_cap, self.chunks[c].shape[1]), np.int8)
+            blk[: self.n_rows] = self.chunks[c][: self.n_rows]
+            self.chunks[c] = blk
+        self.capacity = new_cap
+        self.epoch += 1
+
+    def snapshot(self) -> "StoreSnapshot":
+        """Capture a rollback point (array REFS, not copies — O(chunks)).
+
+        Valid because mutations never write existing entry columns in place:
+        ``append_entries`` replaces the padded chunk and the metadata arrays
+        with extended copies, and row staging only writes rows ≥ ``n_rows``
+        (which ``StoreSnapshot.restore`` zeroes back).
+        """
+        return StoreSnapshot(
+            store=self, chunks=list(self.chunks), entry_item=self.entry_item,
+            entry_value=self.entry_value, entry_p=self.entry_p,
+            entry_score=self.entry_score, n_rows=self.n_rows,
+            capacity=self.capacity, delta_start=self.delta_start,
+            epoch=self.epoch)
 
     # -- constructors -------------------------------------------------------
 
@@ -354,4 +529,47 @@ class CorpusStore:
                    chunk_entries=w, n_rows=n_rows, capacity=cap)
 
 
-__all__ = ["CorpusStore", "ChunkView", "DEFAULT_CHUNK_ENTRIES", "align_chunk"]
+@dataclass
+class StoreSnapshot:
+    """Rollback point for one ``CorpusStore`` (refs captured by ``snapshot``)."""
+
+    store: "CorpusStore"
+    chunks: list
+    entry_item: np.ndarray
+    entry_value: np.ndarray
+    entry_p: np.ndarray
+    entry_score: np.ndarray
+    n_rows: int
+    capacity: int
+    delta_start: Optional[int]
+    epoch: int
+
+    def restore(self) -> None:
+        """Put the captured store back to its snapshot state, bit-exact.
+
+        Restores the array refs — including ``capacity``, which must track
+        the restored chunk arrays: an ``ensure_row_capacity`` between
+        snapshot and restore swapped in larger chunks, so keeping the grown
+        capacity against the restored (smaller) arrays would let a later
+        ``append_rows`` pass the capacity check and write out of bounds —
+        then zeroes the row slack of every chunk (staged rows were written
+        in place).
+        """
+        st = self.store
+        st.chunks = list(self.chunks)
+        st.capacity = self.capacity
+        st.entry_item = self.entry_item
+        st.entry_value = self.entry_value
+        st.entry_p = self.entry_p
+        st.entry_score = self.entry_score
+        st.delta_start = self.delta_start
+        st.epoch = self.epoch
+        st.n_rows = self.n_rows
+        st._views = {}
+        st._views_key = None
+        for c in st.chunks:
+            c[self.n_rows:] = 0
+
+
+__all__ = ["CorpusStore", "ChunkView", "StoreSnapshot",
+           "DEFAULT_CHUNK_ENTRIES", "align_chunk"]

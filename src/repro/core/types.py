@@ -154,6 +154,29 @@ class DetectionResult:
         return s
 
 
+#: Composite-key base for (item, value) claim keys: key = item·KEY_BASE + value.
+#: One fixed base (rather than a per-dataset max) keeps keys comparable across
+#: epochs — the result cache intersects key sets from different commits
+#: (DESIGN.md §7), so the coding must not shift as new value ids appear.
+CLAIM_KEY_BASE = np.int64(1) << 32
+
+
+def claim_value_keys(values: np.ndarray) -> np.ndarray:
+    """Composite int64 keys of the provided (item, value) claims in ``values``.
+
+    ``values`` is any ``(…, D)`` integer value matrix in the corpus coding
+    (−1 = missing). Returns the sorted unique keys ``d·CLAIM_KEY_BASE + v``
+    of all provided claims — the currency of ``commit_rows``'s delta
+    detection and of the serving cache's invalidation test: two sources can
+    share a value iff their key sets intersect.
+    """
+    values = np.asarray(values)
+    d = np.broadcast_to(
+        np.arange(values.shape[-1], dtype=np.int64), values.shape)
+    keys = d * CLAIM_KEY_BASE + values
+    return np.unique(keys[values >= 0])
+
+
 def pair_f_measure(pred: set, truth: set) -> tuple:
     """Precision/recall/F of detected copying pairs vs a reference set."""
     if not pred and not truth:

@@ -114,12 +114,18 @@ def copyscore_store(
     chunk's elementwise score math compiles separately and may fuse
     differently than inside the dense scan). Asserted by
     tests/test_store.py.
+
+    Chunks with no live entry (all-padding columns — a committed store's
+    region alignment can produce them, DESIGN.md §7) contribute zero to
+    every channel and are skipped without a kernel launch.
     """
     S = store.n_rows
     p_hat = np.asarray(p_hat, np.float32)
     c = np.zeros((S, S), np.float32)
     n = np.zeros((S, S), np.float32)
     for k, ch in enumerate(store.iter_chunks()):
+        if ch.item.size and not (ch.item >= 0).any():
+            continue
         ck, nk = copyscore(
             ch.V.astype(np.float32), p_hat[k: k + 1], acc,
             s=s, n_false=n_false, block_i=block_i, block_j=block_j,

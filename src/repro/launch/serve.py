@@ -19,6 +19,14 @@
 
       --mode sample_verify serves the sample-then-verify engine
       (DESIGN.md §4) instead of the exact bucketed path.
+
+      --commit-accepted exercises the corpus-mutation path end-to-end
+      (DESIGN.md §7): after the first wave, every served request's rows are
+      committed into the live corpus (delta-chunk re-index, no rebuild) and
+      the wave is re-served — repeats hit the invalidation-aware result
+      cache — then ServiceStats (cache hit rate, delta-chunk count,
+      re-index/compaction counters) are printed. --replicas N serves through
+      a ReplicaRouter with epoch-consistent commit broadcast.
 """
 from __future__ import annotations
 
@@ -60,7 +68,7 @@ def serve_detect(args):
     import jax
     import numpy as np
     from repro.core import CopyConfig
-    from repro.core.serving import DetectRequest, DetectionService
+    from repro.core.serving import DetectRequest, DetectionService, ReplicaRouter
     from repro.data.claims import (
         SyntheticSpec,
         oracle_claim_probs,
@@ -83,15 +91,32 @@ def serve_detect(args):
                       p_claim=pq[i * q:(i + 1) * q])
         for i in range(args.requests)
     ]
-    svc = DetectionService(
-        sc.dataset, p, cfg, mode=args.mode,
+    service_kw = dict(
+        mode=args.mode,
         max_batch_requests=args.batch_requests,
         max_pending_rows=args.max_pending_rows,
         tile=args.tile, devices=args.devices)
+    if args.replicas > 1:
+        svc = ReplicaRouter(sc.dataset, p, cfg, n_replicas=args.replicas,
+                            **service_kw)
+    else:
+        svc = DetectionService(sc.dataset, p, cfg, **service_kw)
     print(f"[serve] corpus {args.sources}×{args.items}, mode={args.mode}, "
           f"devices={args.devices or len(jax.devices())}, "
+          f"replicas={args.replicas}, "
           f"batch≤{args.batch_requests} requests, "
           f"backpressure at {args.max_pending_rows} rows")
+
+    def _services(s):
+        return s.replicas if isinstance(s, ReplicaRouter) else [s]
+
+    def _reset(s):
+        # fresh stats AND caches so the timed run measures engine passes,
+        # not warm-up leftovers
+        for one in _services(s):
+            one.stats = type(one.stats)()
+            if one.cache is not None:
+                one.cache = type(one.cache)(one.cache.max_entries)
 
     # warm-up with one full-size batch (the largest union shape) so the
     # timed run mostly excludes JIT compilation — odd-sized batches the
@@ -102,7 +127,7 @@ def serve_detect(args):
     for r in requests[:n_warm]:
         svc.submit(r)
     svc.flush()
-    svc.stats = type(svc.stats)()
+    _reset(svc)
 
     t0 = time.perf_counter()
     with svc:
@@ -125,6 +150,38 @@ def serve_detect(args):
     print(f"[serve] latency p50={np.percentile(lat, 50) * 1e3:.0f} ms "
           f"p99={np.percentile(lat, 99) * 1e3:.0f} ms; "
           f"planted copiers detected {hits}/{planted}")
+
+    if args.commit_accepted:
+        # fold the ACCEPTED rows into the live corpus — rows detection
+        # cleared of copying (copier rows are rejected; independent rows
+        # carry fresh evidence) — then re-serve the same wave: repeats whose
+        # claims no commit touched come straight from the result cache
+        t0 = time.perf_counter()
+        n_acc = 0
+        for r, resp in zip(requests, results):
+            keep = ~resp.copying.any(axis=1) & ~resp.intra_copying.any(axis=1)
+            if keep.any():
+                svc.commit(r.values[keep], r.accuracy[keep], r.p_claim[keep])
+                n_acc += int(keep.sum())
+        t_commit = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        with svc:
+            futs = [svc.submit(r) for r in requests]
+            [f.result() for f in futs]
+        t_wave2 = time.perf_counter() - t0
+        st = svc.stats
+        corpus_rows = max(s.resident.n_corpus for s in _services(svc))
+        print(f"[serve] committed {n_acc} accepted rows in {t_commit:.2f}s "
+              f"({st.commits} commits, corpus now {corpus_rows} sources); "
+              f"re-served wave in {t_wave2:.2f}s")
+        print(f"[serve] ServiceStats: cache_hit_rate="
+              f"{st.cache_hit_rate:.1%} ({st.cache_hits} hits / "
+              f"{st.cache_misses} misses, "
+              f"{st.cache_invalidations} invalidations), "
+              f"delta_chunks={st.delta_chunks}, "
+              f"new_entries={st.new_entries}, "
+              f"reindexed_entries={st.reindexed_entries}, "
+              f"compactions={st.compactions}")
 
 
 def main():
@@ -149,6 +206,14 @@ def main():
                     help="backpressure bound on queued query rows")
     ap.add_argument("--tile", type=int, default=256)
     ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--commit-accepted", action="store_true",
+                    help="after the first wave, commit every served "
+                         "request's rows into the live corpus (delta-chunk "
+                         "re-index) and re-serve the wave; prints "
+                         "ServiceStats incl. cache hit rate")
+    ap.add_argument("--replicas", type=int, default=1,
+                    help="serve through a ReplicaRouter with this many "
+                         "DetectionService replicas (commits broadcast)")
     args = ap.parse_args()
     if args.task == "detect":
         serve_detect(args)

@@ -1,0 +1,386 @@
+"""Live corpus mutation (DESIGN.md §7): delta-chunk commits, bit-exact
+rollback, the invalidation-aware result cache, and the replica router.
+
+The load-bearing properties: (a) any interleaving of row staging and
+commits can be unwound bit-exactly — a mid-batch failure never corrupts the
+committed index; (b) cached pair results are served ONLY when provably
+unaffected by every delta since their epoch; (c) replicas that apply the
+same commit sequence stay epoch-consistent and decision-identical.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    CopyConfig,
+    DetectionEngine,
+    build_index,
+    claim_value_keys,
+    commit_rows,
+    compact_index,
+    rollback_commit,
+)
+from repro.core.bucketed import index_detect_exact
+from repro.core.serving import (
+    DetectRequest,
+    DetectionService,
+    ReplicaRouter,
+    serve_batch,
+)
+from repro.core.types import ClaimsDataset
+from repro.data.claims import (
+    SyntheticSpec,
+    oracle_claim_probs,
+    synthetic_claims,
+    synthetic_query_rows,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+def _world(seed=0, n_src=40, n_items=160):
+    rng = np.random.default_rng(seed)
+    values = np.where(rng.random((n_src, n_items)) < 0.4,
+                      rng.integers(0, 4, (n_src, n_items)), -1).astype(np.int32)
+    ds = ClaimsDataset(values=values,
+                       accuracy=rng.uniform(0.3, 0.95, n_src).astype(np.float32))
+    p = np.where(values == 0, 0.9, 0.05).astype(np.float32)
+    return ds, p
+
+
+def _rows(seed, q, n_items, n_vals=4):
+    rng = np.random.default_rng(seed)
+    vals = np.where(rng.random((q, n_items)) < 0.3,
+                    rng.integers(0, n_vals, (q, n_items)), -1).astype(np.int32)
+    acc = rng.uniform(0.3, 0.95, q).astype(np.float32)
+    p = np.where(vals == 0, 0.9, np.where(vals >= 0, 0.05, 0.0)).astype(np.float32)
+    return vals, acc, p
+
+
+def _union(ds, p, vals, acc, pq):
+    return (ClaimsDataset(values=np.concatenate([ds.values, vals]),
+                          accuracy=np.concatenate([ds.accuracy, acc])),
+            np.concatenate([p, pq]))
+
+
+# ---------------------------------------------------------------------------
+# interleaved append/truncate + commit/rollback restore bit-exact state
+# ---------------------------------------------------------------------------
+
+def test_interleaved_append_truncate_bit_exact():
+    """Random interleavings of append_rows / truncate_rows land back on the
+    exact corpus-only membership, including q=0 and full-slack appends."""
+    ds, p = _world(3)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=52)
+    store = idx.store
+    ref = store.to_dense().copy()
+    S0 = store.n_rows
+    rng = np.random.default_rng(1)
+    for step in range(30):
+        slack = store.capacity - store.n_rows
+        if slack == 0 or (store.n_rows > S0 and rng.random() < 0.5):
+            store.truncate_rows(
+                int(rng.integers(S0, store.n_rows + 1)))
+        else:
+            q = int(rng.integers(0, slack + 1))       # q = 0 included
+            vals = _rows(100 + step, q, ds.n_items)[0]
+            store.append_rows(vals)
+    # the all-rows-slack edge: fill the slack completely, then unwind
+    store.truncate_rows(S0)
+    full = store.capacity - S0
+    store.append_rows(_rows(999, full, ds.n_items)[0])
+    assert store.n_rows == store.capacity
+    with pytest.raises(ValueError, match="capacity"):
+        store.append_rows(_rows(1000, 1, ds.n_items)[0])
+    store.truncate_rows(S0)
+    np.testing.assert_array_equal(store.to_dense(), ref)
+
+
+def test_commit_rollback_restores_everything():
+    """rollback_commit after a commit (with delta entries, touched scores,
+    l_counts growth) restores the index bit-exact — the mid-batch failure
+    contract."""
+    ds, p = _world(5)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=52)
+    before = {
+        "dense": idx.store.to_dense().copy(),
+        "score": idx.store.entry_score.copy(),
+        "item": idx.store.entry_item.copy(),
+        "E": idx.n_entries,
+        "chunks": idx.store.n_chunks,
+        "ebar": idx.ebar_start,
+        "mask": idx.ebar_mask,
+        "l": idx.l_counts,
+        "ips": idx.items_per_source,
+        "epoch": idx.store.epoch,
+    }
+    vals, acc, pq = _rows(7, 6, ds.n_items)
+    union, union_p = _union(ds, p, vals, acc, pq)
+    info = commit_rows(idx, union, union_p, CFG, 6, compact=False)
+    assert info.new_entries > 0 and info.bits_set > 0
+    assert idx.store.n_delta_chunks == info.delta_chunks_added > 0
+    rollback_commit(idx, info)
+    np.testing.assert_array_equal(idx.store.to_dense(), before["dense"])
+    np.testing.assert_array_equal(idx.store.entry_score, before["score"])
+    np.testing.assert_array_equal(idx.store.entry_item, before["item"])
+    assert idx.n_entries == before["E"]
+    assert idx.store.n_chunks == before["chunks"]
+    assert idx.ebar_start == before["ebar"] and idx.ebar_mask is before["mask"]
+    assert idx.l_counts is before["l"]
+    assert idx.items_per_source is before["ips"]
+    assert idx.store.epoch == before["epoch"]
+    assert idx.store.delta_start is None
+    # rollback works across compaction too (store object replaced)
+    info2 = commit_rows(idx, union, union_p, CFG, 6, compact=True,
+                        compact_threshold=0.0)
+    assert info2.compacted
+    rollback_commit(idx, info2)
+    np.testing.assert_array_equal(idx.store.to_dense(), before["dense"])
+    assert idx.store.n_chunks == before["chunks"]
+
+
+def test_commit_q0_is_a_safe_noop():
+    """A zero-row commit must not disturb membership or decisions."""
+    ds, p = _world(9)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=48)
+    ref = idx.store.to_dense().copy()
+    info = commit_rows(idx, ds, p, CFG, 0)
+    assert info.rows == 0 and info.new_entries == 0 and info.bits_set == 0
+    np.testing.assert_array_equal(idx.store.to_dense(), ref)
+    res = index_detect_exact(ds, p, CFG, index=idx)
+    res_ref = index_detect_exact(ds, p, CFG, index=build_index(ds, p, CFG))
+    np.testing.assert_array_equal(res.copying, res_ref.copying)
+
+
+def test_serve_batch_failure_rolls_back_transient_commit(monkeypatch):
+    """An engine failure mid-batch unwinds the transient commit — the
+    committed index is bit-identical afterwards and keeps serving."""
+    ds, p = _world(11)
+    svc = DetectionService(ds, p, CFG, mode="bucketed", tile=32,
+                           max_batch_requests=4)
+    idx = svc._index
+    ref = idx.store.to_dense().copy()
+    ref_E = idx.n_entries
+    vals, acc, pq = _rows(13, 3, ds.n_items)
+    req = DetectRequest(rid=0, values=vals, accuracy=acc, p_claim=pq)
+
+    def boom(*a, **kw):
+        raise RuntimeError("mid-batch failure")
+
+    monkeypatch.setattr(svc.engine, "detect", boom)
+    fut = svc.submit(req)
+    svc.flush()
+    with pytest.raises(RuntimeError, match="mid-batch"):
+        fut.result()
+    monkeypatch.undo()
+    np.testing.assert_array_equal(idx.store.to_dense(), ref)
+    assert idx.n_entries == ref_E
+    assert idx.store.n_rows == ds.n_sources
+    # the service still serves correctly after the failed batch
+    fut = svc.submit(req)
+    svc.flush()
+    fresh = serve_batch(ds, p, DetectionEngine(CFG, mode="bucketed", tile=32),
+                        [req])[0]
+    np.testing.assert_array_equal(fut.result().copying, fresh.copying)
+
+    # a cache hit co-batched with a failing miss still resolves — only the
+    # futures waiting on the broken engine pass see the exception
+    vals2, acc2, pq2 = _rows(14, 2, ds.n_items)
+    other = DetectRequest(rid=1, values=vals2, accuracy=acc2, p_claim=pq2)
+    monkeypatch.setattr(svc.engine, "detect", boom)
+    f_hit = svc.submit(req)              # cached above → exact answer in hand
+    f_miss = svc.submit(other)
+    svc.flush()
+    monkeypatch.undo()
+    assert f_hit.result().cache_hit
+    np.testing.assert_array_equal(f_hit.result().copying, fresh.copying)
+    with pytest.raises(RuntimeError, match="mid-batch"):
+        f_miss.result()
+
+
+# ---------------------------------------------------------------------------
+# memoized chunk metadata views (satellite: per-epoch identity)
+# ---------------------------------------------------------------------------
+
+def test_chunk_views_memoized_per_epoch():
+    """Within one (epoch, n_rows) state the SAME ChunkView object comes back
+    on every access; structural mutations and row staging invalidate it."""
+    ds, p = _world(2)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=48)
+    store = idx.store
+    v0 = store.chunk(0)
+    assert store.chunk(0) is v0                      # identity within epoch
+    assert list(store.iter_chunks())[0] is v0
+    # row staging changes n_rows → new views
+    store.append_rows(_rows(1, 2, ds.n_items)[0])
+    v0b = store.chunk(0)
+    assert v0b is not v0
+    assert store.chunk(0) is v0b
+    store.truncate_rows(ds.n_sources)
+    # entry mutation bumps the epoch → new views
+    vals, acc, pq = _rows(17, 4, ds.n_items)
+    union, union_p = _union(ds, p, vals, acc, pq)
+    epoch0 = store.epoch
+    commit_rows(idx, union, union_p, CFG, 4, compact=False)
+    assert idx.store.epoch > epoch0
+    assert idx.store.chunk(0) is not v0
+    assert idx.store.chunk(0) is idx.store.chunk(0)
+
+
+# ---------------------------------------------------------------------------
+# result cache: exact invalidation
+# ---------------------------------------------------------------------------
+
+def test_cache_hit_then_exact_invalidation():
+    """A cached response survives commits that share none of its claim keys
+    (served with independent padding for the new sources — asserted equal to
+    a fresh engine pass) and dies exactly when a commit overlaps them."""
+    ds, p = _world(21, n_src=36, n_items=200)
+    svc = DetectionService(ds, p, CFG, mode="bucketed", tile=32,
+                           max_batch_requests=4)
+    D = ds.n_items
+    # the request claims only items < D//2
+    vals = -np.ones((2, D), np.int32)
+    vals[:, : D // 2] = _rows(31, 2, D // 2)[0]
+    acc = np.full(2, 0.7, np.float32)
+    pq = np.where(vals == 0, 0.9,
+                  np.where(vals >= 0, 0.05, 0.0)).astype(np.float32)
+    req = DetectRequest(rid=0, values=vals, accuracy=acc, p_claim=pq)
+
+    fut = svc.submit(req)
+    svc.flush()
+    first = fut.result()
+    assert not first.cache_hit
+
+    # a DISJOINT commit: rows claiming only items ≥ D//2
+    cv = -np.ones((3, D), np.int32)
+    cv[:, D // 2:] = _rows(33, 3, D - D // 2)[0]
+    ca = np.full(3, 0.7, np.float32)
+    cp = np.where(cv == 0, 0.9, np.where(cv >= 0, 0.05, 0.0)).astype(np.float32)
+    assert not np.isin(claim_value_keys(vals), claim_value_keys(cv)).any()
+    svc.commit(cv, ca, cp)
+
+    fut = svc.submit(req)
+    svc.flush()
+    hit = fut.result()
+    assert hit.cache_hit, "disjoint commit must not invalidate"
+    assert hit.copying.shape[1] == svc.resident.n_corpus   # padded columns
+    # the padded decision equals a fresh uncached pass over the grown corpus
+    fresh = serve_batch(svc.base, svc.base_p,
+                        DetectionEngine(CFG, mode="bucketed", tile=32), [req])[0]
+    np.testing.assert_array_equal(hit.copying, fresh.copying)
+
+    # an OVERLAPPING commit: re-commit the request's own rows
+    svc.commit(vals, acc, pq)
+    fut = svc.submit(req)
+    svc.flush()
+    after = fut.result()
+    assert not after.cache_hit, "overlapping commit must invalidate"
+    assert svc.stats.cache_invalidations >= 1
+    fresh2 = serve_batch(svc.base, svc.base_p,
+                         DetectionEngine(CFG, mode="bucketed", tile=32),
+                         [req])[0]
+    np.testing.assert_array_equal(after.copying, fresh2.copying)
+
+
+def test_cached_decisions_track_rebuild_across_commits():
+    """Commit-then-serve (cache + committed index) equals a rebuilt-from-
+    scratch service across a commit schedule — the §7 acceptance property."""
+    sc = synthetic_claims(SyntheticSpec(n_sources=48, n_items=256,
+                                        coverage="stock", n_cliques=3, seed=4))
+    ds, p = sc.dataset, oracle_claim_probs(sc)
+    vals, acc, pq, _ = synthetic_query_rows(sc, 12, seed=5)
+    reqs = [DetectRequest(rid=i, values=vals[3 * i: 3 * i + 3],
+                          accuracy=acc[3 * i: 3 * i + 3],
+                          p_claim=pq[3 * i: 3 * i + 3]) for i in range(4)]
+    svc = DetectionService(ds, p, CFG, mode="bucketed", tile=32,
+                           max_batch_requests=4)
+    corpus_v, corpus_a, corpus_p = ds.values, ds.accuracy, p
+    for round_ in range(3):
+        futs = [svc.submit(r) for r in reqs]
+        svc.flush()
+        got = [f.result() for f in futs]
+        cold = DetectionService(
+            ClaimsDataset(values=corpus_v, accuracy=corpus_a), corpus_p, CFG,
+            mode="bucketed", tile=32, max_batch_requests=4,
+            result_cache=False)
+        futs = [cold.submit(r) for r in reqs]
+        cold.flush()
+        want = [f.result() for f in futs]
+        for a, b in zip(got, want):
+            np.testing.assert_array_equal(a.copying, b.copying)
+            np.testing.assert_array_equal(a.intra_copying, b.intra_copying)
+        r = reqs[round_]
+        svc.commit(r.values, r.accuracy, r.p_claim)
+        corpus_v = np.concatenate([corpus_v, r.values])
+        corpus_a = np.concatenate([corpus_a, r.accuracy])
+        corpus_p = np.concatenate([corpus_p, r.p_claim])
+    assert svc.stats.commits == 3
+    # full-axis rows share truth-value claim keys with every commit, so the
+    # conservative-exact rule invalidates; hits are exercised by
+    # test_cache_hit_then_exact_invalidation's disjoint commits
+    assert svc.stats.cache_invalidations > 0
+
+
+# ---------------------------------------------------------------------------
+# replica router
+# ---------------------------------------------------------------------------
+
+def test_replica_router_epoch_consistent_and_decision_equal():
+    """Round-robined reads return identical decisions from every replica;
+    commit broadcast keeps epochs equal; stats aggregate."""
+    ds, p = _world(41, n_src=36, n_items=160)
+    router = ReplicaRouter(ds, p, CFG, n_replicas=3, mode="bucketed",
+                           tile=32, max_batch_requests=4)
+    vals, acc, pq = _rows(43, 2, ds.n_items)
+    req = DetectRequest(rid=0, values=vals, accuracy=acc, p_claim=pq)
+    # one submit per replica (round-robin covers all three)
+    futs = [router.submit(req) for _ in range(3)]
+    router.flush()
+    outs = [f.result() for f in futs]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o.copying, outs[0].copying)
+    assert router.epoch == 0
+    cv, ca, cp = _rows(47, 3, ds.n_items)
+    infos = router.commit(cv, ca, cp)
+    assert len(infos) == 3
+    assert router.epoch == 1
+    assert all(svc.resident.n_corpus == ds.n_sources + 3
+               for svc in router.replicas)
+    # post-commit reads still agree across replicas
+    futs = [router.submit(req) for _ in range(3)]
+    router.flush()
+    outs = [f.result() for f in futs]
+    for o in outs[1:]:
+        np.testing.assert_array_equal(o.copying, outs[0].copying)
+    assert router.stats.commits == 3                 # one per replica
+    with pytest.raises(ValueError, match="n_replicas"):
+        ReplicaRouter(ds, p, CFG, n_replicas=0)
+
+
+# ---------------------------------------------------------------------------
+# compaction
+# ---------------------------------------------------------------------------
+
+def test_compaction_folds_deltas_and_keeps_decisions():
+    """Once deltas exceed the threshold, commit folds them into a
+    score-sorted base (prefix Ē restored) without changing decisions."""
+    ds, p = _world(51)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=64)
+    vals, acc, pq = _rows(53, 6, ds.n_items)
+    union, union_p = _union(ds, p, vals, acc, pq)
+    info = commit_rows(idx, union, union_p, CFG, 6, compact=True,
+                       compact_threshold=0.0)
+    assert info.compacted
+    assert idx.ebar_mask is None and idx.store.delta_start is None
+    assert (idx.store.entry_item >= 0).all()          # padding dropped
+    assert np.all(np.diff(idx.store.entry_score) <= 1e-6)   # score-sorted
+    fresh = build_index(union, union_p, CFG)
+    a = index_detect_exact(union, union_p, CFG, index=idx)
+    b = index_detect_exact(union, union_p, CFG, index=fresh)
+    np.testing.assert_array_equal(a.copying, b.copying)
+    # explicit compaction of an uncompacted commit agrees too
+    idx2 = build_index(ds, p, CFG, chunk_entries=16, row_capacity=64)
+    commit_rows(idx2, union, union_p, CFG, 6, compact=False)
+    compact_index(idx2, CFG)
+    c = index_detect_exact(union, union_p, CFG, index=idx2)
+    np.testing.assert_array_equal(c.copying, b.copying)

@@ -1,0 +1,164 @@
+"""ISSUE 5 acceptance: commit-then-detect decisions equal a full rebuild
+from the union claim set — every engine mode, S ∈ {64, 512} × {1, 8}
+devices — plus a hypothesis property over random commit schedules (sizes,
+orders, compaction on/off).
+
+Mirrors tests/test_store_modes.py: one subprocess with 8 virtual devices,
+device counts exercised via the engine's ``devices`` option. Index-backed
+modes detect with the COMMITTED index (base + delta chunks, Ē mask) against
+a fresh ``build_index`` over the union; modes that index internally
+(pairwise, sampled, sample_verify) run on the union claims both ways —
+the committed corpus is the same claim set, so the whole nine-mode matrix
+is pinned to the rebuild.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CopyConfig, build_index, commit_rows, hybrid_detect
+from repro.core.bucketed import index_detect_exact
+from repro.core.types import ClaimsDataset
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import CopyConfig, DetectionEngine, build_index, commit_rows
+    from repro.core.types import ClaimsDataset
+    from repro.data.claims import (
+        SyntheticSpec, oracle_claim_probs, synthetic_claims,
+        synthetic_query_rows)
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+    INDEXED = ("exact", "bound", "bound+", "hybrid", "bucketed", "incremental")
+
+    def decisions(mode, union, union_p, idx, devices):
+        eng = DetectionEngine(cfg, mode=mode, tile=64, devices=devices,
+                              sample_rate=0.2, sample_seed=1)
+        use_idx = idx if mode in INDEXED else None
+        out = [eng.detect(union, union_p, index=use_idx).copying]
+        if mode == "incremental":
+            rng = np.random.default_rng(7)
+            p2 = np.clip(union_p + np.where(union_p > 0,
+                                            rng.normal(0, 0.004, union_p.shape),
+                                            0), 1e-3, 0.999).astype(np.float32)
+            out.append(eng.detect(union, p2).copying)
+        return out
+
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        q1, q2 = 6, 6
+        vals, acc, pq, _ = synthetic_query_rows(sc, q1 + q2, seed=3)
+        u1 = ClaimsDataset(
+            values=np.concatenate([sc.dataset.values, vals[:q1]]),
+            accuracy=np.concatenate([sc.dataset.accuracy, acc[:q1]]))
+        p1 = np.concatenate([p, pq[:q1]])
+        union = ClaimsDataset(
+            values=np.concatenate([u1.values, vals[q1:]]),
+            accuracy=np.concatenate([u1.accuracy, acc[q1:]]))
+        union_p = np.concatenate([p1, pq[q1:]])
+
+        # two-step commit schedule, deltas left in place (no compaction)
+        idx = build_index(sc.dataset, p, cfg,
+                          row_capacity=sc.dataset.n_sources + q1 + q2)
+        i1 = commit_rows(idx, u1, p1, cfg, q1, compact=False)
+        i2 = commit_rows(idx, union, union_p, cfg, q2, compact=False)
+        assert idx.store.n_delta_chunks > 0, "schedule must leave deltas"
+        idx_rebuilt = build_index(union, union_p, cfg)
+
+        for mode in ("pairwise", "exact", "bound", "bound+", "hybrid",
+                     "incremental", "sampled", "sample_verify", "bucketed"):
+            dev_counts = (1, 8) if mode in ("bucketed", "sampled",
+                                            "sample_verify") else (1,)
+            for n_dev in dev_counts:
+                a = decisions(mode, union, union_p, idx, n_dev)
+                b = decisions(mode, union, union_p, idx_rebuilt, n_dev)
+                eq = all(np.array_equal(x, y) for x, y in zip(a, b))
+                nz = int(sum(x.sum() for x in a))
+                out[f"S{S}/{mode}/dev{n_dev}"] = {
+                    "equal": bool(eq), "copying_bits": nz,
+                    "new_entries": i1.new_entries + i2.new_entries}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_all_modes_commit_equals_rebuild():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=900,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    # 9 modes; 3 tiled modes get an extra dev8 entry → 12 combos per S
+    assert len(out) == 24, sorted(out)
+    for combo, r in out.items():
+        assert r["equal"], f"{combo}: commit-then-detect diverged from rebuild"
+        assert r["new_entries"] > 0, f"{combo}: schedule created no deltas"
+    assert any(r["copying_bits"] > 0 for r in out.values())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random commit schedules keep exact/hybrid pinned to rebuild
+# ---------------------------------------------------------------------------
+
+def _world(seed, n_src=22, n_items=70):
+    rng = np.random.default_rng(seed)
+    values = np.where(rng.random((n_src, n_items)) < 0.45,
+                      rng.integers(0, 4, (n_src, n_items)), -1).astype(np.int32)
+    ds = ClaimsDataset(values=values,
+                       accuracy=rng.uniform(0.3, 0.95, n_src).astype(np.float32))
+    p = np.where(values == 0, 0.9, 0.05).astype(np.float32)
+    return ds, p
+
+
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       sizes=st.lists(st.integers(0, 5), min_size=1, max_size=3),
+       compact=st.booleans(),
+       chunk=st.integers(8, 48))
+def test_random_commit_schedules_track_rebuild(seed, sizes, compact, chunk):
+    """After EVERY commit of a random schedule (random sizes — including
+    q=0 — random row content, compaction on/off, random chunking) the
+    committed index decides exactly like a rebuild from the union."""
+    ds, p = _world(seed)
+    rng = np.random.default_rng(seed + 1)
+    idx = build_index(ds, p, CFG, chunk_entries=chunk,
+                      row_capacity=ds.n_sources + sum(sizes))
+    vals_u, acc_u, p_u = ds.values, ds.accuracy, p
+    for step, q in enumerate(sizes):
+        vals = np.where(rng.random((q, ds.n_items)) < 0.3,
+                        rng.integers(0, 4, (q, ds.n_items)), -1).astype(np.int32)
+        acc = rng.uniform(0.3, 0.95, q).astype(np.float32)
+        pq = np.where(vals == 0, 0.9,
+                      np.where(vals >= 0, 0.05, 0.0)).astype(np.float32)
+        vals_u = np.concatenate([vals_u, vals])
+        acc_u = np.concatenate([acc_u, acc])
+        p_u = np.concatenate([p_u, pq])
+        union = ClaimsDataset(values=vals_u, accuracy=acc_u)
+        commit_rows(idx, union, p_u, CFG, q, compact=compact,
+                    compact_threshold=0.2)
+        fresh = build_index(union, p_u, CFG)
+        a = index_detect_exact(union, p_u, CFG, index=idx)
+        b = index_detect_exact(union, p_u, CFG, index=fresh)
+        np.testing.assert_array_equal(a.copying, b.copying,
+                                      err_msg=f"exact diverged at step {step}")
+        ha = hybrid_detect(union, p_u, CFG, index=idx)
+        hb = hybrid_detect(union, p_u, CFG, index=fresh)
+        np.testing.assert_array_equal(ha.copying, hb.copying,
+                                      err_msg=f"hybrid diverged at step {step}")
