@@ -19,6 +19,10 @@ CI and future PRs can diff the perf trajectory.
           re-index rebuild (≥5× asserted), commit+detect vs
           rebuild+detect under a skewed request mix (cache hit
           rate emitted), decisions asserted == rebuild
+  durability  durable DetectionService: restore (snapshot +    (DESIGN §8)
+          log-tail replay) vs rebuild-from-claims (≥5×
+          asserted), raw replay rate in commits/s, restored
+          decisions asserted == never-restarted service
   serve   batched serving: req/s + p50/p99 latency vs batch    (serving)
           size; asserts batched == per-request decisions and
           sample_verify == exact on its candidate set
@@ -775,6 +779,148 @@ def mutate():
          f"cache_invalidations={st.cache_invalidations}")
 
 
+def durability():
+    """Durable service scenario (ISSUE 6): snapshot/restore vs rebuild.
+
+    A durable 768-source service takes a stream of commits (each fsync'd
+    into the commit log) and serves a request mix, snapshotting on the way.
+    Measures:
+
+      * restore wall-clock (latest snapshot + log-tail replay) vs
+        rebuild-from-claims (a fresh ``DetectionService`` over the union
+        corpus — ``build_index`` dominant), ≥ 5× asserted;
+      * raw replay rate in commits/s, from a second state dir that keeps
+        only the initial snapshot (``snapshot_every=0``) so restore replays
+        the ENTIRE commit history through the in-memory commit path;
+      * decisions of the restored service asserted equal to the
+        never-restarted one — served mix, fresh probes, and ServiceStats
+        epochs (the BENCH_durability.json acceptance row).
+    """
+    import os
+    import shutil
+    import tempfile
+
+    import jax
+    from repro.core import DurabilityOptions
+    from repro.core.serving import DetectRequest, DetectionService
+    from repro.core.types import ClaimsDataset
+    from repro.data.claims import (
+        SyntheticSpec,
+        oracle_claim_probs,
+        synthetic_claims,
+    )
+
+    S, D, q = 768, 2048, 8
+    n_waves = 6
+    sc = synthetic_claims(SyntheticSpec(
+        n_sources=S, n_items=D, coverage="book", n_cliques=20, clique_size=3,
+        clique_items=12, seed=0))
+    p = oracle_claim_probs(sc)
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(11)
+    n_false = int(max(sc.dataset.values.max(), 1))
+
+    def make_rows(n_rows, copy_of=None):
+        vals = -np.ones((n_rows, D), np.int32)
+        for r in range(n_rows):
+            if copy_of is not None:
+                o = int(rng.integers(0, S))
+                o_idx = np.nonzero(sc.dataset.values[o] >= 0)[0]
+                take = o_idx[rng.random(o_idx.size) < 0.8]
+                vals[r, take] = sc.dataset.values[o, take]
+            idx = rng.choice(D, size=24, replace=False)
+            idx = idx[vals[r, idx] < 0]
+            correct = rng.random(idx.size) < 0.7
+            vals[r, idx] = np.where(correct, 0,
+                                    rng.integers(1, n_false + 1, idx.size))
+        acc = np.full(n_rows, 0.7, np.float32)
+        pc = np.where(vals == 0, 0.95,
+                      np.where(vals > 0, 0.02, 0.0)).astype(np.float32)
+        return vals, acc, pc
+
+    commits = [make_rows(q) for _ in range(n_waves)]
+    probes = [DetectRequest(rid=i, values=v, accuracy=a, p_claim=pc)
+              for i, (v, a, pc) in
+              enumerate(make_rows(4, copy_of=(i % 2 == 0) or None)
+                        for i in range(3))]
+
+    def serve_all(svc):
+        futs = [svc.submit(r) for r in probes]
+        svc.flush()
+        return [f.result() for f in futs]
+
+    dir_snap = tempfile.mkdtemp(prefix="bench-durability-snap-")
+    dir_log = tempfile.mkdtemp(prefix="bench-durability-log-")
+    try:
+        # snapshot_every lands a snapshot exactly at the last commit, so the
+        # restore measured below is snapshot-load dominated (the hot path)
+        svc = DetectionService(
+            sc.dataset, p, CFG, mode="bucketed", tile=64,
+            durability=DurabilityOptions(state_dir=dir_snap,
+                                         snapshot_every=n_waves // 2))
+        # second service: initial snapshot ONLY → restore replays every
+        # commit; same schedule, so both state dirs describe the same corpus
+        svc_log = DetectionService(
+            sc.dataset, p, CFG, mode="bucketed", tile=64,
+            durability=DurabilityOptions(state_dir=dir_log, snapshot_every=0))
+        t0 = time.perf_counter()
+        for vals, acc, pc in commits:
+            svc.commit(vals, acc, pc)
+        t_commit = time.perf_counter() - t0
+        for vals, acc, pc in commits:
+            svc_log.commit(vals, acc, pc)
+        live_resp = serve_all(svc)                    # never-restarted ref
+
+        # ---- restore (snapshot hot path) vs rebuild-from-claims ----------
+        t0 = time.perf_counter()
+        restored = DetectionService.restore(dir_snap)
+        t_restore = time.perf_counter() - t0
+        union_v = np.concatenate([sc.dataset.values] + [c[0] for c in commits])
+        union_a = np.concatenate([sc.dataset.accuracy] + [c[1] for c in commits])
+        union_p = np.concatenate([p] + [c[2] for c in commits])
+        t0 = time.perf_counter()
+        DetectionService(ClaimsDataset(values=union_v, accuracy=union_a),
+                         union_p, CFG, mode="bucketed", tile=64)
+        t_rebuild = time.perf_counter() - t0
+        speedup = t_rebuild / max(t_restore, 1e-9)
+        ri = restored.restore_info
+        emit(f"durability/S{S}/dev{n_dev}/commit_ms_per_wave",
+             round(t_commit / n_waves * 1e3, 2),
+             f"fsync=commit waves={n_waves} log_bytes="
+             f"{os.path.getsize(os.path.join(dir_log, 'commits.wal'))}")
+        emit(f"durability/S{S}/dev{n_dev}/restore_ms",
+             round(t_restore * 1e3, 2),
+             f"snapshot_epoch={ri.snapshot_epoch} "
+             f"replayed={ri.replayed_commits}")
+        emit(f"durability/S{S}/dev{n_dev}/rebuild_ms",
+             round(t_rebuild * 1e3, 2), f"speedup={speedup:.1f}x")
+        assert speedup >= 5.0, (t_restore, t_rebuild)
+        emit(f"durability/S{S}/dev{n_dev}/restore_speedup",
+             round(speedup, 1), "bar=5.0")
+
+        # ---- raw replay rate (log-only state dir) -------------------------
+        replayed = DetectionService.restore(dir_log)
+        rr = replayed.restore_info
+        assert rr.replayed_commits == n_waves, rr
+        emit(f"durability/S{S}/dev{n_dev}/replay_commits_per_s",
+             round(rr.replayed_commits / max(rr.replay_s, 1e-9), 1),
+             f"replayed={rr.replayed_commits} replay_s={rr.replay_s:.3f}")
+
+        # ---- restored decisions == never-restarted ------------------------
+        assert restored.epoch == replayed.epoch == svc.epoch
+        assert restored.stats.commits == svc.stats.commits
+        for other in (restored, replayed):
+            resp = serve_all(other)
+            for a, b in zip(live_resp, resp):
+                assert np.array_equal(a.copying, b.copying)
+                assert np.array_equal(a.intra_copying, b.intra_copying)
+        emit(f"durability/S{S}/dev{n_dev}/decisions_match_restored", 1,
+             f"epoch={restored.epoch} probes={len(probes)}")
+    finally:
+        shutil.rmtree(dir_snap, ignore_errors=True)
+        shutil.rmtree(dir_log, ignore_errors=True)
+
+
 def lm():
     """Training-substrate throughput smoke (tiny llama on CPU)."""
     import jax
@@ -808,8 +954,9 @@ def lm():
 # default order: cheapest first so partial runs still cover most tables
 TABLES = {
     "lm": lm, "fig2": fig2, "fig3": fig3, "store": store, "mutate": mutate,
-    "serve": serve, "scaling": scaling, "kernel": kernel, "table8": table8,
-    "table9": table9, "table10": table10, "table6": table6, "table7": table7,
+    "durability": durability, "serve": serve, "scaling": scaling,
+    "kernel": kernel, "table8": table8, "table9": table9, "table10": table10,
+    "table6": table6, "table7": table7,
 }
 
 

@@ -16,6 +16,9 @@ Public API:
   CorpusStore, engine_chunks, ResidentCorpus    — chunked incidence store +
                                                   resident serving buffers
                                                   (DESIGN §6)
+  DurabilityOptions, CommitLog, RestoreInfo     — commit-log persistence +
+                                                  snapshot/restore (DESIGN §8,
+                                                  OPERATIONS.md)
 
 The per-algorithm functions remain as references and compatibility wrappers;
 new code should construct a ``DetectionEngine`` with the mode it needs (or a
@@ -45,12 +48,21 @@ from repro.core.serving import (
     DetectionService,
     DetectRequest,
     DetectResponse,
+    ReplicaBroadcastError,
     ReplicaRouter,
     ResidentCorpus,
     ResultCache,
     serve_batch,
 )
 from repro.core.store import CorpusStore
+from repro.core.wal import (
+    CommitLog,
+    CommitRecord,
+    DurabilityOptions,
+    NoValidSnapshotError,
+    ReplayDivergenceError,
+    RestoreInfo,
+)
 from repro.core.truthfind import fusion_accuracy, truth_finding
 from repro.core.types import (
     ClaimsDataset,
@@ -65,7 +77,9 @@ __all__ = [
     "claim_value_keys",
     "DetectionEngine", "EngineOptions", "CorpusStore",
     "DetectRequest", "DetectResponse", "DetectionService", "ReplicaRouter",
-    "ResidentCorpus", "ResultCache", "serve_batch",
+    "ReplicaBroadcastError", "ResidentCorpus", "ResultCache", "serve_batch",
+    "DurabilityOptions", "CommitLog", "CommitRecord", "RestoreInfo",
+    "NoValidSnapshotError", "ReplayDivergenceError",
     "pairwise_detect", "build_index", "bucketize", "engine_chunks",
     "commit_rows", "rollback_commit", "compact_index", "CommitInfo",
     "index_detect_exact", "bucketed_index_detect",

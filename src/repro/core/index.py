@@ -139,6 +139,46 @@ class InvertedIndex:
             ebar_start=ebar_start, l_counts=l_counts,
             items_per_source=items_per_source)
 
+    # -- (de)serialization (durability layer, DESIGN.md §8) ------------------
+
+    def state_dict(self) -> dict:
+        """Flat ``{key: ndarray}`` dict capturing this index bit-exactly.
+
+        Wraps ``CorpusStore.state_dict`` (which carries the chunk-layout
+        version) and adds the index-level derived state — Ē boundary/mask,
+        pair counts, per-source item counts — so a restore needs no
+        recomputation and reproduces the exact base+delta layout a sequence
+        of ``commit_rows`` calls left behind (the replay-determinism
+        precondition, DESIGN.md §8).
+        """
+        d = self.store.state_dict()
+        d["index/meta"] = np.array(
+            [self.ebar_start, 0 if self.ebar_mask is None else 1], np.int64)
+        if self.ebar_mask is not None:
+            d["index/ebar_mask"] = self.ebar_mask.astype(np.uint8)
+        d["index/l_counts"] = self.l_counts
+        d["index/items_per_source"] = self.items_per_source
+        return d
+
+    @classmethod
+    def from_state_dict(cls, d: dict,
+                        row_capacity: Optional[int] = None) -> "InvertedIndex":
+        """Rebuild an index from ``state_dict`` output, bit-exact.
+
+        ``row_capacity`` re-establishes the store's row slack (serving needs
+        slack ≥ its pending-row budget to stage batches in place).
+        """
+        meta = np.asarray(d["index/meta"], np.int64)
+        ebar_mask = None
+        if int(meta[1]):
+            ebar_mask = np.asarray(d["index/ebar_mask"], np.uint8).astype(bool)
+        return cls(
+            store=CorpusStore.from_state_dict(d, capacity=row_capacity),
+            ebar_start=int(meta[0]),
+            l_counts=np.asarray(d["index/l_counts"], np.int32),
+            items_per_source=np.asarray(d["index/items_per_source"], np.int32),
+            ebar_mask=ebar_mask)
+
 
 def entry_contribution_score(
     p: float, provider_accs: np.ndarray, cfg: CopyConfig

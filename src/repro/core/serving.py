@@ -48,11 +48,24 @@ corpus epoch, and invalidates an entry exactly when a commit since its epoch
 touches a claim key the request shares (the provable-unaffected rule §7
 argues). ``ReplicaRouter`` fans submits over N service replicas and
 broadcasts commits under one lock — reads scale, writes stay serialized with
-epoch-consistent state.
+epoch-consistent state; a replica that fails mid-broadcast rolls the
+already-committed replicas back LIFO and surfaces one typed
+``ReplicaBroadcastError``.
+
+Durability (DESIGN.md §8, OPERATIONS.md): pass ``durability=
+DurabilityOptions(state_dir=...)`` and every ``commit()`` appends one
+fsync'd, checksummed record to ``core/wal.py``'s commit log before
+returning, with periodic full-state snapshots (resident corpus, committed
+index, stats, touched-key log, result-cache entries).
+``DetectionService.restore(state_dir)`` loads the newest valid snapshot,
+truncates any torn log tail, deterministically replays the log records past
+the snapshot epoch, and resumes serving with a warm cache — decisions
+bit-equal to a never-restarted service.
 """
 from __future__ import annotations
 
 import hashlib
+import os
 import threading
 import time
 import dataclasses
@@ -71,6 +84,20 @@ from repro.core.index import (
     rollback_commit,
 )
 from repro.core.types import ClaimsDataset, CopyConfig, claim_value_keys
+from repro.core.wal import (
+    LOG_NAME,
+    MANIFEST_NAME,
+    CommitLog,
+    CommitRecord,
+    DurabilityOptions,
+    ReplayDivergenceError,
+    RestoreInfo,
+    latest_valid_snapshot,
+    list_snapshots,
+    read_manifest,
+    write_manifest,
+    write_snapshot,
+)
 
 #: Engine modes that consume a prebuilt InvertedIndex — for these the service
 #: maintains ONE committed index across batches (per-batch transient commits
@@ -246,6 +273,24 @@ class ResidentCorpus:
         self.p_claim[rows] = p_claim
         self.n_corpus += q
         return self.n_corpus
+
+    def truncate_corpus(self, n_rows: int) -> None:
+        """Undo trailing ``commit_rows`` calls: corpus shrinks to ``n_rows``.
+
+        The freed rows return to staging slack, reset to the buffer's inert
+        fill (−1 / 0.5 / 0) so a later ``stage``/``commit_rows`` finds them
+        exactly as preallocation left them. LIFO counterpart of
+        ``commit_rows``, used by ``DetectionService.rollback_last_commit``.
+        """
+        n_rows = int(n_rows)
+        if n_rows > self.n_corpus:
+            raise ValueError(
+                f"truncate_corpus({n_rows}) above n_corpus={self.n_corpus}")
+        rows = slice(n_rows, self.n_corpus)
+        self.values[rows] = -1
+        self.accuracy[rows] = 0.5
+        self.p_claim[rows] = 0.0
+        self.n_corpus = n_rows
 
 
 def serve_batch(
@@ -478,6 +523,62 @@ class ResultCache:
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
 
+    def drop_after(self, epoch: int) -> int:
+        """Purge entries validated at an epoch later than ``epoch``.
+
+        ``rollback_last_commit`` unwinds the corpus to ``epoch``; entries
+        stamped later were validated (or memoized) against corpus state that
+        no longer exists, so re-admitting them would skip the invalidation
+        replay for the undone commit. Returns the number purged.
+        """
+        dead = [k for k, e in self._entries.items() if e["epoch"] > epoch]
+        for k in dead:
+            del self._entries[k]
+        return len(dead)
+
+    # -- (de)serialization (durability layer, DESIGN.md §8) ------------------
+
+    def state_dict(self) -> dict:
+        """Flat ``{key: ndarray}`` dict of every cached entry, in LRU order.
+
+        Entries ride inside the service snapshot so a restored service wakes
+        with a WARM cache: each entry keeps its digest, validation epoch and
+        claim keys, which is exactly what the lookup-time invalidation
+        replay needs to prove (or refute) that the entry survives the
+        commits replayed after the snapshot (DESIGN.md §8.3).
+        """
+        d = {"cache/meta": np.array([len(self._entries), self.max_entries],
+                                    np.int64)}
+        for i, (key, ent) in enumerate(self._entries.items()):
+            pre = f"cache/{i:05d}/"
+            d[pre + "digest"] = np.frombuffer(key, np.uint8)
+            d[pre + "epoch"] = np.array([ent["epoch"]], np.int64)
+            d[pre + "claim_keys"] = ent["claim_keys"]
+            d[pre + "copying"] = ent["copying"]
+            d[pre + "pr_independent"] = ent["pr_independent"]
+            d[pre + "c_fwd"] = ent["c_fwd"]
+            d[pre + "intra_copying"] = ent["intra_copying"]
+        return d
+
+    def load_state_dict(self, d: dict) -> None:
+        """Re-admit persisted entries (inverse of ``state_dict``)."""
+        n = int(np.asarray(d["cache/meta"])[0])
+        for i in range(n):
+            pre = f"cache/{i:05d}/"
+            key = np.asarray(d[pre + "digest"], np.uint8).tobytes()
+            self._entries[key] = {
+                "epoch": int(np.asarray(d[pre + "epoch"])[0]),
+                "claim_keys": np.asarray(d[pre + "claim_keys"], np.int64),
+                "copying": np.asarray(d[pre + "copying"], bool),
+                "pr_independent": np.asarray(d[pre + "pr_independent"],
+                                             np.float32),
+                "c_fwd": np.asarray(d[pre + "c_fwd"], np.float32),
+                "intra_copying": np.asarray(d[pre + "intra_copying"], bool),
+            }
+            self._entries.move_to_end(key)
+        while len(self._entries) > self.max_entries:
+            self._entries.popitem(last=False)
+
 
 class DetectionService:
     """Queue + worker thread that batches requests through one engine.
@@ -509,6 +610,8 @@ class DetectionService:
         result_cache: bool = True,
         cache_entries: int = 256,
         compact_threshold: float = 0.25,
+        durability: Optional[DurabilityOptions] = None,
+        _index_state: Optional[dict] = None,
         **engine_options,
     ):
         """Build the service around a fresh engine.
@@ -521,6 +624,12 @@ class DetectionService:
         cache_entries: LRU capacity of the result cache.
         compact_threshold: delta fraction above which a ``commit`` folds
           delta chunks back into the score-sorted base.
+        durability: a ``DurabilityOptions`` to make commits survive the
+          process (commit log + snapshots under its state dir, DESIGN.md
+          §8); None keeps the service in-memory only.
+        _index_state: restore-path internal — a serialized committed index
+          (``InvertedIndex.state_dict``) loaded instead of ``build_index``,
+          which is the dominant cost restore exists to skip.
         engine_options: forwarded to ``EngineOptions`` (tile, devices, ...).
         """
         if mode == "incremental":
@@ -545,11 +654,16 @@ class DetectionService:
         opt = self.engine.options
         self._index: Optional[InvertedIndex] = None
         if mode in INDEXED_MODES:
-            self._index = build_index(
-                self.base, self.base_p, cfg,
-                chunk_entries=opt.store_chunk_entries,
-                chunk_bytes=opt.store_chunk_bytes,
-                row_capacity=self.resident.n_corpus + self.max_pending_rows)
+            row_cap = self.resident.n_corpus + self.max_pending_rows
+            if _index_state is not None:
+                self._index = InvertedIndex.from_state_dict(
+                    _index_state, row_capacity=row_cap)
+            else:
+                self._index = build_index(
+                    self.base, self.base_p, cfg,
+                    chunk_entries=opt.store_chunk_entries,
+                    chunk_bytes=opt.store_chunk_bytes,
+                    row_capacity=row_cap)
         self.epoch = 0
         # the cache's exactness argument (§7.5) needs (a) considered-gated
         # decisions — pairwise scores EVERY pair, so disjoint-pair padding
@@ -558,6 +672,7 @@ class DetectionService:
         cacheable = mode in INDEXED_MODES and cfg.alpha < 0.25
         self.cache = (ResultCache(cache_entries)
                       if result_cache and cacheable else None)
+        self._result_cache_requested = bool(result_cache)
         self._touched_log: list = []     # [(epoch, touched_keys)] per commit
         self.stats = ServiceStats()
         self._pending: deque = deque()   # (request, future, t_submit)
@@ -566,6 +681,13 @@ class DetectionService:
         self._corpus_lock = threading.Lock()   # serializes batches & commits
         self._worker: Optional[threading.Thread] = None
         self._stopping = False
+        # durability state (all None/empty for an in-memory service)
+        self.durability: Optional[DurabilityOptions] = None
+        self.restore_info: Optional[RestoreInfo] = None
+        self._log: Optional[CommitLog] = None
+        self._last_commit: Optional[dict] = None   # rollback receipt
+        if durability is not None:
+            self._attach_durability(durability)
 
     # -- submission ---------------------------------------------------------
 
@@ -703,7 +825,27 @@ class DetectionService:
         Serialized against in-flight batches by ``_corpus_lock`` — reads
         keep flowing between commits, writes never interleave with a pass.
 
+        On a durable service the commit is also appended to the commit log
+        (fsync'd per ``DurabilityOptions.fsync`` — the durability point is
+        this method returning) and a full snapshot is written every
+        ``snapshot_every`` commits.
+
         Returns the ``CommitInfo`` receipt (None for index-less modes).
+        """
+        with self._corpus_lock:
+            return self._commit_locked(values, accuracy, p_claim,
+                                       compact=compact)
+
+    def _commit_locked(self, values: np.ndarray, accuracy: np.ndarray,
+                       p_claim: np.ndarray, *, compact: bool = True,
+                       log: bool = True):
+        """Apply one commit; caller holds ``_corpus_lock``.
+
+        ``log=False`` is the replay path (``restore``): the commit being
+        applied already IS a log record, so appending it again would double
+        it. Everything else — index mutation, epoch, touched-key log, stats
+        — is identical, which is what makes replay reproduce the live
+        commit bit-for-bit (DESIGN.md §8.2).
         """
         values = np.asarray(values, np.int32)
         accuracy = np.asarray(accuracy, np.float32)
@@ -713,36 +855,268 @@ class DetectionService:
                 f"commit: {values.shape[1]} items, corpus has "
                 f"{self.resident.n_items}")
         q = values.shape[0]
+        n_before = self.resident.n_corpus
+        touched = claim_value_keys(values)
+        self.resident.commit_rows(values, accuracy, p_claim)
+        # growth may have reallocated — rebind the corpus views
+        self.base = self.resident.corpus_view()
+        self.base_p = self.resident.p_claim[: self.resident.n_corpus]
+        info = None
+        if self._index is not None:
+            self._index.store.ensure_row_capacity(
+                self.resident.n_corpus + self.max_pending_rows)
+            info = commit_rows(
+                self._index, self.base, self.base_p, self.engine.cfg, q,
+                compact=compact,
+                compact_threshold=self.compact_threshold)
+            self.stats.new_entries += info.new_entries
+            self.stats.reindexed_entries += info.touched_entries
+            self.stats.delta_chunks += info.delta_chunks_added
+            self.stats.compactions += int(info.compacted)
+        self.epoch += 1
+        if self.cache is not None:
+            self._touched_log.append((self.epoch, touched))
+            # log entries no surviving cache entry predates are dead
+            # (lookups skip commits ≤ the entry's validation epoch) —
+            # prune them so a long-lived service stays O(live entries)
+            floor = self.cache.oldest_epoch(self.epoch)
+            self._touched_log = [t for t in self._touched_log
+                                 if t[0] > floor]
+        self.stats.commits += 1
+        self.stats.committed_rows += q
+        snap_path = None
+        if self._log is not None and log:
+            self._log.append(CommitRecord(
+                epoch=self.epoch, values=values, accuracy=accuracy,
+                p_claim=p_claim, touched_keys=touched, compact=compact,
+                compacted=bool(info.compacted) if info is not None else False))
+            every = self.durability.snapshot_every
+            if every and self.epoch % every == 0:
+                snap_path = self._write_snapshot_locked()
+        # rollback receipt for rollback_last_commit (LIFO, router recovery)
+        self._last_commit = {"info": info, "rows": q, "n_before": n_before,
+                             "epoch": self.epoch, "touched": touched,
+                             "logged": self._log is not None and log,
+                             "snapshot": snap_path}
+        return info
+
+    def rollback_last_commit(self) -> None:
+        """Undo the LAST ``commit()``, bit-exact (LIFO only).
+
+        The recovery half of ``ReplicaRouter.commit``'s broadcast protocol:
+        when a later replica fails mid-broadcast, each replica that already
+        applied the commit unwinds it — index (``rollback_commit``),
+        resident rows (``truncate_corpus``), epoch, touched-key log, stats,
+        cache entries stamped at the undone epoch, the commit's log record,
+        and any snapshot the commit triggered. Raises ``RuntimeError`` when
+        there is no commit to unwind (or it was already unwound).
+        """
         with self._corpus_lock:
-            touched = claim_value_keys(values)
-            self.resident.commit_rows(values, accuracy, p_claim)
-            # growth may have reallocated — rebind the corpus views
+            last = self._last_commit
+            if last is None:
+                raise RuntimeError("no commit to roll back")
+            if last["epoch"] != self.epoch:
+                raise RuntimeError(
+                    f"rollback_last_commit: last receipt is epoch "
+                    f"{last['epoch']}, service is at {self.epoch} — only the "
+                    f"immediately-preceding commit can be unwound")
+            info = last["info"]
+            if info is not None:
+                rollback_commit(self._index, info)
+                self.stats.new_entries -= info.new_entries
+                self.stats.reindexed_entries -= info.touched_entries
+                self.stats.delta_chunks -= info.delta_chunks_added
+                self.stats.compactions -= int(info.compacted)
+            self.resident.truncate_corpus(last["n_before"])
             self.base = self.resident.corpus_view()
             self.base_p = self.resident.p_claim[: self.resident.n_corpus]
-            info = None
-            if self._index is not None:
-                self._index.store.ensure_row_capacity(
-                    self.resident.n_corpus + self.max_pending_rows)
-                info = commit_rows(
-                    self._index, self.base, self.base_p, self.engine.cfg, q,
-                    compact=compact,
-                    compact_threshold=self.compact_threshold)
-                self.stats.new_entries += info.new_entries
-                self.stats.reindexed_entries += info.touched_entries
-                self.stats.delta_chunks += info.delta_chunks_added
-                self.stats.compactions += int(info.compacted)
-            self.epoch += 1
+            self.epoch -= 1
+            self._touched_log = [t for t in self._touched_log
+                                 if t[0] <= self.epoch]
             if self.cache is not None:
-                self._touched_log.append((self.epoch, touched))
-                # log entries no surviving cache entry predates are dead
-                # (lookups skip commits ≤ the entry's validation epoch) —
-                # prune them so a long-lived service stays O(live entries)
-                floor = self.cache.oldest_epoch(self.epoch)
-                self._touched_log = [t for t in self._touched_log
-                                     if t[0] > floor]
-            self.stats.commits += 1
-            self.stats.committed_rows += q
-            return info
+                # entries memoized/re-validated while the commit was live
+                # assumed its corpus — they must not survive the unwind
+                self.cache.drop_after(self.epoch)
+            self.stats.commits -= 1
+            self.stats.committed_rows -= last["rows"]
+            if last["logged"] and self._log is not None:
+                self._log.rollback_last()
+            if last["snapshot"] is not None:
+                try:
+                    os.remove(last["snapshot"])
+                except OSError:
+                    pass
+            self._last_commit = None
+
+    # -- durability (commit log + snapshots, DESIGN.md §8) -------------------
+
+    def _attach_durability(self, opts: DurabilityOptions) -> None:
+        """Wire this service to a state dir (called from ``__init__``).
+
+        Creates the dir, writes the manifest when absent (the config needed
+        to reconstruct the service at restore time), truncates any torn log
+        tail, opens the log for appending, and — when the dir holds no
+        snapshot yet — writes the initial one, so a restore never needs the
+        original corpus arrays.
+        """
+        os.makedirs(opts.state_dir, exist_ok=True)
+        self.durability = opts
+        if not os.path.exists(os.path.join(opts.state_dir, MANIFEST_NAME)):
+            write_manifest(opts.state_dir, self._manifest())
+        log_path = os.path.join(opts.state_dir, LOG_NAME)
+        CommitLog.recover(log_path)
+        self._log = CommitLog(log_path, fsync=opts.fsync)
+        if not list_snapshots(opts.state_dir):
+            with self._corpus_lock:
+                self._write_snapshot_locked()
+
+    def _manifest(self) -> dict:
+        """The JSON-serializable config a restore needs to rebuild ``self``."""
+        return {
+            "cfg": dataclasses.asdict(self.engine.cfg),
+            "service": {
+                "mode": self.engine.mode,
+                "max_batch_requests": self.max_batch_requests,
+                "max_pending_rows": self.max_pending_rows,
+                "result_cache": self._result_cache_requested,
+                "cache_entries": (self.cache.max_entries
+                                  if self.cache is not None else 256),
+                "compact_threshold": self.compact_threshold,
+            },
+            "engine_options": dataclasses.asdict(self.engine.options),
+            "durability": {
+                "snapshot_every": self.durability.snapshot_every,
+                "fsync": self.durability.fsync,
+                "retention": self.durability.retention,
+            },
+        }
+
+    def _write_snapshot_locked(self) -> str:
+        """Serialize full service state as the current epoch's snapshot.
+
+        Caller holds ``_corpus_lock``. Captures the resident corpus rows,
+        the committed index (``InvertedIndex.state_dict`` — the base+delta
+        layout exactly as commits left it), the stats counters, the
+        touched-key log, and the result-cache entries. Returns the path.
+        """
+        n = self.resident.n_corpus
+        arrays = {
+            "service/meta": np.array(
+                [self.epoch, n, int(self._index is not None),
+                 int(self.cache is not None)], np.int64),
+            "service/values": self.resident.values[:n],
+            "service/accuracy": self.resident.accuracy[:n],
+            "service/p_claim": self.resident.p_claim[:n],
+            "service/stats": np.array(
+                [getattr(self.stats, f.name)
+                 for f in dataclasses.fields(ServiceStats)], np.int64),
+            "service/touched_epochs": np.array(
+                [e for e, _ in self._touched_log], np.int64),
+            "service/touched_offsets": np.cumsum(
+                [0] + [len(k) for _, k in self._touched_log]).astype(np.int64),
+            "service/touched_keys": (
+                np.concatenate([k for _, k in self._touched_log])
+                if self._touched_log else np.zeros(0, np.int64)),
+        }
+        if self._index is not None:
+            arrays.update(self._index.state_dict())
+        if self.cache is not None:
+            arrays.update(self.cache.state_dict())
+        return write_snapshot(self.durability.state_dir, self.epoch, arrays,
+                              retention=self.durability.retention)
+
+    @classmethod
+    def restore(cls, state_dir: str, **overrides) -> "DetectionService":
+        """Resurrect a durable service from its state dir.
+
+        Reads the manifest, loads the newest snapshot that validates
+        (corrupt ones are skipped), truncates the commit log's torn tail,
+        replays the records past the snapshot epoch through the exact
+        in-memory commit path, and reopens the log for appending — the
+        returned service continues the SAME state dir. The warm cache's
+        entries keep their pre-crash epochs, so the standard lookup-time
+        invalidation replays them against whatever the log tail committed
+        (DESIGN.md §8.3). ``overrides`` patch manifest config (e.g.
+        ``devices=8`` for a different host shape — engine knobs only;
+        overriding corpus-shaping config would diverge from the log).
+
+        Raises ``NoValidSnapshotError`` when nothing loads and
+        ``ReplayDivergenceError`` when a replayed commit does not land on
+        the epoch/compaction outcome its record logged. The receipt is left
+        on ``service.restore_info``.
+        """
+        t0 = time.perf_counter()
+        manifest = read_manifest(state_dir)
+        epoch_s, snap_file, arrays, skipped = latest_valid_snapshot(state_dir)
+        t_load = time.perf_counter() - t0
+        rec = CommitLog.recover(os.path.join(state_dir, LOG_NAME))
+
+        meta = np.asarray(arrays["service/meta"], np.int64)
+        snap_epoch, n_corpus, has_index, has_cache = (int(x) for x in meta[:4])
+        base = ClaimsDataset(
+            values=np.asarray(arrays["service/values"], np.int32),
+            accuracy=np.asarray(arrays["service/accuracy"], np.float32))
+        base_p = np.asarray(arrays["service/p_claim"], np.float32)
+
+        kw = dict(manifest["service"])
+        kw.update(manifest["engine_options"])
+        dur = dict(manifest["durability"])
+        for k, v in overrides.items():
+            (dur if k in dur else kw)[k] = v
+        cfg = CopyConfig(**manifest["cfg"])
+        svc = cls(base, base_p, cfg,
+                  _index_state=arrays if has_index else None, **kw)
+
+        # snapshot-time dynamic state: epoch, stats, touched log, warm cache
+        svc.epoch = snap_epoch
+        for f, v in zip(dataclasses.fields(ServiceStats),
+                        np.asarray(arrays["service/stats"], np.int64)):
+            setattr(svc.stats, f.name, int(v))
+        epochs = np.asarray(arrays["service/touched_epochs"], np.int64)
+        offs = np.asarray(arrays["service/touched_offsets"], np.int64)
+        keys = np.asarray(arrays["service/touched_keys"], np.int64)
+        svc._touched_log = [(int(e), keys[offs[i]: offs[i + 1]])
+                            for i, e in enumerate(epochs)]
+        if has_cache and svc.cache is not None:
+            svc.cache.load_state_dict(arrays)
+
+        # replay the log tail: records past the snapshot epoch, in order,
+        # through the exact live-commit path (no re-logging)
+        t1 = time.perf_counter()
+        replayed = 0
+        records, _, _ = CommitLog.scan(os.path.join(state_dir, LOG_NAME))
+        for record in records:
+            if record.epoch <= svc.epoch:
+                continue
+            if record.epoch != svc.epoch + 1:
+                raise ReplayDivergenceError(
+                    f"log record for epoch {record.epoch} follows service "
+                    f"epoch {svc.epoch} — a record is missing")
+            with svc._corpus_lock:
+                info = svc._commit_locked(
+                    record.values, record.accuracy, record.p_claim,
+                    compact=record.compact, log=False)
+            if svc.epoch != record.epoch or (
+                    info is not None
+                    and bool(info.compacted) != record.compacted):
+                raise ReplayDivergenceError(
+                    f"replaying epoch {record.epoch} landed on epoch "
+                    f"{svc.epoch} (compacted="
+                    f"{None if info is None else info.compacted}, record "
+                    f"said {record.compacted})")
+            replayed += 1
+        t_replay = time.perf_counter() - t1
+        # the last replayed commit's rollback receipt is unusable: its log
+        # record predates this process (rollback could not unwind it there)
+        svc._last_commit = None
+
+        svc._attach_durability(DurabilityOptions(state_dir=state_dir, **dur))
+        svc.restore_info = RestoreInfo(
+            snapshot_epoch=snap_epoch, snapshot_path=snap_file,
+            replayed_commits=replayed, discarded_bytes=rec.discarded_bytes,
+            skipped_snapshots=skipped, snapshot_load_s=t_load,
+            replay_s=t_replay, wall_s=time.perf_counter() - t0)
+        return svc
 
     def flush(self) -> int:
         """Synchronously drain the queue in the caller's thread.
@@ -808,6 +1182,22 @@ class DetectionService:
         self.stop()
 
 
+class ReplicaBroadcastError(RuntimeError):
+    """A commit broadcast failed on one replica and was rolled back.
+
+    Raised by ``ReplicaRouter.commit`` after every replica that had already
+    applied the commit unwound it (``rollback_last_commit``, LIFO) — the
+    fleet is back at the pre-commit epoch, consistent. ``replica`` is the
+    index of the service that raised; ``__cause__`` carries its exception.
+    """
+
+    def __init__(self, replica: int, cause: BaseException):
+        super().__init__(
+            f"commit broadcast failed on replica {replica}: {cause!r}; "
+            f"preceding replicas rolled back")
+        self.replica = replica
+
+
 class ReplicaRouter:
     """Fan requests across N ``DetectionService`` replicas (DESIGN.md §7).
 
@@ -821,18 +1211,31 @@ class ReplicaRouter:
     equal (asserted after each broadcast — the epoch protocol §7 documents).
     A read routed to any replica therefore sees some prefix of the commit
     history, and the responses it returns are exactly the decisions of that
-    epoch's corpus — never a torn mix of two epochs.
+    epoch's corpus — never a torn mix of two epochs. A replica that raises
+    mid-broadcast triggers LIFO rollback of the replicas that already
+    applied (PR 5's ``rollback_commit`` is bit-exact), so a failed commit
+    leaves the fleet at the pre-commit epoch instead of split-brained;
+    the caller sees one ``ReplicaBroadcastError``.
     """
 
     def __init__(self, base: ClaimsDataset, base_p: np.ndarray,
                  cfg: CopyConfig, *, n_replicas: int = 2, **service_kw):
-        """Build ``n_replicas`` identical services over one corpus."""
+        """Build ``n_replicas`` identical services over one corpus.
+
+        A ``durability=DurabilityOptions(...)`` in ``service_kw`` is split
+        into per-replica ``replica-<i>/`` subdirectories of its state dir —
+        replicas must never interleave records in one commit log.
+        """
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be ≥ 1, got {n_replicas}")
-        self.replicas = [
-            DetectionService(base, base_p, cfg, **service_kw)
-            for _ in range(n_replicas)
-        ]
+        dur = service_kw.pop("durability", None)
+        self.replicas = []
+        for i in range(n_replicas):
+            kw = dict(service_kw)
+            if dur is not None:
+                kw["durability"] = dataclasses.replace(
+                    dur, state_dir=os.path.join(dur.state_dir, f"replica-{i}"))
+            self.replicas.append(DetectionService(base, base_p, cfg, **kw))
         self._rr = 0
         self._route_lock = threading.Lock()
         self._write_lock = threading.Lock()
@@ -874,13 +1277,25 @@ class ReplicaRouter:
                p_claim: np.ndarray, *, compact: bool = True) -> list:
         """Broadcast one commit to every replica, serialized (§7 protocol).
 
-        Returns the per-replica ``CommitInfo`` receipts. The post-broadcast
-        epoch check turns any divergence (a replica that saw a different
-        write order) into a hard error instead of silent split-brain.
+        Returns the per-replica ``CommitInfo`` receipts. A replica that
+        raises aborts the broadcast: the replicas that already applied are
+        rolled back in reverse order (``rollback_last_commit`` is LIFO-safe
+        and bit-exact), and ONE ``ReplicaBroadcastError`` surfaces with the
+        failing replica's index and cause — the fleet stays consistent at
+        the pre-commit epoch. The post-broadcast epoch check turns any
+        remaining divergence (a replica that saw a different write order)
+        into a hard error instead of silent split-brain.
         """
         with self._write_lock:
-            infos = [svc.commit(values, accuracy, p_claim, compact=compact)
-                     for svc in self.replicas]
+            infos = []
+            for i, svc in enumerate(self.replicas):
+                try:
+                    infos.append(
+                        svc.commit(values, accuracy, p_claim, compact=compact))
+                except Exception as exc:               # noqa: BLE001
+                    for j in range(len(infos) - 1, -1, -1):
+                        self.replicas[j].rollback_last_commit()
+                    raise ReplicaBroadcastError(i, exc) from exc
             self._epoch_locked()                       # divergence check
             return infos
 
@@ -907,6 +1322,6 @@ class ReplicaRouter:
 
 
 __all__ = ["DetectRequest", "DetectResponse", "DetectionService",
-           "ReplicaRouter", "ResidentCorpus", "ResultCache",
-           "ServiceOverloaded", "ServiceStats", "serve_batch",
-           "INDEXED_MODES"]
+           "DurabilityOptions", "ReplicaBroadcastError", "ReplicaRouter",
+           "ResidentCorpus", "ResultCache", "ServiceOverloaded",
+           "ServiceStats", "serve_batch", "INDEXED_MODES"]

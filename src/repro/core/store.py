@@ -46,6 +46,11 @@ import numpy as np
 #: (512 = default block_e) and of the pair-tile edge alignment (8).
 DEFAULT_CHUNK_ENTRIES = 512
 
+#: Chunk-layout version for serialized stores (``state_dict``). Bump when
+#: the on-disk key set or the chunk addressing scheme changes; loaders
+#: reject state dicts from a newer version (DESIGN.md §8, OPERATIONS.md).
+STORE_LAYOUT_VERSION = 1
+
 
 def align_chunk(width: int) -> int:
     """Round a requested chunk width up to the kernel tile-edge multiple (8)."""
@@ -468,6 +473,66 @@ class CorpusStore:
             capacity=self.capacity, delta_start=self.delta_start,
             epoch=self.epoch)
 
+    # -- (de)serialization (durability layer, DESIGN.md §8) ------------------
+
+    def state_dict(self, prefix: str = "store/") -> dict:
+        """Flat ``{key: ndarray}`` dict capturing this store bit-exactly.
+
+        Keys are ``prefix``-namespaced so the dict can nest inside a larger
+        snapshot payload (``InvertedIndex.state_dict`` does). Chunks are
+        stored trimmed to the live rows — slack capacity is a runtime
+        concern the loader re-chooses — and the layout version rides along
+        so future chunk-scheme changes stay detectable. Row-slack state
+        (staged-but-uncommitted rows) is deliberately NOT captured: the
+        durability contract persists committed state only.
+        """
+        d = {
+            prefix + "meta": np.array(
+                [STORE_LAYOUT_VERSION, self.chunk_entries, self.n_rows,
+                 -1 if self.delta_start is None else self.delta_start,
+                 self.epoch, self.n_chunks], np.int64),
+            prefix + "entry_item": self.entry_item,
+            prefix + "entry_value": self.entry_value,
+            prefix + "entry_p": self.entry_p,
+            prefix + "entry_score": self.entry_score,
+        }
+        for c, blk in enumerate(self.chunks):
+            d[f"{prefix}chunk_{c:05d}"] = blk[: self.n_rows]
+        return d
+
+    @classmethod
+    def from_state_dict(cls, d: dict, prefix: str = "store/",
+                        capacity: Optional[int] = None) -> "CorpusStore":
+        """Rebuild a store from ``state_dict`` output, bit-exact.
+
+        ``capacity`` re-establishes row slack (≥ the stored ``n_rows``;
+        defaults to no slack). Raises ``ValueError`` on a layout version
+        newer than this reader.
+        """
+        meta = np.asarray(d[prefix + "meta"], np.int64)
+        version, chunk_entries, n_rows, delta_start, epoch, n_chunks = (
+            int(x) for x in meta[:6])
+        if version > STORE_LAYOUT_VERSION:
+            raise ValueError(
+                f"store layout version {version} is newer than this reader "
+                f"({STORE_LAYOUT_VERSION})")
+        cap = n_rows if capacity is None else max(int(capacity), n_rows)
+        chunks = []
+        for c in range(n_chunks):
+            src = np.asarray(d[f"{prefix}chunk_{c:05d}"], np.int8)
+            blk = np.zeros((cap, src.shape[1]), np.int8)
+            blk[:n_rows] = src
+            chunks.append(blk)
+        return cls(
+            chunks=chunks,
+            entry_item=np.asarray(d[prefix + "entry_item"], np.int32),
+            entry_value=np.asarray(d[prefix + "entry_value"], np.int32),
+            entry_p=np.asarray(d[prefix + "entry_p"], np.float32),
+            entry_score=np.asarray(d[prefix + "entry_score"], np.float32),
+            chunk_entries=chunk_entries, n_rows=n_rows, capacity=cap,
+            delta_start=None if delta_start < 0 else delta_start,
+            epoch=epoch)
+
     # -- constructors -------------------------------------------------------
 
     @classmethod
@@ -572,4 +637,4 @@ class StoreSnapshot:
 
 
 __all__ = ["CorpusStore", "ChunkView", "StoreSnapshot",
-           "DEFAULT_CHUNK_ENTRIES", "align_chunk"]
+           "DEFAULT_CHUNK_ENTRIES", "STORE_LAYOUT_VERSION", "align_chunk"]

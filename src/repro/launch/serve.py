@@ -27,6 +27,15 @@
       cache — then ServiceStats (cache hit rate, delta-chunk count,
       re-index/compaction counters) are printed. --replicas N serves through
       a ReplicaRouter with epoch-consistent commit broadcast.
+
+      --state-dir makes the service durable (DESIGN.md §8, OPERATIONS.md):
+      commits append to a fsync'd commit log and full snapshots land every
+      --snapshot-every commits. When the directory already holds a manifest
+      the service is RESTORED from it — latest valid snapshot + log-tail
+      replay — instead of built from the synthetic corpus, and the restore
+      receipt (snapshot epoch, replayed commits, discarded torn-tail bytes)
+      is printed. With --replicas each replica persists under its own
+      replica-<i>/ subdirectory.
 """
 from __future__ import annotations
 
@@ -65,9 +74,11 @@ def serve_lm(args):
 
 
 def serve_detect(args):
+    import os
+
     import jax
     import numpy as np
-    from repro.core import CopyConfig
+    from repro.core import CopyConfig, DurabilityOptions
     from repro.core.serving import DetectRequest, DetectionService, ReplicaRouter
     from repro.data.claims import (
         SyntheticSpec,
@@ -96,7 +107,21 @@ def serve_detect(args):
         max_batch_requests=args.batch_requests,
         max_pending_rows=args.max_pending_rows,
         tile=args.tile, devices=args.devices)
-    if args.replicas > 1:
+    if args.state_dir:
+        service_kw["durability"] = DurabilityOptions(
+            state_dir=args.state_dir, snapshot_every=args.snapshot_every)
+    restorable = args.state_dir and args.replicas <= 1 and os.path.exists(
+        os.path.join(args.state_dir, "manifest.json"))
+    if restorable:
+        svc = DetectionService.restore(args.state_dir,
+                                       devices=args.devices)
+        ri = svc.restore_info
+        print(f"[serve] restored {args.state_dir}: snapshot epoch "
+              f"{ri.snapshot_epoch} + {ri.replayed_commits} replayed "
+              f"commits in {ri.wall_s:.2f}s "
+              f"({ri.discarded_bytes} torn-tail bytes discarded); "
+              f"corpus {svc.resident.n_corpus} sources at epoch {svc.epoch}")
+    elif args.replicas > 1:
         svc = ReplicaRouter(sc.dataset, p, cfg, n_replicas=args.replicas,
                             **service_kw)
     else:
@@ -214,6 +239,12 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through a ReplicaRouter with this many "
                          "DetectionService replicas (commits broadcast)")
+    ap.add_argument("--state-dir", default=None,
+                    help="durable state directory (commit log + snapshots); "
+                         "restored from when it already holds a manifest")
+    ap.add_argument("--snapshot-every", type=int, default=16,
+                    help="write a full snapshot every N commits "
+                         "(0 = only the initial snapshot)")
     args = ap.parse_args()
     if args.task == "detect":
         serve_detect(args)

@@ -1,0 +1,517 @@
+"""ISSUE 6: durability layer — commit log, snapshots, kill/restart restore,
+rollback, and the ReplicaRouter broadcast-recovery regression.
+
+The kill/restart contract under test (DESIGN.md §8): a durable
+``DetectionService`` dropped at ANY point — between commits, mid-log-write
+(torn tail), mid-snapshot-write — restores to a service whose decisions,
+epochs, and committed state are bit-equal to a twin that never died. Torn
+tails are modelled by truncating/corrupting the on-disk files directly
+(a SIGKILL can only ever produce a prefix of the bytes the service wrote,
+plus possibly garbage in the torn record — both are covered).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    CommitLog,
+    CommitRecord,
+    CopyConfig,
+    DetectionService,
+    DurabilityOptions,
+    NoValidSnapshotError,
+    ReplicaBroadcastError,
+    ReplicaRouter,
+    build_index,
+)
+from repro.core.index import InvertedIndex
+from repro.core.serving import DetectRequest
+from repro.core.store import CorpusStore
+from repro.core.types import ClaimsDataset, claim_value_keys
+from repro.core.wal import (
+    WalError,
+    latest_valid_snapshot,
+    list_snapshots,
+    load_snapshot,
+    write_snapshot,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+def _world(seed=0, n_src=40, n_items=160):
+    rng = np.random.default_rng(seed)
+    values = np.where(rng.random((n_src, n_items)) < 0.45,
+                      rng.integers(0, 4, (n_src, n_items)), -1).astype(np.int32)
+    ds = ClaimsDataset(values=values,
+                       accuracy=rng.uniform(0.3, 0.95, n_src).astype(np.float32))
+    p = np.where(values == 0, 0.9,
+                 np.where(values >= 0, 0.05, 0.0)).astype(np.float32)
+    return ds, p
+
+
+def _rows(seed, q, n_items=160):
+    rng = np.random.default_rng(seed)
+    vals = np.where(rng.random((q, n_items)) < 0.3,
+                    rng.integers(0, 4, (q, n_items)), -1).astype(np.int32)
+    acc = rng.uniform(0.3, 0.95, q).astype(np.float32)
+    pq = np.where(vals == 0, 0.9,
+                  np.where(vals >= 0, 0.05, 0.0)).astype(np.float32)
+    return vals, acc, pq
+
+
+def _request(seed, q=3, n_items=160, rid=0):
+    vals, acc, pq = _rows(seed, q, n_items)
+    return DetectRequest(rid=rid, values=vals, accuracy=acc, p_claim=pq)
+
+
+def _svc(ds, p, tmp_path=None, **kw):
+    dur = None
+    if tmp_path is not None:
+        dur = DurabilityOptions(state_dir=str(tmp_path),
+                                **kw.pop("dur_kw", {}))
+    return DetectionService(ds, p, CFG, mode="bucketed", tile=64,
+                            durability=dur, **kw)
+
+
+def _serve(svc, req):
+    fut = svc.submit(req)
+    svc.flush()
+    return fut.result()
+
+
+# ---------------------------------------------------------------------------
+# commit log units
+# ---------------------------------------------------------------------------
+
+def _record(seed, epoch, q=3):
+    vals, acc, pq = _rows(seed, q)
+    return CommitRecord(epoch=epoch, values=vals, accuracy=acc, p_claim=pq,
+                        touched_keys=claim_value_keys(vals),
+                        compact=bool(epoch % 2), compacted=False)
+
+
+def test_log_roundtrip(tmp_path):
+    path = str(tmp_path / "commits.wal")
+    log = CommitLog(path)
+    recs = [_record(s, e) for s, e in ((1, 1), (2, 2), (3, 3))]
+    for r in recs:
+        log.append(r)
+    log.close()
+    back = list(CommitLog.read(path))
+    assert [r.epoch for r in back] == [1, 2, 3]
+    for a, b in zip(recs, back):
+        np.testing.assert_array_equal(a.values, b.values)
+        np.testing.assert_array_equal(a.accuracy, b.accuracy)
+        np.testing.assert_array_equal(a.p_claim, b.p_claim)
+        np.testing.assert_array_equal(a.touched_keys, b.touched_keys)
+        assert a.compact == b.compact and a.compacted == b.compacted
+
+
+@pytest.mark.parametrize("damage", ["truncate_header", "truncate_payload",
+                                    "garbage", "crc_flip"])
+def test_log_torn_tail_recovery(tmp_path, damage):
+    """Any mid-write drop of the LAST record truncates back to the valid
+    prefix; the earlier records survive untouched."""
+    path = str(tmp_path / "commits.wal")
+    log = CommitLog(path)
+    for s, e in ((1, 1), (2, 2)):
+        log.append(_record(s, e))
+    clean = os.path.getsize(path)
+    log.append(_record(3, 3))
+    log.close()
+    full = os.path.getsize(path)
+    with open(path, "rb+") as f:
+        if damage == "truncate_header":
+            f.truncate(clean + 7)            # mid third-record header
+        elif damage == "truncate_payload":
+            f.truncate(full - 5)             # payload cut short
+        elif damage == "garbage":
+            f.truncate(clean)
+            f.seek(clean)
+            f.write(b"\x00garbage that is not a record header")
+        elif damage == "crc_flip":
+            f.seek(clean + 20)               # inside the third payload
+            byte = f.read(1)
+            f.seek(clean + 20)
+            f.write(bytes([byte[0] ^ 0xFF]))
+    info = CommitLog.recover(path)
+    assert info.records == 2
+    assert info.discarded_bytes > 0
+    assert os.path.getsize(path) == clean
+    assert [r.epoch for r in CommitLog.read(path)] == [1, 2]
+    # idempotent on the now-clean log
+    again = CommitLog.recover(path)
+    assert again.discarded_bytes == 0 and again.records == 2
+
+
+def test_log_rollback_last(tmp_path):
+    path = str(tmp_path / "commits.wal")
+    log = CommitLog(path)
+    log.append(_record(1, 1))
+    size1 = os.path.getsize(path)
+    log.append(_record(2, 2))
+    log.rollback_last()
+    assert os.path.getsize(path) == size1
+    assert [r.epoch for r in CommitLog.read(path)] == [1]
+    with pytest.raises(WalError):
+        log.rollback_last()                  # only the LAST append unwinds
+    log.append(_record(3, 2))                # appending again still works
+    assert [r.epoch for r in CommitLog.read(path)] == [1, 2]
+    log.close()
+
+
+# ---------------------------------------------------------------------------
+# snapshot container
+# ---------------------------------------------------------------------------
+
+def test_snapshot_roundtrip_and_retention(tmp_path):
+    sd = str(tmp_path)
+    arrays = {"a": np.arange(12, dtype=np.int64).reshape(3, 4),
+              "b": np.float32([1.5, -2.0])}
+    for epoch in (1, 2, 3):
+        write_snapshot(sd, epoch, arrays, retention=2)
+    assert [e for e, _ in list_snapshots(sd)] == [2, 3]   # retention pruned
+    epoch, path, back, skipped = latest_valid_snapshot(sd)
+    assert epoch == 3 and skipped == 0
+    np.testing.assert_array_equal(back["a"], arrays["a"])
+    np.testing.assert_array_equal(back["b"], arrays["b"])
+
+
+def test_snapshot_corruption_falls_back(tmp_path):
+    sd = str(tmp_path)
+    write_snapshot(sd, 1, {"a": np.arange(4)})
+    p2 = write_snapshot(sd, 2, {"a": np.arange(8)})
+    with open(p2, "rb+") as f:
+        f.truncate(os.path.getsize(p2) - 3)  # torn mid-snapshot-write
+    with pytest.raises(WalError):
+        load_snapshot(p2)
+    epoch, _, back, skipped = latest_valid_snapshot(sd)
+    assert epoch == 1 and skipped == 1
+    assert len(back["a"]) == 4
+    os.remove(p2)
+    os.remove(list_snapshots(sd)[0][1])
+    with pytest.raises(NoValidSnapshotError):
+        latest_valid_snapshot(sd)
+
+
+# ---------------------------------------------------------------------------
+# store / index state_dict
+# ---------------------------------------------------------------------------
+
+def test_store_index_state_roundtrip():
+    """A committed index (deltas + Ē mask) survives (de)serialization
+    bit-exact, including after further commits on the restored copy."""
+    from repro.core import commit_rows
+    ds, p = _world(3)
+    idx = build_index(ds, p, CFG, chunk_entries=48,
+                      row_capacity=ds.n_sources + 8)
+    vals, acc, pq = _rows(11, 4)
+    union = ClaimsDataset(values=np.concatenate([ds.values, vals]),
+                          accuracy=np.concatenate([ds.accuracy, acc]))
+    union_p = np.concatenate([p, pq])
+    commit_rows(idx, union, union_p, CFG, 4, compact=False)
+    assert idx.store.n_delta_chunks > 0 and idx.ebar_mask is not None
+
+    back = InvertedIndex.from_state_dict(idx.state_dict(),
+                                         row_capacity=union.n_sources + 8)
+    np.testing.assert_array_equal(back.store.to_dense(), idx.store.to_dense())
+    np.testing.assert_array_equal(back.store.entry_item, idx.store.entry_item)
+    np.testing.assert_array_equal(back.store.entry_score, idx.store.entry_score)
+    np.testing.assert_array_equal(back.l_counts, idx.l_counts)
+    np.testing.assert_array_equal(back.items_per_source, idx.items_per_source)
+    np.testing.assert_array_equal(back.ebar_mask, idx.ebar_mask)
+    assert back.store.chunk_entries == idx.store.chunk_entries
+    assert back.store.delta_start == idx.store.delta_start
+    assert back.store.n_rows == idx.store.n_rows
+
+    # both copies take the SAME next commit to the same state
+    vals2, acc2, pq2 = _rows(12, 3)
+    union2 = ClaimsDataset(values=np.concatenate([union.values, vals2]),
+                           accuracy=np.concatenate([union.accuracy, acc2]))
+    union2_p = np.concatenate([union_p, pq2])
+    i1 = commit_rows(idx, union2, union2_p, CFG, 3, compact=False)
+    i2 = commit_rows(back, union2, union2_p, CFG, 3, compact=False)
+    assert i1.new_entries == i2.new_entries
+    np.testing.assert_array_equal(back.store.to_dense(), idx.store.to_dense())
+    np.testing.assert_array_equal(back.nonebar_mask, idx.nonebar_mask)
+
+
+def test_store_state_version_gate():
+    ds, p = _world(1)
+    store = build_index(ds, p, CFG).store
+    d = store.state_dict()
+    d = dict(d)
+    meta = d["store/meta"].copy()
+    meta[0] = 99                              # a future layout version
+    d["store/meta"] = meta
+    with pytest.raises(ValueError, match="newer"):
+        CorpusStore.from_state_dict(d)
+
+
+# ---------------------------------------------------------------------------
+# kill/restart: restored service == never-restarted twin
+# ---------------------------------------------------------------------------
+
+def _twins(tmp_path, seed=0, **dur_kw):
+    """A durable service and its in-memory twin over the same corpus."""
+    ds, p = _world(seed)
+    durable = _svc(ds, p, tmp_path, dur_kw=dur_kw)
+    twin = _svc(ds, p)
+    return durable, twin
+
+
+def _lockstep(durable, twin, schedule):
+    """Apply the same commit/serve schedule to both services."""
+    out = []
+    for kind, seed in schedule:
+        if kind == "commit":
+            durable.commit(*_rows(seed, 3))
+            twin.commit(*_rows(seed, 3))
+        else:
+            out.append((_serve(durable, _request(seed)),
+                        _serve(twin, _request(seed))))
+    return out
+
+
+SCHEDULE = [("commit", 1), ("serve", 21), ("commit", 2), ("serve", 22),
+            ("serve", 21), ("commit", 3), ("serve", 23)]
+
+
+def test_restore_equals_never_restarted(tmp_path):
+    durable, twin = _twins(tmp_path, snapshot_every=2)
+    for a, b in _lockstep(durable, twin, SCHEDULE):
+        np.testing.assert_array_equal(a.copying, b.copying)
+    # "kill": drop the object, restore from disk only
+    del durable
+    restored = DetectionService.restore(str(tmp_path))
+    assert restored.epoch == twin.epoch
+    assert restored.stats.commits == twin.stats.commits
+    assert restored.stats.committed_rows == twin.stats.committed_rows
+    assert restored.resident.n_corpus == twin.resident.n_corpus
+    np.testing.assert_array_equal(restored._index.store.to_dense(),
+                                  twin._index.store.to_dense())
+    for seed in (21, 22, 23, 31):
+        a = _serve(restored, _request(seed))
+        b = _serve(twin, _request(seed))
+        np.testing.assert_array_equal(a.copying, b.copying)
+        np.testing.assert_array_equal(a.pr_independent, b.pr_independent)
+        np.testing.assert_array_equal(a.intra_copying, b.intra_copying)
+    # both continue with further commits in lockstep
+    restored.commit(*_rows(4, 2))
+    twin.commit(*_rows(4, 2))
+    assert restored.epoch == twin.epoch
+    a = _serve(restored, _request(40))
+    b = _serve(twin, _request(40))
+    np.testing.assert_array_equal(a.copying, b.copying)
+
+
+def _rows_in_items(seed, q, lo, hi, n_items=160):
+    """Rows whose claims live only on items [lo, hi) — disjoint item ranges
+    have disjoint claim keys, so such commits can't invalidate each other's
+    cache entries."""
+    vals, acc, pq = _rows(seed, q, n_items)
+    vals = vals.copy()
+    pq = pq.copy()
+    vals[:, :lo] = -1
+    vals[:, hi:] = -1
+    pq[vals < 0] = 0.0
+    return vals, acc, pq
+
+
+def test_restore_serves_warm_cache(tmp_path):
+    """A request served before the snapshot is a cache HIT after restore
+    when no replayed commit touches its claims."""
+    ds, p = _world(5)
+    svc = _svc(ds, p, tmp_path, dur_kw={"snapshot_every": 1})
+    cold = _rows_in_items(50, 3, 0, 80)       # claims the commit won't touch
+    hot = _rows_in_items(51, 2, 120, 160)     # claims the commit WILL touch
+    first = _serve(svc, DetectRequest(rid=0, values=cold[0],
+                                      accuracy=cold[1], p_claim=cold[2]))
+    assert not first.cache_hit
+    _serve(svc, DetectRequest(rid=1, values=hot[0],
+                              accuracy=hot[1], p_claim=hot[2]))
+    svc.commit(*_rows_in_items(6, 2, 120, 160))
+    del svc
+    restored = DetectionService.restore(str(tmp_path))
+    again = _serve(restored, DetectRequest(rid=2, values=cold[0],
+                                           accuracy=cold[1], p_claim=cold[2]))
+    assert again.cache_hit                    # untouched claims stay warm
+    s0 = first.copying.shape[1]
+    np.testing.assert_array_equal(first.copying, again.copying[:, :s0])
+    assert not again.copying[:, s0:].any()    # padded cols: no shared keys
+    miss = _serve(restored, DetectRequest(rid=3, values=hot[0],
+                                          accuracy=hot[1], p_claim=hot[2]))
+    assert not miss.cache_hit                 # the commit invalidated these
+
+
+def test_restore_replays_log_tail(tmp_path):
+    """Commits after the last snapshot come back via log replay alone."""
+    durable, twin = _twins(tmp_path, seed=2, snapshot_every=0)
+    for seed in (1, 2, 3):
+        durable.commit(*_rows(seed, 3))
+        twin.commit(*_rows(seed, 3))
+    del durable
+    restored = DetectionService.restore(str(tmp_path))
+    assert restored.restore_info.snapshot_epoch == 0
+    assert restored.restore_info.replayed_commits == 3
+    assert restored.epoch == twin.epoch == 3
+    np.testing.assert_array_equal(restored._index.store.to_dense(),
+                                  twin._index.store.to_dense())
+    a = _serve(restored, _request(60))
+    b = _serve(twin, _request(60))
+    np.testing.assert_array_equal(a.copying, b.copying)
+
+
+def test_restore_discards_torn_tail(tmp_path):
+    """A SIGKILL mid-log-write loses exactly the torn commit: restore equals
+    a twin that never applied it."""
+    ds, p = _world(7)
+    durable = _svc(ds, p, tmp_path, dur_kw={"snapshot_every": 0})
+    twin = _svc(ds, p)
+    durable.commit(*_rows(1, 3))
+    twin.commit(*_rows(1, 3))
+    durable.commit(*_rows(2, 3))             # this commit's record gets torn
+    log = str(tmp_path / "commits.wal")
+    with open(log, "rb+") as f:
+        f.truncate(os.path.getsize(log) - 9)
+    restored = DetectionService.restore(str(tmp_path))
+    assert restored.restore_info.discarded_bytes > 0
+    assert restored.epoch == twin.epoch == 1
+    np.testing.assert_array_equal(restored._index.store.to_dense(),
+                                  twin._index.store.to_dense())
+    a = _serve(restored, _request(61))
+    b = _serve(twin, _request(61))
+    np.testing.assert_array_equal(a.copying, b.copying)
+
+
+def test_restore_skips_corrupt_newest_snapshot(tmp_path):
+    """Bit-rot in the newest snapshot falls back to the previous one and
+    replays the longer log tail to the same state."""
+    durable, twin = _twins(tmp_path, seed=4, snapshot_every=1, retention=4)
+    for seed in (1, 2, 3):
+        durable.commit(*_rows(seed, 3))
+        twin.commit(*_rows(seed, 3))
+    del durable
+    snaps = list_snapshots(str(tmp_path))
+    assert [e for e, _ in snaps] == [0, 1, 2, 3]
+    with open(snaps[-1][1], "rb+") as f:      # corrupt the epoch-3 snapshot
+        f.seek(30)
+        f.write(b"\xde\xad\xbe\xef")
+    restored = DetectionService.restore(str(tmp_path))
+    assert restored.restore_info.skipped_snapshots == 1
+    assert restored.restore_info.snapshot_epoch == 2
+    assert restored.restore_info.replayed_commits == 1
+    assert restored.epoch == twin.epoch == 3
+    np.testing.assert_array_equal(restored._index.store.to_dense(),
+                                  twin._index.store.to_dense())
+
+
+def test_restore_nonindexed_mode(tmp_path):
+    """Durability works for modes without a committed index (no index in
+    the snapshot; replay recommits rows only)."""
+    ds, p = _world(6)
+    dur = DurabilityOptions(state_dir=str(tmp_path), snapshot_every=2)
+    svc = DetectionService(ds, p, CFG, mode="sample_verify", tile=64,
+                           sample_rate=0.3, sample_seed=1, durability=dur)
+    twin = DetectionService(ds, p, CFG, mode="sample_verify", tile=64,
+                            sample_rate=0.3, sample_seed=1)
+    for seed in (1, 2, 3):
+        svc.commit(*_rows(seed, 3))
+        twin.commit(*_rows(seed, 3))
+    del svc
+    restored = DetectionService.restore(str(tmp_path))
+    assert restored.epoch == twin.epoch == 3
+    assert restored._index is None
+    a = _serve(restored, _request(70))
+    b = _serve(twin, _request(70))
+    np.testing.assert_array_equal(a.copying, b.copying)
+
+
+# ---------------------------------------------------------------------------
+# rollback_last_commit + router broadcast recovery
+# ---------------------------------------------------------------------------
+
+def test_rollback_last_commit_bit_exact(tmp_path):
+    ds, p = _world(8)
+    svc = _svc(ds, p, tmp_path, dur_kw={"snapshot_every": 0})
+    ref = _svc(ds, p)
+    svc.commit(*_rows(1, 3))
+    ref.commit(*_rows(1, 3))
+    log = str(tmp_path / "commits.wal")
+    size1 = os.path.getsize(log)
+    _serve(svc, _request(80))                 # memoized at epoch 1
+    svc.commit(*_rows(2, 4))
+    svc.rollback_last_commit()
+    assert svc.epoch == ref.epoch == 1
+    assert svc.resident.n_corpus == ref.resident.n_corpus
+    assert svc.stats.commits == ref.stats.commits == 1
+    np.testing.assert_array_equal(svc._index.store.to_dense(),
+                                  ref._index.store.to_dense())
+    np.testing.assert_array_equal(svc._index.l_counts, ref._index.l_counts)
+    assert os.path.getsize(log) == size1      # the record is gone too
+    with pytest.raises(RuntimeError):
+        svc.rollback_last_commit()            # LIFO: only once
+    a = _serve(svc, _request(81))
+    b = _serve(ref, _request(81))
+    np.testing.assert_array_equal(a.copying, b.copying)
+    # and a restore of the rolled-back state dir agrees
+    restored = DetectionService.restore(str(tmp_path))
+    assert restored.epoch == 1
+
+
+def test_router_broadcast_failure_rolls_back(tmp_path):
+    """Regression (ISSUE 6 satellite): one replica raising mid-broadcast
+    must not leave the fleet split-brained."""
+    ds, p = _world(9)
+    router = ReplicaRouter(ds, p, CFG, n_replicas=3, mode="bucketed",
+                           tile=64)
+    ref = _svc(ds, p)
+    router.commit(*_rows(1, 3))
+    ref.commit(*_rows(1, 3))
+
+    calls = {"n": 0}
+    orig = DetectionService.commit
+
+    def failing(self, *a, **kw):
+        calls["n"] += 1
+        if self is router.replicas[2]:
+            raise RuntimeError("replica 2 lost its disk")
+        return orig(self, *a, **kw)
+
+    router.replicas[2].commit = failing.__get__(router.replicas[2])
+    router.replicas[0].commit = failing.__get__(router.replicas[0])
+    router.replicas[1].commit = failing.__get__(router.replicas[1])
+    with pytest.raises(ReplicaBroadcastError) as ei:
+        router.commit(*_rows(2, 4))
+    assert ei.value.replica == 2
+    assert calls["n"] == 3                     # replicas 0, 1 applied first
+    assert router.epoch == ref.epoch == 1      # rolled back, consistent
+    for svc in router.replicas:
+        assert svc.resident.n_corpus == ref.resident.n_corpus
+        np.testing.assert_array_equal(svc._index.store.to_dense(),
+                                      ref._index.store.to_dense())
+    # the fleet keeps working after recovery
+    for svc in router.replicas:
+        svc.commit = orig.__get__(svc)
+    router.commit(*_rows(3, 2))
+    ref.commit(*_rows(3, 2))
+    assert router.epoch == ref.epoch == 2
+    a = _serve(router.replicas[2], _request(90))
+    b = _serve(ref, _request(90))
+    np.testing.assert_array_equal(a.copying, b.copying)
+
+
+def test_router_per_replica_state_dirs(tmp_path):
+    ds, p = _world(10)
+    dur = DurabilityOptions(state_dir=str(tmp_path), snapshot_every=1)
+    router = ReplicaRouter(ds, p, CFG, n_replicas=2, mode="bucketed",
+                           tile=64, durability=dur)
+    router.commit(*_rows(1, 3))
+    for i in range(2):
+        sub = tmp_path / f"replica-{i}"
+        assert (sub / "manifest.json").exists()
+        assert (sub / "commits.wal").exists()
+        restored = DetectionService.restore(str(sub))
+        assert restored.epoch == 1

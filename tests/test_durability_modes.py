@@ -1,0 +1,148 @@
+"""ISSUE 6 acceptance: a durable ``DetectionService`` killed mid-log-write
+and restored serves IDENTICAL decisions to the never-restarted service —
+every engine mode, S ∈ {64, 512}, tiled modes at 1 and 8 devices.
+
+Mirrors tests/test_mutation_modes.py: one subprocess with 8 virtual
+devices. Per corpus size the script runs commit/serve waves against a
+durable service, appends torn-tail garbage to its commit log (the on-disk
+image a SIGKILL mid-append leaves), restores, then pins every mode's
+decisions over the restored corpus + committed index to the live service's
+— plus the served probe responses and the corpus epochs themselves.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import shutil
+    import tempfile
+    import numpy as np
+    from repro.core import CopyConfig, DetectionEngine, DurabilityOptions
+    from repro.core.serving import DetectRequest, DetectionService
+    from repro.core.types import ClaimsDataset
+    from repro.data.claims import (
+        SyntheticSpec, oracle_claim_probs, synthetic_claims,
+        synthetic_query_rows)
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+    INDEXED = ("exact", "bound", "bound+", "hybrid", "bucketed", "incremental")
+
+    def decisions(mode, svc, devices):
+        # detect over THIS service's live state: its resident corpus claims
+        # and (for index-backed modes) its committed index
+        n = svc.resident.n_corpus
+        union = ClaimsDataset(values=svc.resident.values[:n].copy(),
+                              accuracy=svc.resident.accuracy[:n].copy())
+        union_p = svc.resident.p_claim[:n].copy()
+        eng = DetectionEngine(cfg, mode=mode, tile=64, devices=devices,
+                              sample_rate=0.2, sample_seed=1)
+        idx = svc._index if mode in INDEXED else None
+        return eng.detect(union, union_p, index=idx).copying
+
+    def serve(svc, rid, vals, acc, pq):
+        fut = svc.submit(DetectRequest(rid=rid, values=vals, accuracy=acc,
+                                       p_claim=pq))
+        svc.flush()
+        return fut.result()
+
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        vals, acc, pq, _ = synthetic_query_rows(sc, 18, seed=3)
+        state_dir = tempfile.mkdtemp(prefix=f"dur{S}-")
+        try:
+            live = DetectionService(
+                sc.dataset, p, cfg, mode="bucketed", tile=64,
+                durability=DurabilityOptions(state_dir=state_dir,
+                                             snapshot_every=2))
+            # commit/serve wave mix: two commits straddling a snapshot
+            # (snapshot_every=2 -> snapshot at epoch 2), probes between
+            live.commit(vals[:6], acc[:6], pq[:6])
+            serve(live, 0, vals[12:], acc[12:], pq[12:])
+            live.commit(vals[6:12], acc[6:12], pq[6:12])
+            probe_live = serve(live, 1, vals[12:], acc[12:], pq[12:])
+
+            # SIGKILL-equivalent drop mid-log-write: the next record's bytes
+            # stop partway through — model the torn on-disk image directly
+            with open(os.path.join(state_dir, "commits.wal"), "ab") as f:
+                f.write(b"\\x13torn tail: not a valid record frame")
+
+            restored = DetectionService.restore(state_dir)
+            ri = restored.restore_info
+            probe_rest = serve(restored, 2, vals[12:], acc[12:], pq[12:])
+
+            for mode in ("pairwise", "exact", "bound", "bound+", "hybrid",
+                         "incremental", "sampled", "sample_verify",
+                         "bucketed"):
+                dev_counts = (1, 8) if mode in ("bucketed", "sampled",
+                                                "sample_verify") else (1,)
+                for n_dev in dev_counts:
+                    a = decisions(mode, live, n_dev)
+                    b = decisions(mode, restored, n_dev)
+                    out[f"S{S}/{mode}/dev{n_dev}"] = {
+                        "equal": bool(np.array_equal(a, b)),
+                        "copying_bits": int(a.sum())}
+            out[f"S{S}/service"] = {
+                "epoch_equal": restored.epoch == live.epoch,
+                "epoch": int(live.epoch),
+                "commits_equal":
+                    restored.stats.commits == live.stats.commits,
+                "rows_equal": restored.stats.committed_rows
+                    == live.stats.committed_rows,
+                "corpus_equal": bool(
+                    restored.resident.n_corpus == live.resident.n_corpus
+                    and np.array_equal(
+                        restored.resident.values[:live.resident.n_corpus],
+                        live.resident.values[:live.resident.n_corpus])),
+                "index_equal": bool(np.array_equal(
+                    restored._index.store.to_dense(),
+                    live._index.store.to_dense())),
+                "probe_equal": bool(
+                    np.array_equal(probe_rest.copying, probe_live.copying)
+                    and np.array_equal(probe_rest.intra_copying,
+                                       probe_live.intra_copying)
+                    and np.allclose(probe_rest.pr_independent,
+                                    probe_live.pr_independent)),
+                "torn_bytes": int(ri.discarded_bytes),
+                "replayed": int(ri.replayed_commits),
+                "snapshot_epoch": int(ri.snapshot_epoch)}
+        finally:
+            shutil.rmtree(state_dir, ignore_errors=True)
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_all_modes_survive_kill_restart():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=900,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    # 9 modes; 3 tiled modes get an extra dev8 entry → 12 combos per S,
+    # plus one service-level entry per S
+    assert len(out) == 26, sorted(out)
+    for combo, r in out.items():
+        if combo.endswith("/service"):
+            assert r["epoch_equal"] and r["epoch"] == 2, combo
+            assert r["commits_equal"] and r["rows_equal"], combo
+            assert r["corpus_equal"] and r["index_equal"], combo
+            assert r["probe_equal"], f"{combo}: served decisions diverged"
+            assert r["torn_bytes"] > 0, f"{combo}: torn tail not discarded"
+            # snapshot at epoch 2 → nothing left to replay
+            assert r["snapshot_epoch"] == 2 and r["replayed"] == 0, combo
+        else:
+            assert r["equal"], f"{combo}: restored decisions diverged"
+    assert any(r.get("copying_bits", 0) > 0 for r in out.values())
