@@ -26,6 +26,12 @@ CI and future PRs can diff the perf trajectory.
   serve   batched serving: req/s + p50/p99 latency vs batch    (serving)
           size; asserts batched == per-request decisions and
           sample_verify == exact on its candidate set
+  overload  traffic hardening: sustained req/s, shed rate and  (DESIGN §9)
+          admitted-p99 under a 2× mixed commit/retract/read
+          overload (deadline admission control + adaptive
+          batching, p99 ≤ 1.5× unloaded asserted); commit
+          circuit breaker trip/recovery with epoch equality;
+          retraction asserted == rebuild-without-source
   scaling DetectionEngine matrix: S × device-count             (engine)
   kernel  copyscore tile path: legacy two-orientation vs fused (engine)
           triangular dual-direction, f32/bf16 vs int8 incidence
@@ -921,6 +927,224 @@ def durability():
         shutil.rmtree(dir_log, ignore_errors=True)
 
 
+def overload():
+    """Traffic-hardening scenario (ISSUE 7, DESIGN.md §9): what happens at
+    2× capacity, and how degraded replicas and retractions behave.
+
+    Four legs:
+
+      1. unloaded baseline — sequential single-request latency (p99) and
+         batched capacity (req/s at batch 8), the reference the overload
+         SLO is defined against;
+      2. 2× overload — a mixed commit/retract/read arrival stream at twice
+         the measured capacity, every read carrying a deadline of 1.5× the
+         unloaded p99. Admission control + queue expiry shed the excess
+         with typed errors and the adaptive batch limit trades batching
+         for latency; asserts the p99 of admitted-and-met requests stays
+         ≤ 1.5× the unloaded p99 and that shedding actually engaged
+         (before this PR the same stream piled onto the queue until every
+         caller waited out the flat 30 s submit timeout — the cliff
+         BENCH_serve.json's 11.5 req/s at batch 8 turns into);
+      3. circuit breaker — a replica failing 5 consecutive commits trips
+         its breaker (first 4 waves abort fleet-wide, classic rollback);
+         the fleet keeps committing without it, two more writes queue in
+         its backlog, and after the cooldown one probe write replays the
+         backlog and rejoins the replica at epoch equality — asserted;
+      4. retraction — retract-then-detect equals a service rebuilt without
+         the retracted sources (asserted), with the wall-clock of both.
+    """
+    import importlib.util
+    import pathlib
+
+    import jax
+    from repro.core.serving import (
+        DeadlineExceeded,
+        DetectRequest,
+        DetectionService,
+        ReplicaBroadcastError,
+        ReplicaRouter,
+        ServiceOverloaded,
+    )
+    from repro.core.types import ClaimsDataset
+    from repro.data.claims import (
+        SyntheticSpec,
+        oracle_claim_probs,
+        synthetic_claims,
+        synthetic_query_rows,
+    )
+
+    faults_path = (pathlib.Path(__file__).resolve().parent.parent
+                   / "tests" / "faults.py")
+    spec_ = importlib.util.spec_from_file_location("_bench_faults", faults_path)
+    faults = importlib.util.module_from_spec(spec_)
+    spec_.loader.exec_module(faults)
+
+    S, D, q = 256, 1024, 4
+    sc = synthetic_claims(SyntheticSpec(
+        n_sources=S, n_items=D, coverage="book", n_cliques=6, clique_size=3,
+        clique_items=12, seed=0))
+    p = oracle_claim_probs(sc)
+    n_dev = len(jax.devices())
+    rng = np.random.default_rng(17)
+    n_pool = 64
+    vals, acc, pq, _ = synthetic_query_rows(sc, n_pool * q, seed=2)
+
+    def req(i, deadline_s=None):
+        j = i % n_pool
+        return DetectRequest(rid=i, values=vals[j * q:(j + 1) * q],
+                             accuracy=acc[j * q:(j + 1) * q],
+                             p_claim=pq[j * q:(j + 1) * q],
+                             deadline_s=deadline_s)
+
+    def wave(n_rows=2):
+        w = np.where(rng.random((n_rows, D)) < 0.03,
+                     rng.integers(0, 3, (n_rows, D)), -1).astype(np.int32)
+        a = rng.uniform(0.5, 0.9, n_rows).astype(np.float32)
+        pc = np.where(w == 0, 0.9,
+                      np.where(w > 0, 0.05, 0.0)).astype(np.float32)
+        return w, a, pc
+
+    # ---- 1. unloaded baseline: p99 (sequential) + capacity (batched) ------
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=8, max_pending_rows=256,
+                           result_cache=False)
+    for i in range(8):                                # warm-up (JIT compile)
+        svc.submit(req(i))
+    svc.flush()
+    lat_u = []
+    for i in range(12):
+        f = svc.submit(req(100 + i))
+        svc.flush()
+        lat_u.append(f.result().latency_s)
+    p99_u = float(np.percentile(lat_u, 99))
+    n_cap = 16
+    t0 = time.perf_counter()
+    futs = [svc.submit(req(200 + i)) for i in range(n_cap)]
+    svc.flush()
+    [f.result() for f in futs]
+    capacity = n_cap / (time.perf_counter() - t0)
+    emit(f"overload/S{S}/dev{n_dev}/unloaded_p99_ms", round(p99_u * 1e3, 1),
+         f"capacity_req_per_s={capacity:.1f}")
+
+    # ---- 2. mixed commit/retract/read stream at 2× capacity ---------------
+    deadline = 1.5 * p99_u
+    n_over = 80
+    interval = 1.0 / (2.0 * capacity)
+    svc.stats = type(svc.stats)()
+    svc.start()
+    futs, shed, rejected, writes = [], 0, 0, 0
+    t0 = time.perf_counter()
+    for i in range(n_over):
+        if i % 10 == 5:
+            svc.commit(*wave())
+            writes += 1
+        elif i % 10 == 9 and svc.resident.n_corpus > S:
+            n = svc.resident.n_corpus
+            svc.retract([n - 2, n - 1])
+            writes += 1
+        try:
+            futs.append(svc.submit(req(1000 + i, deadline_s=deadline),
+                                   timeout=5.0))
+        except DeadlineExceeded:
+            shed += 1
+        except ServiceOverloaded:
+            rejected += 1
+        t_next = t0 + (i + 1) * interval
+        time.sleep(max(0.0, t_next - time.perf_counter()))
+    svc.stop()
+    t_wall = time.perf_counter() - t0
+    met, missed = [], []
+    for f in futs:
+        try:
+            r = f.result(timeout=60)
+            (met if r.latency_s <= deadline else missed).append(r.latency_s)
+        except DeadlineExceeded:
+            shed += 1
+    st = svc.stats
+    assert len(met) + len(missed) + shed + rejected == n_over
+    assert shed > 0, "2x overload must shed load (cliff otherwise)"
+    assert met, "overload shed everything — no admitted requests at all"
+    p99_adm = float(np.percentile(met, 99))
+    assert p99_adm <= deadline * 1.001, (p99_adm, deadline)
+    emit(f"overload/S{S}/dev{n_dev}/2x/admitted_req_per_s",
+         round(len(met) / t_wall, 2),
+         f"writes={writes} wall_s={t_wall:.1f}")
+    emit(f"overload/S{S}/dev{n_dev}/2x/admitted_p99_ms",
+         round(p99_adm * 1e3, 1),
+         f"bar={deadline * 1e3:.1f}ms missed_deadline={len(missed)}")
+    emit(f"overload/S{S}/dev{n_dev}/2x/shed_rate",
+         round(shed / n_over, 3),
+         f"shed={shed} rejected={rejected} "
+         f"arrival_shed={st.shed} queue_expired={st.expired}")
+    emit(f"overload/S{S}/dev{n_dev}/2x/adaptive_batch",
+         svc._batch_limit,
+         f"shrinks={st.batch_shrinks} grows={st.batch_grows} "
+         f"queue_wait_p99_ms={st.queue_wait_p99 * 1e3:.1f}")
+
+    # ---- 3. circuit breaker: 5 consecutive commit faults ------------------
+    router = ReplicaRouter(sc.dataset, p, CFG, n_replicas=2, mode="bucketed",
+                           tile=64, breaker_threshold=5,
+                           breaker_cooldown_s=5.0, result_cache=False)
+    clock = faults.FakeClock()
+    router.breakers[1]._clock = clock
+    aborted = 0
+    with faults.failing_writes(router.replicas[1]) as fault:
+        while router.stats.breaker_trips == 0:
+            try:
+                router.commit(*wave())
+            except ReplicaBroadcastError:
+                aborted += 1
+        assert aborted == 4, aborted          # failures 1–4 abort fleet-wide
+        assert router.epoch == 1              # failure 5 trips → fleet commits
+        assert router.replicas[1].epoch == 0
+        router.commit(*wave())                # buffered: breaker open
+        router.retract([S])                   # retraction buffers too
+        # backlog: trip-wave commit (ejected, fleet applied) + both above
+        assert len(router._backlogs[1]) == 3
+        fault["left"] = 0                     # replica healed
+    clock.advance(6.0)                        # cooldown elapses → probe
+    router.commit(*wave())                    # catch-up: 3 backlog ops + live
+    assert router.replicas[0].epoch == router.replicas[1].epoch == 4
+    rst = router.stats
+    assert rst.breaker_trips == 1 and rst.breaker_open == 0
+    assert not router._backlogs[1]
+    emit(f"overload/S{S}/dev{n_dev}/breaker/recovered_epoch",
+         router.replicas[1].epoch,
+         f"aborted_waves={aborted} trips={rst.breaker_trips} "
+         f"backlog_replayed=3 open_now={rst.breaker_open}")
+
+    # ---- 4. retraction == rebuild-without-source --------------------------
+    svc_r = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64)
+    probes = [req(9000 + i) for i in range(3)]
+    row_ids = [5, 77, 130]
+    t0 = time.perf_counter()
+    info = svc_r.retract(row_ids)
+    t_retract = time.perf_counter() - t0
+    futs = [svc_r.submit(r) for r in probes]
+    svc_r.flush()
+    resp_a = [f.result() for f in futs]
+    keep = np.setdiff1d(np.arange(S), row_ids)
+    t0 = time.perf_counter()
+    ref = DetectionService(
+        ClaimsDataset(values=sc.dataset.values[keep],
+                      accuracy=sc.dataset.accuracy[keep]),
+        p[keep], CFG, mode="bucketed", tile=64, result_cache=False)
+    t_rebuild = time.perf_counter() - t0
+    futs = [ref.submit(r) for r in probes]
+    ref.flush()
+    resp_b = [f.result() for f in futs]
+    match = all(np.array_equal(a.copying, b.copying)
+                and np.array_equal(a.intra_copying, b.intra_copying)
+                for a, b in zip(resp_a, resp_b))
+    assert match, "retract-then-detect diverged from rebuild-without-source"
+    emit(f"overload/S{S}/dev{n_dev}/retract_ms", round(t_retract * 1e3, 2),
+         f"rows={info.rows} touched={info.touched_entries} "
+         f"gc={info.gc_entries}")
+    emit(f"overload/S{S}/dev{n_dev}/retract_vs_rebuild_speedup",
+         round(t_rebuild / max(t_retract, 1e-9), 1),
+         f"rebuild_ms={t_rebuild * 1e3:.1f} decisions_match={int(match)}")
+
+
 def lm():
     """Training-substrate throughput smoke (tiny llama on CPU)."""
     import jax
@@ -954,9 +1178,9 @@ def lm():
 # default order: cheapest first so partial runs still cover most tables
 TABLES = {
     "lm": lm, "fig2": fig2, "fig3": fig3, "store": store, "mutate": mutate,
-    "durability": durability, "serve": serve, "scaling": scaling,
-    "kernel": kernel, "table8": table8, "table9": table9, "table10": table10,
-    "table6": table6, "table7": table7,
+    "durability": durability, "serve": serve, "overload": overload,
+    "scaling": scaling, "kernel": kernel, "table8": table8, "table9": table9,
+    "table10": table10, "table6": table6, "table7": table7,
 }
 
 

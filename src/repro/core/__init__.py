@@ -19,6 +19,12 @@ Public API:
   DurabilityOptions, CommitLog, RestoreInfo     — commit-log persistence +
                                                   snapshot/restore (DESIGN §8,
                                                   OPERATIONS.md)
+  retract_rows, RetractInfo, RetractRecord      — source retraction: unwind
+                                                  membership, GC orphans,
+                                                  WAL replay (DESIGN §9.4)
+  CircuitBreaker, DeadlineExceeded              — traffic hardening: commit
+                                                  circuit breaker, deadline
+                                                  admission/expiry (DESIGN §9)
 
 The per-algorithm functions remain as references and compatibility wrappers;
 new code should construct a ``DetectionEngine`` with the mode it needs (or a
@@ -35,16 +41,20 @@ from repro.core.incremental import (
 )
 from repro.core.index import (
     CommitInfo,
+    RetractInfo,
     build_index,
     bucketize,
     commit_rows,
     compact_index,
     engine_chunks,
+    retract_rows,
     rollback_commit,
 )
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.scoring import pairwise_detect
 from repro.core.serving import (
+    CircuitBreaker,
+    DeadlineExceeded,
     DetectionService,
     DetectRequest,
     DetectResponse,
@@ -52,6 +62,8 @@ from repro.core.serving import (
     ReplicaRouter,
     ResidentCorpus,
     ResultCache,
+    ServiceOverloaded,
+    ServiceStopped,
     serve_batch,
 )
 from repro.core.store import CorpusStore
@@ -62,6 +74,7 @@ from repro.core.wal import (
     NoValidSnapshotError,
     ReplayDivergenceError,
     RestoreInfo,
+    RetractRecord,
 )
 from repro.core.truthfind import fusion_accuracy, truth_finding
 from repro.core.types import (
@@ -78,10 +91,13 @@ __all__ = [
     "DetectionEngine", "EngineOptions", "CorpusStore",
     "DetectRequest", "DetectResponse", "DetectionService", "ReplicaRouter",
     "ReplicaBroadcastError", "ResidentCorpus", "ResultCache", "serve_batch",
+    "CircuitBreaker", "DeadlineExceeded", "ServiceOverloaded",
+    "ServiceStopped",
     "DurabilityOptions", "CommitLog", "CommitRecord", "RestoreInfo",
-    "NoValidSnapshotError", "ReplayDivergenceError",
+    "NoValidSnapshotError", "ReplayDivergenceError", "RetractRecord",
     "pairwise_detect", "build_index", "bucketize", "engine_chunks",
     "commit_rows", "rollback_commit", "compact_index", "CommitInfo",
+    "retract_rows", "RetractInfo",
     "index_detect_exact", "bucketed_index_detect",
     "bound_detect", "hybrid_detect",
     "make_incremental_state", "incremental_detect", "rescore_pairs_exact",

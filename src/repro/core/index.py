@@ -593,13 +593,137 @@ def commit_rows(
     return info
 
 
-def rollback_commit(index: InvertedIndex, info: CommitInfo) -> None:
+@dataclass
+class RetractInfo:
+    """Receipt of one ``retract_rows`` call (stats + the rollback snapshot).
+
+    Shares the private rollback fields with ``CommitInfo`` so
+    ``rollback_commit`` unwinds either receipt — every mutation path copies
+    instead of writing captured arrays in place, which is what makes the
+    ref-restoring snapshot valid for retraction too.
+    """
+
+    rows: int                      # sources removed from the corpus
+    touched_entries: int           # entries the retracted rows provided
+    gc_entries: int                # entries GC'd (fell below 2 providers)
+    rescored_entries: int          # surviving touched entries re-scored
+    epoch: int                     # store epoch after the retraction
+    wall_s: float                  # host time spent retracting
+    _snap: StoreSnapshot = field(repr=False, default=None)
+    _ebar_start: int = field(repr=False, default=0)
+    _ebar_mask: Optional[np.ndarray] = field(repr=False, default=None)
+    _l_counts: np.ndarray = field(repr=False, default=None)
+    _items_per_source: np.ndarray = field(repr=False, default=None)
+
+
+def retract_rows(
+    index: InvertedIndex,
+    ds_after: ClaimsDataset,
+    cfg: CopyConfig,
+    row_ids: np.ndarray,
+) -> RetractInfo:
+    """Drop committed sources from the index — the inverse half of
+    ``commit_rows`` (DESIGN.md §9).
+
+    ``ds_after`` is the POST-retraction claims dataset (the surviving rows,
+    compacted — ``ResidentCorpus.retract_rows`` produces it); ``row_ids``
+    are the retracted rows' indices in the PRE-retraction corpus. The
+    retraction:
+
+      1. finds the entries the retracted rows were members of (their
+         membership bits, one any-reduction per chunk);
+      2. removes the rows from the incidence (``store.retract_rows`` —
+         surviving rows compact upward, chunk arrays are replaced so the
+         pre-retraction snapshot stays rollback-valid);
+      3. GCs touched entries whose surviving provider count drops below 2 —
+         no longer *shared* values (Def. 3.2) — into inert padding columns
+         (``store.deactivate_entries``), exactly the set a rebuild over
+         ``ds_after`` would not index;
+      4. re-scores the surviving touched entries from the remaining
+         providers' extreme accuracies (M̂ is a provider-pair max — a
+         retracted extreme provider changes it);
+      5. shrinks ``l_counts``/``items_per_source`` along the removed rows;
+      6. re-derives the Ē boundary as ``ebar_mask`` over the surviving
+         score metadata.
+
+    Returns a ``RetractInfo``; ``rollback_commit(index, info)`` restores
+    the pre-retraction state bit-exact (LIFO, router broadcast recovery).
+    """
+    t0 = time.perf_counter()
+    store = index.store
+    row_ids = np.unique(np.asarray(row_ids, np.int64))
+    k = len(row_ids)
+    S0 = store.n_rows
+    if ds_after.n_sources != S0 - k:
+        raise ValueError(
+            f"retract_rows: index covers {S0} rows, {k} retracted — "
+            f"ds_after must have {S0 - k} rows, got {ds_after.n_sources}")
+    snap = store.snapshot()
+    info = RetractInfo(
+        rows=k, touched_entries=0, gc_entries=0, rescored_entries=0,
+        epoch=store.epoch, wall_s=0.0,
+        _snap=snap, _ebar_start=index.ebar_start, _ebar_mask=index.ebar_mask,
+        _l_counts=index.l_counts, _items_per_source=index.items_per_source)
+    if k == 0:
+        info.wall_s = time.perf_counter() - t0
+        return info
+
+    # -- 1. entries the retracted rows provided -----------------------------
+    touched = []
+    for ch in store.iter_chunks():
+        hit = ch.V[row_ids].any(axis=0)
+        if hit.any():
+            touched.append(ch.start + np.nonzero(hit)[0])
+    touched = (np.concatenate(touched) if touched
+               else np.zeros(0, np.int64))
+    info.touched_entries = len(touched)
+
+    # -- 2. remove the rows -------------------------------------------------
+    store.retract_rows(row_ids)
+
+    # -- 3. GC entries that stopped being shared ----------------------------
+    if len(touched):
+        counts = np.array([int(store.column(e).sum()) for e in touched])
+        gc_ids = touched[counts < 2]
+        survivors = touched[counts >= 2]
+        store.deactivate_entries(gc_ids)
+        info.gc_entries = len(gc_ids)
+
+        # -- 4. re-score survivors from the remaining providers -------------
+        if len(survivors):
+            if store.entry_score is snap.entry_score:
+                # copy-on-write keeps the rollback point bit-exact
+                store.entry_score = store.entry_score.copy()
+                store.epoch += 1
+            acc = ds_after.accuracy.astype(np.float64)
+            provider_lists = [store.providers(e) for e in survivors]
+            a_min, a_second, a_max = _extremes_of(acc, provider_lists)
+            store.entry_score[survivors] = _entry_scores_vectorized(
+                store.entry_p[survivors], a_min, a_second, a_max, cfg)
+            info.rescored_entries = len(survivors)
+
+    # -- 5. shrink the pair/source aggregates -------------------------------
+    index.l_counts = np.delete(
+        np.delete(index.l_counts, row_ids, axis=0), row_ids, axis=1)
+    index.items_per_source = np.delete(index.items_per_source, row_ids)
+
+    # -- 6. Ē from the surviving score metadata -----------------------------
+    index.ebar_mask = _derive_ebar_mask(store, cfg.theta_ind)
+
+    info.epoch = store.epoch
+    info.wall_s = time.perf_counter() - t0
+    return info
+
+
+def rollback_commit(index: InvertedIndex, info) -> None:
     """Restore the index to its pre-commit state, bit-exact.
 
-    Valid for the LAST commit applied (commits must unwind LIFO). Works
-    across compaction too: the snapshot holds the pre-commit store object,
-    which the mutation path never writes in place (appended rows are zeroed
-    back, replaced arrays are restored by reference).
+    Valid for the LAST mutation applied (commits/retractions must unwind
+    LIFO); accepts a ``CommitInfo`` or a ``RetractInfo`` — both capture the
+    same rollback fields. Works across compaction too: the snapshot holds
+    the pre-mutation store object, which the mutation path never writes in
+    place (appended rows are zeroed back, replaced arrays are restored by
+    reference).
     """
     info._snap.restore()
     index.store = info._snap.store

@@ -83,6 +83,7 @@ from repro.core.index import (
     commit_rows,
     rollback_commit,
 )
+from repro.core.index import retract_rows as index_retract_rows
 from repro.core.types import ClaimsDataset, CopyConfig, claim_value_keys
 from repro.core.wal import (
     LOG_NAME,
@@ -92,6 +93,7 @@ from repro.core.wal import (
     DurabilityOptions,
     ReplayDivergenceError,
     RestoreInfo,
+    RetractRecord,
     latest_valid_snapshot,
     list_snapshots,
     read_manifest,
@@ -110,6 +112,25 @@ class ServiceOverloaded(TimeoutError):
     pending-row budget stayed full for the whole submit timeout."""
 
 
+class DeadlineExceeded(TimeoutError):
+    """A request's ``deadline_s`` cannot (or did not) hold.
+
+    Distinct from ``ServiceOverloaded``: backpressure means the QUEUE is
+    full; a deadline miss means this request's time budget is spent —
+    either shed on arrival (the EWMA of recent batch latency predicts the
+    queue wait alone exceeds the deadline — admission control, DESIGN.md
+    §9) or expired while queued. The caller can retry with a looser
+    deadline; retrying immediately with the same one will shed again.
+    """
+
+
+class ServiceStopped(RuntimeError):
+    """Typed rejection for a submit that raced ``stop()``: the worker's
+    final drain already ran (or is running), so enqueueing would strand the
+    future. A ``RuntimeError`` subclass — pre-existing callers catching that
+    still work."""
+
+
 @dataclass
 class DetectRequest:
     """One detection query: ``values.shape[0]`` query sources vs the corpus.
@@ -123,6 +144,10 @@ class DetectRequest:
     values: np.ndarray            # (q, D) int32 — same item axis as the corpus
     accuracy: np.ndarray          # (q,) float32 — accuracy estimate per row
     p_claim: np.ndarray           # (q, D) float32 — truth prob of each claim
+    deadline_s: Optional[float] = None  # seconds from submit the caller is
+                                  # willing to wait; the service sheds the
+                                  # request (DeadlineExceeded) rather than
+                                  # serve it late (DESIGN.md §9)
 
     def __post_init__(self):
         self.values = np.asarray(self.values, dtype=np.int32)
@@ -292,6 +317,59 @@ class ResidentCorpus:
         self.p_claim[rows] = 0.0
         self.n_corpus = n_rows
 
+    def retract_rows(self, row_ids: np.ndarray) -> int:
+        """Remove ARBITRARY corpus rows (source retraction, DESIGN.md §9).
+
+        The surviving rows compact upward (fancy-index gather — a copy, so
+        overlapping source/destination is safe), the freed tail returns to
+        the inert fill, and ``n_corpus`` drops. Returns the new corpus row
+        count. Mirrors ``CorpusStore.retract_rows`` one level up, at the
+        claims layer.
+        """
+        row_ids = np.unique(np.asarray(row_ids, np.int64))
+        if len(row_ids) and (row_ids[0] < 0 or row_ids[-1] >= self.n_corpus):
+            raise ValueError(
+                f"retract_rows: ids out of range [0, {self.n_corpus})")
+        keep = np.ones(self.n_corpus, bool)
+        keep[row_ids] = False
+        n_keep = int(keep.sum())
+        self.values[:n_keep] = self.values[: self.n_corpus][keep]
+        self.accuracy[:n_keep] = self.accuracy[: self.n_corpus][keep]
+        self.p_claim[:n_keep] = self.p_claim[: self.n_corpus][keep]
+        tail = slice(n_keep, self.n_corpus)
+        self.values[tail] = -1
+        self.accuracy[tail] = 0.5
+        self.p_claim[tail] = 0.0
+        self.n_corpus = n_keep
+        return self.n_corpus
+
+    def unretract(self, row_ids: np.ndarray, values: np.ndarray,
+                  accuracy: np.ndarray, p_claim: np.ndarray) -> int:
+        """Re-insert retracted rows at their original indices (rollback).
+
+        LIFO counterpart of ``retract_rows`` for the router's broadcast
+        recovery: the saved rows scatter back to ``row_ids`` and the
+        survivors shift back to their pre-retraction positions, so the row
+        coordinate system is restored exactly. Returns the new row count.
+        """
+        row_ids = np.unique(np.asarray(row_ids, np.int64))
+        k = len(row_ids)
+        n_new = self.n_corpus + k
+        if n_new > self.capacity - self.max_query_rows:
+            raise ValueError("unretract would eat into the staging slack")
+        keep_pos = np.setdiff1d(np.arange(n_new), row_ids)
+        cur_v = self.values[: self.n_corpus].copy()
+        cur_a = self.accuracy[: self.n_corpus].copy()
+        cur_p = self.p_claim[: self.n_corpus].copy()
+        self.values[keep_pos] = cur_v
+        self.accuracy[keep_pos] = cur_a
+        self.p_claim[keep_pos] = cur_p
+        self.values[row_ids] = values
+        self.accuracy[row_ids] = accuracy
+        self.p_claim[row_ids] = p_claim
+        self.n_corpus = n_new
+        return self.n_corpus
+
 
 def serve_batch(
     base: ClaimsDataset,
@@ -379,6 +457,10 @@ def serve_batch(
     return out
 
 
+#: Queue-wait samples kept for the p50/p99 properties (ring-buffer bound).
+_MAX_WAIT_SAMPLES = 4096
+
+
 @dataclass
 class ServiceStats:
     """Counters the service accumulates across batches (read via .stats)."""
@@ -400,6 +482,39 @@ class ServiceStats:
     reindexed_entries: int = 0    # existing entries re-scored (providers grew)
     delta_chunks: int = 0         # delta chunks appended across commits
     compactions: int = 0          # delta→base folds
+    failed_batches: int = 0       # engine passes that raised (DESIGN.md §9)
+    failed_requests: int = 0      # requests whose pass raised (not cache hits)
+    shed: int = 0                 # admitted-control rejections on arrival:
+                                  # the EWMA predicted the deadline can't hold
+    expired: int = 0              # queued requests whose deadline passed
+                                  # before their batch ran
+    retractions: int = 0          # source retractions applied (§9)
+    retracted_rows: int = 0       # corpus rows removed by retractions
+    gc_entries: int = 0           # entries GC'd (< 2 providers after retract)
+    batch_shrinks: int = 0        # adaptive batch-limit halvings
+    batch_grows: int = 0          # adaptive batch-limit regrowth steps
+    breaker_trips: int = 0        # replica breakers tripped open (router)
+    breaker_open: int = 0         # replicas currently open/half-open (router)
+    queue_wait_samples: list = dataclasses.field(default_factory=list,
+                                                 repr=False)
+
+    def record_wait(self, seconds: float) -> None:
+        """Record one request's submit→batch-start queue wait."""
+        self.queue_wait_samples.append(float(seconds))
+        if len(self.queue_wait_samples) > _MAX_WAIT_SAMPLES:
+            del self.queue_wait_samples[: -_MAX_WAIT_SAMPLES]
+
+    @property
+    def queue_wait_p50(self) -> float:
+        """Median queue wait (seconds) over the recent sample window."""
+        s = self.queue_wait_samples
+        return float(np.percentile(s, 50)) if s else 0.0
+
+    @property
+    def queue_wait_p99(self) -> float:
+        """p99 queue wait (seconds) over the recent sample window."""
+        s = self.queue_wait_samples
+        return float(np.percentile(s, 99)) if s else 0.0
 
     @property
     def mean_batch(self) -> float:
@@ -411,6 +526,12 @@ class ServiceStats:
         """Fraction of requests answered without an engine pass."""
         total = self.cache_hits + self.cache_misses
         return self.cache_hits / total if total else 0.0
+
+
+def _stat_counter_fields() -> list:
+    """The int counter fields of ``ServiceStats`` (snapshot/aggregation
+    currency — the wait-sample buffer is runtime-only and is skipped)."""
+    return [f for f in dataclasses.fields(ServiceStats) if f.type == "int"]
 
 
 class ResultCache:
@@ -522,6 +643,56 @@ class ResultCache:
         self._entries.move_to_end(key)
         while len(self._entries) > self.max_entries:
             self._entries.popitem(last=False)
+
+    def apply_retraction(self, removed_cols: np.ndarray,
+                         touched_keys: np.ndarray, n_before: int) -> int:
+        """Eagerly reconcile every cached entry with a source retraction.
+
+        The touched-key rule (§7) still decides life or death: an entry
+        sharing a claim key with a retracted row may have paired with it —
+        it dies. A survivor shares NO key with any retracted row, so its
+        pairs against those sources were never copying (False / 1.0 / 0.0);
+        its response just loses those columns. Survivors whose matrices
+        predate ``n_before`` columns are padded first (the standard
+        later-commit padding — if a commit between the entry's epoch and now
+        actually touched it, the lookup-time replay will kill it anyway, so
+        padding here is harmless). Done eagerly (not at lookup) because the
+        retraction renumbers the corpus column axis — lookups after this
+        point compare against the POST-retraction corpus. Returns the number
+        of entries invalidated.
+        """
+        removed_cols = np.asarray(removed_cols, np.int64)
+        dead = [key for key, ent in self._entries.items()
+                if np.isin(ent["claim_keys"], touched_keys,
+                           assume_unique=True).any()]
+        for key in dead:
+            del self._entries[key]
+            self.invalidations += 1
+        for ent in self._entries.values():
+            q, s_at = ent["copying"].shape
+            if s_at < n_before:
+                grow = n_before - s_at
+                ent["copying"] = np.concatenate(
+                    [ent["copying"], np.zeros((q, grow), bool)], axis=1)
+                ent["pr_independent"] = np.concatenate(
+                    [ent["pr_independent"], np.ones((q, grow), np.float32)],
+                    axis=1)
+                ent["c_fwd"] = np.concatenate(
+                    [ent["c_fwd"], np.zeros((q, grow), np.float32)], axis=1)
+            for name in ("copying", "pr_independent", "c_fwd"):
+                ent[name] = np.delete(ent[name], removed_cols, axis=1)
+        return len(dead)
+
+    def clear(self) -> int:
+        """Drop every entry (counters survive). Returns the number dropped.
+
+        Used by ``rollback_last_retract``: the eager column surgery of
+        ``apply_retraction`` is not invertible entry-by-entry, so unwinding
+        a retraction starts the cache cold.
+        """
+        n = len(self._entries)
+        self._entries.clear()
+        return n
 
     def drop_after(self, epoch: int) -> int:
         """Purge entries validated at an epoch later than ``epoch``.
@@ -675,43 +846,76 @@ class DetectionService:
         self._result_cache_requested = bool(result_cache)
         self._touched_log: list = []     # [(epoch, touched_keys)] per commit
         self.stats = ServiceStats()
-        self._pending: deque = deque()   # (request, future, t_submit)
+        self._pending: deque = deque()   # (request, future, t_submit, t_ddl)
         self._pending_rows = 0
         self._cv = threading.Condition()
         self._corpus_lock = threading.Lock()   # serializes batches & commits
         self._worker: Optional[threading.Thread] = None
         self._stopping = False
+        # traffic hardening (DESIGN.md §9): injectable clock (fault tests
+        # skew it), EWMA of recent batch latency (admission control), and
+        # the adaptive batch limit in [1, max_batch_requests]
+        self._clock = time.monotonic
+        self._ewma_batch_s = 0.0         # 0 = no estimate yet
+        self._batch_limit = self.max_batch_requests
+        self._ok_streak = 0              # deadline-clean batches in a row
         # durability state (all None/empty for an in-memory service)
         self.durability: Optional[DurabilityOptions] = None
         self.restore_info: Optional[RestoreInfo] = None
         self._log: Optional[CommitLog] = None
         self._last_commit: Optional[dict] = None   # rollback receipt
+        self._last_retract: Optional[dict] = None  # rollback receipt (§9)
         if durability is not None:
             self._attach_durability(durability)
 
     # -- submission ---------------------------------------------------------
+
+    def _admission_wait_estimate(self) -> float:
+        """Predicted submit→result latency for a request arriving NOW.
+
+        Queue depth in batches (at the current adaptive batch limit) times
+        the EWMA of recent batch latency, plus one more batch for the
+        request's own pass. 0.0 while no batch has completed yet (no
+        estimate — admission control stands down rather than shed blind).
+        """
+        if self._ewma_batch_s <= 0.0:
+            return 0.0
+        batches_ahead = -(-len(self._pending) // max(self._batch_limit, 1))
+        return (batches_ahead + 1) * self._ewma_batch_s
 
     def submit(self, request: DetectRequest,
                timeout: Optional[float] = 30.0) -> Future:
         """Enqueue a request; returns a Future resolving to DetectResponse.
 
         Blocks while the pending-row budget is full (backpressure); raises
-        ``ServiceOverloaded`` if it stays full past ``timeout`` seconds, and
-        ``ValueError`` for a request that could never fit the budget.
+        ``ServiceOverloaded`` if it stays full past ``timeout`` seconds,
+        ``ValueError`` for a request that could never fit the budget, and —
+        for a request carrying ``deadline_s`` — ``DeadlineExceeded`` ON
+        ARRIVAL when the EWMA of recent batch latency predicts the deadline
+        cannot hold (admission control: the engine pass is never wasted on
+        a request that would miss anyway, DESIGN.md §9).
         """
         if request.n_rows > self.max_pending_rows:
             raise ValueError(
                 f"request {request.rid}: {request.n_rows} rows exceeds "
                 f"max_pending_rows={self.max_pending_rows}")
-        deadline = None if timeout is None else time.monotonic() + timeout
+        deadline = None if timeout is None else self._clock() + timeout
         with self._cv:
             if self._stopping:
                 # after the worker's final drain a queued entry would never
                 # resolve — refuse instead of stranding the future
-                raise RuntimeError("service is stopping; submit rejected")
+                raise ServiceStopped("service is stopping; submit rejected")
+            if request.deadline_s is not None:
+                est = self._admission_wait_estimate()
+                if est > request.deadline_s:
+                    self.stats.shed += 1
+                    raise DeadlineExceeded(
+                        f"request {request.rid}: predicted wait "
+                        f"{est:.3f}s exceeds deadline "
+                        f"{request.deadline_s:.3f}s — shed on arrival")
             while self._pending_rows + request.n_rows > self.max_pending_rows:
                 wait = (None if deadline is None
-                        else deadline - time.monotonic())
+                        else deadline - self._clock())
                 if wait is not None and wait <= 0:
                     self.stats.rejected += 1
                     raise ServiceOverloaded(
@@ -720,9 +924,13 @@ class DetectionService:
                 if self._stopping:
                     # stop() drained the queue while we waited — enqueueing
                     # now would strand the future past the worker's exit
-                    raise RuntimeError("service is stopping; submit rejected")
+                    raise ServiceStopped(
+                        "service is stopping; submit rejected")
             fut: Future = Future()
-            self._pending.append((request, fut, time.monotonic()))
+            now = self._clock()
+            t_ddl = (None if request.deadline_s is None
+                     else now + request.deadline_s)
+            self._pending.append((request, fut, now, t_ddl))
             self._pending_rows += request.n_rows
             self._cv.notify_all()
         return fut
@@ -730,9 +938,16 @@ class DetectionService:
     # -- draining -----------------------------------------------------------
 
     def _take_batch(self) -> list:
-        """Pop up to max_batch_requests pending entries (caller holds _cv)."""
+        """Pop up to ``_batch_limit`` pending entries (caller holds _cv).
+
+        The limit is the ADAPTIVE bound — ``max_batch_requests`` shrunk
+        while deadline misses accumulate, regrown when headroom returns
+        (DESIGN.md §9) — so an overloaded service trades batching
+        efficiency for per-batch latency exactly when latency is what
+        deadlines are missing on.
+        """
         batch = []
-        while self._pending and len(batch) < self.max_batch_requests:
+        while self._pending and len(batch) < self._batch_limit:
             entry = self._pending.popleft()
             self._pending_rows -= entry[0].n_rows
             batch.append(entry)
@@ -751,13 +966,64 @@ class DetectionService:
         else:
             fut.set_result(result)
 
+    def _expire_stale(self, batch: list) -> list:
+        """Shed queued entries whose deadline already passed (DESIGN.md §9).
+
+        Runs at batch start, BEFORE the engine pass: a request that cannot
+        possibly be answered in time must not ride the pass (it would only
+        slow every co-batched request down). Resolves the stale futures
+        with ``DeadlineExceeded`` and returns the live remainder.
+        """
+        now = self._clock()
+        live = []
+        for entry in batch:
+            request, fut, _, t_ddl = entry
+            if t_ddl is not None and now >= t_ddl:
+                self.stats.expired += 1
+                self._resolve(fut, exc=DeadlineExceeded(
+                    f"request {request.rid}: deadline passed while queued"))
+            else:
+                live.append(entry)
+        return live
+
+    def _adapt_batch_limit(self, missed: int) -> None:
+        """Shrink/regrow the adaptive batch limit from deadline outcomes.
+
+        Any miss halves the limit (a smaller batch is faster, so queued
+        deadlines get a fighting chance); a streak of clean batches regrows
+        it one step at a time back toward ``max_batch_requests`` — the
+        classic multiplicative-decrease / additive-increase shape.
+        """
+        if missed:
+            self._ok_streak = 0
+            if self._batch_limit > 1:
+                self._batch_limit = max(1, self._batch_limit // 2)
+                self.stats.batch_shrinks += 1
+        else:
+            self._ok_streak += 1
+            if (self._ok_streak >= 4
+                    and self._batch_limit < self.max_batch_requests):
+                self._batch_limit += 1
+                self.stats.batch_grows += 1
+                self._ok_streak = 0
+
     def _run_batch(self, batch: list) -> None:
-        """One batch: cache lookups, ONE serve_batch for the misses, resolve.
+        """One batch: shed stale deadlines, cache lookups, ONE serve_batch
+        for the misses, resolve.
 
         Runs under ``_corpus_lock`` so commits never interleave with a
         batch's cache-validate → detect → memoize sequence (the cache entry
-        epoch must match the corpus the engine saw).
+        epoch must match the corpus the engine saw). Every completed batch
+        feeds the latency EWMA (admission control) and the adaptive batch
+        limit; a batch that raises feeds the ``failed_batches`` /
+        ``failed_requests`` counters instead of vanishing from the stats.
         """
+        t_start = self._clock()
+        batch = self._expire_stale(batch)
+        if not batch:
+            return
+        for _, _, t_sub, _ in batch:
+            self.stats.record_wait(t_start - t_sub)
         with self._corpus_lock:
             reqs = [entry[0] for entry in batch]
             responses: list = [None] * len(batch)
@@ -790,26 +1056,38 @@ class DetectionService:
             except Exception as exc:                  # noqa: BLE001
                 # cache hits already have their exact responses in hand —
                 # only the futures waiting on the failed engine pass fail
-                done = time.monotonic()
-                for i, (_, fut, t_sub) in enumerate(batch):
+                done = self._clock()
+                n_failed = 0
+                for i, (_, fut, t_sub, _) in enumerate(batch):
                     if responses[i] is None:
+                        n_failed += 1
                         self._resolve(fut, exc=exc)
                     else:
                         responses[i].latency_s = done - t_sub
                         self._resolve(fut, result=responses[i])
+                self.stats.failed_batches += 1
+                self.stats.failed_requests += n_failed
                 return
             for i, resp in zip(miss_idx, fresh):
                 responses[i] = resp
                 if self.cache is not None:
                     self.cache.put(reqs[i], resp, self.epoch)
-        done = time.monotonic()
-        for (_, fut, t_sub), resp in zip(batch, responses):
+        done = self._clock()
+        missed = 0
+        for (request, fut, t_sub, t_ddl), resp in zip(batch, responses):
             resp.latency_s = done - t_sub
+            if t_ddl is not None and done > t_ddl:
+                missed += 1
             self._resolve(fut, result=resp)
         self.stats.requests += len(batch)
         self.stats.batches += 1
         self.stats.rows += sum(r.n_rows for r in reqs)
         self.stats.host_copy_bytes += fresh[0].host_copy_bytes if fresh else 0
+        # EWMA of batch latency — what admission control predicts waits with
+        dt = done - t_start
+        self._ewma_batch_s = (dt if self._ewma_batch_s <= 0.0
+                              else 0.7 * self._ewma_batch_s + 0.3 * dt)
+        self._adapt_batch_limit(missed)
 
     # -- corpus mutation (DESIGN.md §7) --------------------------------------
 
@@ -898,6 +1176,7 @@ class DetectionService:
                              "epoch": self.epoch, "touched": touched,
                              "logged": self._log is not None and log,
                              "snapshot": snap_path}
+        self._last_retract = None    # LIFO: only the newest mutation unwinds
         return info
 
     def rollback_last_commit(self) -> None:
@@ -947,6 +1226,125 @@ class DetectionService:
                 except OSError:
                     pass
             self._last_commit = None
+
+    # -- source retraction (DESIGN.md §9) ------------------------------------
+
+    def retract(self, row_ids):
+        """Remove committed corpus sources, permanently (DESIGN.md §9).
+
+        ``row_ids`` index the CURRENT corpus rows to drop (a takedown, a
+        poisoned crawl, a revoked source). The retraction compacts the
+        resident corpus, unwinds the rows' membership bits in the committed
+        index, GCs entries left below two providers (no longer *shared*
+        values), re-scores surviving touched entries, re-derives the Ē
+        boundary, eagerly reconciles the result cache (entries sharing a
+        claim key with a retracted row die; survivors lose the columns),
+        bumps the epoch, and — on a durable service — appends a
+        ``RetractRecord`` to the commit log before returning, replayed on
+        ``restore`` exactly like commits. Post-state decisions equal a
+        service rebuilt without the retracted sources, for every mode
+        (asserted by tests/test_retraction.py across all nine).
+
+        Returns the ``RetractInfo`` receipt (None for index-less modes).
+        """
+        with self._corpus_lock:
+            return self._retract_locked(row_ids, log=True)
+
+    def _retract_locked(self, row_ids, *, log: bool = True):
+        """Apply one retraction; caller holds ``_corpus_lock``.
+
+        ``log=False`` is the replay path (``restore``), mirroring
+        ``_commit_locked`` — the retraction being applied already IS a log
+        record.
+        """
+        row_ids = np.unique(np.asarray(row_ids, np.int64).ravel())
+        n_before = self.resident.n_corpus
+        if row_ids.size == 0:
+            raise ValueError("retract: no rows given")
+        if row_ids[0] < 0 or row_ids[-1] >= n_before:
+            raise ValueError(
+                f"retract: row ids must be in [0, {n_before}), got "
+                f"[{row_ids[0]}, {row_ids[-1]}]")
+        # save the rows before they vanish — the rollback receipt restores
+        # them bit-exact, and their claim keys drive cache invalidation
+        saved_values = self.resident.values[row_ids].copy()
+        saved_accuracy = self.resident.accuracy[row_ids].copy()
+        saved_p = self.resident.p_claim[row_ids].copy()
+        touched = claim_value_keys(saved_values)
+        self.resident.retract_rows(row_ids)
+        self.base = self.resident.corpus_view()
+        self.base_p = self.resident.p_claim[: self.resident.n_corpus]
+        info = None
+        if self._index is not None:
+            info = index_retract_rows(self._index, self.base,
+                                      self.engine.cfg, row_ids)
+            self.stats.gc_entries += info.gc_entries
+        self.epoch += 1
+        if self.cache is not None:
+            # eager reconciliation, NOT a touched-log entry: the retraction
+            # renumbers the corpus column axis, so lookup-time replay could
+            # never re-align a surviving entry after the fact
+            self.stats.cache_invalidations += self.cache.apply_retraction(
+                row_ids, touched, n_before)
+        self.stats.retractions += 1
+        self.stats.retracted_rows += int(row_ids.size)
+        snap_path = None
+        if self._log is not None and log:
+            self._log.append(RetractRecord(
+                epoch=self.epoch, row_ids=row_ids, touched_keys=touched,
+                n_before=n_before))
+            every = self.durability.snapshot_every
+            if every and self.epoch % every == 0:
+                snap_path = self._write_snapshot_locked()
+        self._last_retract = {
+            "info": info, "row_ids": row_ids, "n_before": n_before,
+            "epoch": self.epoch, "values": saved_values,
+            "accuracy": saved_accuracy, "p_claim": saved_p,
+            "logged": self._log is not None and log, "snapshot": snap_path}
+        self._last_commit = None     # LIFO: only the newest mutation unwinds
+        return info
+
+    def rollback_last_retract(self) -> None:
+        """Undo the LAST ``retract()``, bit-exact (LIFO only).
+
+        The recovery half of ``ReplicaRouter``'s broadcast protocol for
+        retractions: restores the retracted rows at their original indices
+        (``ResidentCorpus.unretract``), unwinds the index through the same
+        snapshot receipt ``rollback_commit`` uses for commits, drops the
+        epoch, the retraction's log record and any snapshot it triggered.
+        The result cache restarts cold — ``apply_retraction``'s column
+        surgery is not invertible entry-by-entry.
+        """
+        with self._corpus_lock:
+            last = self._last_retract
+            if last is None:
+                raise RuntimeError("no retraction to roll back")
+            if last["epoch"] != self.epoch:
+                raise RuntimeError(
+                    f"rollback_last_retract: last receipt is epoch "
+                    f"{last['epoch']}, service is at {self.epoch} — only the "
+                    f"immediately-preceding retraction can be unwound")
+            info = last["info"]
+            if info is not None:
+                rollback_commit(self._index, info)
+                self.stats.gc_entries -= info.gc_entries
+            self.resident.unretract(last["row_ids"], last["values"],
+                                    last["accuracy"], last["p_claim"])
+            self.base = self.resident.corpus_view()
+            self.base_p = self.resident.p_claim[: self.resident.n_corpus]
+            self.epoch -= 1
+            if self.cache is not None:
+                self.cache.clear()
+            self.stats.retractions -= 1
+            self.stats.retracted_rows -= int(last["row_ids"].size)
+            if last["logged"] and self._log is not None:
+                self._log.rollback_last()
+            if last["snapshot"] is not None:
+                try:
+                    os.remove(last["snapshot"])
+                except OSError:
+                    pass
+            self._last_retract = None
 
     # -- durability (commit log + snapshots, DESIGN.md §8) -------------------
 
@@ -1009,7 +1407,7 @@ class DetectionService:
             "service/p_claim": self.resident.p_claim[:n],
             "service/stats": np.array(
                 [getattr(self.stats, f.name)
-                 for f in dataclasses.fields(ServiceStats)], np.int64),
+                 for f in _stat_counter_fields()], np.int64),
             "service/touched_epochs": np.array(
                 [e for e, _ in self._touched_log], np.int64),
             "service/touched_offsets": np.cumsum(
@@ -1069,7 +1467,8 @@ class DetectionService:
 
         # snapshot-time dynamic state: epoch, stats, touched log, warm cache
         svc.epoch = snap_epoch
-        for f, v in zip(dataclasses.fields(ServiceStats),
+        # zip tolerates snapshots from older builds with fewer counters
+        for f, v in zip(_stat_counter_fields(),
                         np.asarray(arrays["service/stats"], np.int64)):
             setattr(svc.stats, f.name, int(v))
         epochs = np.asarray(arrays["service/touched_epochs"], np.int64)
@@ -1092,6 +1491,20 @@ class DetectionService:
                 raise ReplayDivergenceError(
                     f"log record for epoch {record.epoch} follows service "
                     f"epoch {svc.epoch} — a record is missing")
+            if isinstance(record, RetractRecord):
+                if record.n_before != svc.resident.n_corpus:
+                    raise ReplayDivergenceError(
+                        f"retraction record at epoch {record.epoch} was "
+                        f"logged against {record.n_before} corpus rows, "
+                        f"replay reached it with {svc.resident.n_corpus}")
+                with svc._corpus_lock:
+                    svc._retract_locked(record.row_ids, log=False)
+                if svc.epoch != record.epoch:
+                    raise ReplayDivergenceError(
+                        f"replaying retraction for epoch {record.epoch} "
+                        f"landed on epoch {svc.epoch}")
+                replayed += 1
+                continue
             with svc._corpus_lock:
                 info = svc._commit_locked(
                     record.values, record.accuracy, record.p_claim,
@@ -1106,9 +1519,10 @@ class DetectionService:
                     f"said {record.compacted})")
             replayed += 1
         t_replay = time.perf_counter() - t1
-        # the last replayed commit's rollback receipt is unusable: its log
+        # the last replayed mutation's rollback receipt is unusable: its log
         # record predates this process (rollback could not unwind it there)
         svc._last_commit = None
+        svc._last_retract = None
 
         svc._attach_durability(DurabilityOptions(state_dir=state_dir, **dur))
         svc.restore_info = RestoreInfo(
@@ -1182,19 +1596,79 @@ class DetectionService:
         self.stop()
 
 
-class ReplicaBroadcastError(RuntimeError):
-    """A commit broadcast failed on one replica and was rolled back.
+class CircuitBreaker:
+    """Classic closed → open → half-open breaker around one replica (§9).
 
-    Raised by ``ReplicaRouter.commit`` after every replica that had already
-    applied the commit unwound it (``rollback_last_commit``, LIFO) — the
-    fleet is back at the pre-commit epoch, consistent. ``replica`` is the
-    index of the service that raised; ``__cause__`` carries its exception.
+    ``record_failure`` counts CONSECUTIVE failures; at ``failure_threshold``
+    the breaker trips open and ``allow()`` refuses the protected operation
+    until ``cooldown_s`` elapses, after which ONE probe is admitted
+    (half-open). A half-open failure re-opens immediately (and restarts the
+    cooldown); a success closes the breaker and resets the count. The clock
+    is injectable so fault tests can drive the cooldown deterministically.
     """
 
-    def __init__(self, replica: int, cause: BaseException):
-        super().__init__(
-            f"commit broadcast failed on replica {replica}: {cause!r}; "
-            f"preceding replicas rolled back")
+    def __init__(self, failure_threshold: int = 5, cooldown_s: float = 5.0,
+                 clock=time.monotonic):
+        if failure_threshold < 1:
+            raise ValueError(
+                f"failure_threshold must be ≥ 1, got {failure_threshold}")
+        self.failure_threshold = int(failure_threshold)
+        self.cooldown_s = float(cooldown_s)
+        self._clock = clock
+        self.state = "closed"            # "closed" | "open" | "half-open"
+        self.failures = 0                # consecutive, resets on success
+        self.trips = 0                   # lifetime closed/half-open → open
+        self._opened_at = 0.0
+
+    def allow(self) -> bool:
+        """May the protected operation be attempted right now?
+
+        Closed: yes. Open: no until the cooldown elapses, then the breaker
+        moves to half-open and admits the probe. Half-open: yes (the probe).
+        """
+        if self.state == "open":
+            if self._clock() - self._opened_at < self.cooldown_s:
+                return False
+            self.state = "half-open"
+        return True
+
+    def record_success(self) -> None:
+        """The protected operation succeeded — close and reset the count."""
+        self.failures = 0
+        self.state = "closed"
+
+    def record_failure(self) -> None:
+        """The protected operation failed — count it, trip at threshold.
+
+        A half-open failure trips regardless of the count: the probe just
+        proved the replica is still unhealthy.
+        """
+        self.failures += 1
+        if (self.state == "half-open"
+                or self.failures >= self.failure_threshold):
+            self.trips += 1
+            self.state = "open"
+            self._opened_at = self._clock()
+
+
+class ReplicaBroadcastError(RuntimeError):
+    """A write broadcast failed on one replica and was rolled back.
+
+    Raised by ``ReplicaRouter.commit``/``retract`` after every replica that
+    had already applied the write unwound it (LIFO) — the fleet is back at
+    the pre-write epoch, consistent. ``replica`` is the index of the service
+    that raised (-1 when no replica could accept the write at all);
+    ``__cause__`` carries its exception.
+    """
+
+    def __init__(self, replica: int, cause: Optional[BaseException] = None):
+        if cause is not None:
+            msg = (f"commit broadcast failed on replica {replica}: "
+                   f"{cause!r}; preceding replicas rolled back")
+        else:
+            msg = ("broadcast rejected: every replica's circuit breaker "
+                   "is open — no replica applied the write")
+        super().__init__(msg)
         self.replica = replica
 
 
@@ -1211,20 +1685,33 @@ class ReplicaRouter:
     equal (asserted after each broadcast — the epoch protocol §7 documents).
     A read routed to any replica therefore sees some prefix of the commit
     history, and the responses it returns are exactly the decisions of that
-    epoch's corpus — never a torn mix of two epochs. A replica that raises
-    mid-broadcast triggers LIFO rollback of the replicas that already
-    applied (PR 5's ``rollback_commit`` is bit-exact), so a failed commit
-    leaves the fleet at the pre-commit epoch instead of split-brained;
-    the caller sees one ``ReplicaBroadcastError``.
+    epoch's corpus — never a torn mix of two epochs.
+
+    Failure handling is two-tier (DESIGN.md §9). A replica that raises
+    mid-broadcast *below* its breaker's failure threshold triggers LIFO
+    rollback of the replicas that already applied (bit-exact), so the
+    failed write leaves the fleet at the pre-write epoch instead of
+    split-brained; the caller sees one ``ReplicaBroadcastError``. A replica
+    that keeps failing trips its per-replica ``CircuitBreaker`` and is
+    EJECTED instead: the fleet keeps committing without it, its missed
+    writes queue in a per-replica backlog, reads route around it, and after
+    the breaker cooldown one probe write replays the backlog (catch-up) —
+    on success the replica rejoins with epoch equality, asserted by the
+    post-broadcast check over in-sync replicas.
     """
 
     def __init__(self, base: ClaimsDataset, base_p: np.ndarray,
-                 cfg: CopyConfig, *, n_replicas: int = 2, **service_kw):
+                 cfg: CopyConfig, *, n_replicas: int = 2,
+                 breaker_threshold: int = 5, breaker_cooldown_s: float = 5.0,
+                 **service_kw):
         """Build ``n_replicas`` identical services over one corpus.
 
         A ``durability=DurabilityOptions(...)`` in ``service_kw`` is split
         into per-replica ``replica-<i>/`` subdirectories of its state dir —
         replicas must never interleave records in one commit log.
+        ``breaker_threshold`` consecutive write failures eject a replica
+        (circuit opens); ``breaker_cooldown_s`` later it is probed for
+        recovery.
         """
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be ≥ 1, got {n_replicas}")
@@ -1236,15 +1723,30 @@ class ReplicaRouter:
                 kw["durability"] = dataclasses.replace(
                     dur, state_dir=os.path.join(dur.state_dir, f"replica-{i}"))
             self.replicas.append(DetectionService(base, base_p, cfg, **kw))
+        self.breakers = [
+            CircuitBreaker(breaker_threshold, breaker_cooldown_s)
+            for _ in range(n_replicas)]
+        self._backlogs = [deque() for _ in range(n_replicas)]
         self._rr = 0
         self._route_lock = threading.Lock()
         self._write_lock = threading.Lock()
 
+    def _in_sync(self) -> list:
+        """Replica indices at the fleet epoch: breaker closed, no backlog."""
+        return [i for i in range(len(self.replicas))
+                if self.breakers[i].state == "closed"
+                and not self._backlogs[i]]
+
     def _epoch_locked(self) -> int:
-        """Common epoch check; caller must hold ``_write_lock`` (a read
-        during a commit broadcast would otherwise see a healthy mid-
-        broadcast prefix as divergence)."""
-        epochs = {svc.epoch for svc in self.replicas}
+        """Common epoch check over IN-SYNC replicas; caller must hold
+        ``_write_lock`` (a read during a commit broadcast would otherwise
+        see a healthy mid-broadcast prefix as divergence). An ejected
+        replica is legitimately behind — its backlog measures by how much —
+        so it is excluded until catch-up rejoins it."""
+        sync = self._in_sync()
+        if not sync:
+            raise RuntimeError("no in-sync replica (all circuit-open)")
+        epochs = {self.replicas[i].epoch for i in sync}
         if len(epochs) != 1:
             raise RuntimeError(f"replica epochs diverged: {sorted(epochs)}")
         return epochs.pop()
@@ -1257,47 +1759,124 @@ class ReplicaRouter:
 
     @property
     def stats(self) -> ServiceStats:
-        """Aggregate counters summed over every replica."""
+        """Aggregate counters summed over every replica, plus the router's
+        breaker gauges (``breaker_trips`` lifetime, ``breaker_open`` now)."""
         agg = ServiceStats()
         for svc in self.replicas:
             for f in dataclasses.fields(ServiceStats):
                 setattr(agg, f.name,
                         getattr(agg, f.name) + getattr(svc.stats, f.name))
+        agg.breaker_trips = sum(b.trips for b in self.breakers)
+        agg.breaker_open = sum(1 for b in self.breakers
+                               if b.state != "closed")
         return agg
 
     def submit(self, request: DetectRequest,
                timeout: Optional[float] = 30.0) -> Future:
-        """Route one request to the next replica (round-robin)."""
+        """Route one request to the next IN-SYNC replica (round-robin).
+
+        An ejected replica is missing commits its backlog holds — serving
+        reads from it would answer with a stale corpus, so reads route
+        around open breakers until catch-up rejoins the replica. Raises
+        ``ServiceOverloaded`` when every replica is circuit-open.
+        """
         with self._route_lock:
-            svc = self.replicas[self._rr]
-            self._rr = (self._rr + 1) % len(self.replicas)
+            sync = self._in_sync()
+            if not sync:
+                raise ServiceOverloaded(
+                    "no in-sync replica to serve reads (all circuit-open)")
+            self._rr = self._rr % len(sync)
+            svc = self.replicas[sync[self._rr]]
+            self._rr = (self._rr + 1) % len(sync)
         return svc.submit(request, timeout=timeout)
+
+    def _broadcast(self, op: str, args: tuple, kw: dict) -> list:
+        """Apply one write op to the fleet; caller holds ``_write_lock``.
+
+        Per replica: an open breaker buffers the op in that replica's
+        backlog (it stays ejected); a half-open breaker first replays the
+        backlog (catch-up), then the live op. A failure below the breaker
+        threshold aborts the wave — applied replicas roll back LIFO,
+        tentatively-buffered ops pop back out, ``ReplicaBroadcastError``
+        raises. A failure AT the threshold (or on a probe) ejects the
+        replica instead: the wave continues and succeeds on the healthy
+        rest. If no replica at all applies, the op never happened —
+        buffered copies pop and ``ReplicaBroadcastError(-1)`` raises.
+        """
+        rollback = ("rollback_last_commit" if op == "commit"
+                    else "rollback_last_retract")
+        infos: list = [None] * len(self.replicas)
+        applied: list = []       # replica indices that applied the live op
+        deferred: list = []      # replicas that buffered it this wave
+        for i, svc in enumerate(self.replicas):
+            br = self.breakers[i]
+            if not br.allow():
+                self._backlogs[i].append((op, args, kw))
+                deferred.append(i)
+                continue
+            try:
+                # half-open probe: catch up on the missed writes first, in
+                # order — each success pops, so a mid-catch-up failure
+                # leaves exactly the still-missing suffix queued
+                while self._backlogs[i]:
+                    b_op, b_args, b_kw = self._backlogs[i][0]
+                    getattr(svc, b_op)(*b_args, **b_kw)
+                    self._backlogs[i].popleft()
+                infos[i] = getattr(svc, op)(*args, **kw)
+            except Exception as exc:               # noqa: BLE001
+                br.record_failure()
+                if br.state == "open":
+                    # threshold (or probe) failure: eject, don't abort —
+                    # the fleet keeps accepting writes without this replica
+                    self._backlogs[i].append((op, args, kw))
+                    deferred.append(i)
+                    continue
+                for j in reversed(applied):
+                    getattr(self.replicas[j], rollback)()
+                for j in deferred:
+                    self._backlogs[j].pop()
+                raise ReplicaBroadcastError(i, exc) from exc
+            br.record_success()
+            applied.append(i)
+        if not applied:
+            for j in deferred:
+                self._backlogs[j].pop()
+            raise ReplicaBroadcastError(-1)
+        self._epoch_locked()                       # divergence check
+        return infos
 
     def commit(self, values: np.ndarray, accuracy: np.ndarray,
                p_claim: np.ndarray, *, compact: bool = True) -> list:
         """Broadcast one commit to every replica, serialized (§7 protocol).
 
-        Returns the per-replica ``CommitInfo`` receipts. A replica that
-        raises aborts the broadcast: the replicas that already applied are
-        rolled back in reverse order (``rollback_last_commit`` is LIFO-safe
-        and bit-exact), and ONE ``ReplicaBroadcastError`` surfaces with the
+        Returns per-replica ``CommitInfo`` receipts (None at the index of a
+        replica whose breaker deferred the commit to its backlog). A
+        replica that raises below its breaker threshold aborts the
+        broadcast: the replicas that already applied are rolled back in
+        reverse order (``rollback_last_commit`` is LIFO-safe and
+        bit-exact), and ONE ``ReplicaBroadcastError`` surfaces with the
         failing replica's index and cause — the fleet stays consistent at
-        the pre-commit epoch. The post-broadcast epoch check turns any
-        remaining divergence (a replica that saw a different write order)
-        into a hard error instead of silent split-brain.
+        the pre-commit epoch. A replica that trips its breaker is ejected
+        instead and the commit proceeds on the rest (§9 — see
+        ``_broadcast``). The post-broadcast epoch check turns any remaining
+        divergence among in-sync replicas (a replica that saw a different
+        write order) into a hard error instead of silent split-brain.
         """
         with self._write_lock:
-            infos = []
-            for i, svc in enumerate(self.replicas):
-                try:
-                    infos.append(
-                        svc.commit(values, accuracy, p_claim, compact=compact))
-                except Exception as exc:               # noqa: BLE001
-                    for j in range(len(infos) - 1, -1, -1):
-                        self.replicas[j].rollback_last_commit()
-                    raise ReplicaBroadcastError(i, exc) from exc
-            self._epoch_locked()                       # divergence check
-            return infos
+            return self._broadcast(
+                "commit", (values, accuracy, p_claim), {"compact": compact})
+
+    def retract(self, row_ids) -> list:
+        """Broadcast one source retraction to every replica, serialized.
+
+        Same protocol as ``commit`` — LIFO rollback below the breaker
+        threshold (``rollback_last_retract``), ejection + backlog at it —
+        so retractions interleave with commits in one total write order,
+        which is what keeps every replica's (and the WAL's) mutation
+        history identical. Returns per-replica ``RetractInfo`` receipts.
+        """
+        with self._write_lock:
+            return self._broadcast("retract", (row_ids,), {})
 
     def flush(self) -> int:
         """Drain every replica synchronously; returns requests served."""
@@ -1321,7 +1900,8 @@ class ReplicaRouter:
         self.stop()
 
 
-__all__ = ["DetectRequest", "DetectResponse", "DetectionService",
-           "DurabilityOptions", "ReplicaBroadcastError", "ReplicaRouter",
-           "ResidentCorpus", "ResultCache", "ServiceOverloaded",
-           "ServiceStats", "serve_batch", "INDEXED_MODES"]
+__all__ = ["CircuitBreaker", "DeadlineExceeded", "DetectRequest",
+           "DetectResponse", "DetectionService", "DurabilityOptions",
+           "ReplicaBroadcastError", "ReplicaRouter", "ResidentCorpus",
+           "ResultCache", "ServiceOverloaded", "ServiceStats",
+           "ServiceStopped", "serve_batch", "INDEXED_MODES"]

@@ -372,6 +372,66 @@ class CorpusStore:
             c[n_rows: self.n_rows] = 0
         self.n_rows = n_rows
 
+    def retract_rows(self, row_ids: np.ndarray) -> None:
+        """Physically remove ARBITRARY live rows (source retraction, §7).
+
+        Unlike ``truncate_rows`` (trailing slack only), this deletes
+        committed rows anywhere in the live range: every chunk is replaced
+        by a fresh array holding the surviving rows compacted upward, so the
+        row axis stays dense and ``n_rows`` drops by ``len(row_ids)``.
+        Capacity is preserved. The OLD chunk arrays are never written — a
+        pre-retraction ``snapshot()``'s refs stay bit-exact for rollback.
+        Bumps ``epoch``. Membership/GC bookkeeping (entries that drop below
+        two providers) is the caller's job (``index.retract_rows``).
+        """
+        row_ids = np.unique(np.asarray(row_ids, np.int64))
+        if len(row_ids) == 0:
+            return
+        if row_ids[0] < 0 or row_ids[-1] >= self.n_rows:
+            raise ValueError(
+                f"retract_rows: ids out of range [0, {self.n_rows})")
+        keep = np.ones(self.n_rows, bool)
+        keep[row_ids] = False
+        n_keep = int(keep.sum())
+        for c in range(self.n_chunks):
+            blk = np.zeros((self.capacity, self.chunks[c].shape[1]), np.int8)
+            blk[:n_keep] = self.chunks[c][: self.n_rows][keep]
+            self.chunks[c] = blk
+        self.n_rows = n_keep
+        self.epoch += 1
+
+    def deactivate_entries(self, entry_ids: np.ndarray) -> None:
+        """Turn entry columns into inert padding (retraction GC, §7).
+
+        A retracted source can leave an entry with < 2 providers — no longer
+        a *shared* value (Def. 3.2), so it must leave the index exactly as a
+        rebuild would drop it. The column's incidence is zeroed and its
+        metadata set to the padding convention (item/value −1, p/score 0);
+        every consumer already skips padding columns. Copy-on-write on both
+        the affected chunks and the metadata arrays, so a snapshot taken
+        before stays valid. Bumps ``epoch``.
+        """
+        entry_ids = np.asarray(entry_ids, np.int64)
+        if len(entry_ids) == 0:
+            return
+        w = self.chunk_entries
+        for cid in np.unique(entry_ids // w):
+            cols = entry_ids[entry_ids // w == cid] - cid * w
+            blk = self.chunks[cid].copy()
+            blk[:, cols] = 0
+            self.chunks[int(cid)] = blk
+        item = self.entry_item.copy()
+        value = self.entry_value.copy()
+        p = self.entry_p.copy()
+        score = self.entry_score.copy()
+        item[entry_ids] = -1
+        value[entry_ids] = -1
+        p[entry_ids] = 0.0
+        score[entry_ids] = 0.0
+        self.entry_item, self.entry_value = item, value
+        self.entry_p, self.entry_score = p, score
+        self.epoch += 1
+
     # -- entry mutation (delta chunks, DESIGN.md §7) -------------------------
 
     def _pad_last_chunk_full(self) -> None:

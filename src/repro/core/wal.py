@@ -64,9 +64,10 @@ _REC_HEADER = struct.Struct("<4sHHII")
 #: CRC32 of the payload u32 — 20 bytes, little-endian.
 _SNAP_HEADER = struct.Struct("<4sHHQI")
 
-#: Record types. COMMIT is the only type today; the field exists so future
-#: markers (retraction, shard handoff) extend the log without re-versioning.
+#: Record types. The type field lets markers (retraction, shard handoff)
+#: extend the log without re-versioning; readers skip unknown types.
 REC_COMMIT = 1
+REC_RETRACT = 2
 
 LOG_NAME = "commits.wal"
 MANIFEST_NAME = "manifest.json"
@@ -161,6 +162,8 @@ def _decode_arrays(payload: bytes) -> dict:
 class CommitRecord:
     """One decoded commit-log record (see ``CommitLog`` for the framing)."""
 
+    rec_type = REC_COMMIT         # header type field for this record class
+
     epoch: int                    # service epoch AFTER this commit applied
     values: np.ndarray            # (q, D) int32 — the accepted rows
     accuracy: np.ndarray          # (q,) float32
@@ -189,6 +192,41 @@ class CommitRecord:
                    accuracy=d["accuracy"], p_claim=d["p_claim"],
                    touched_keys=d["touched_keys"], compact=bool(meta[1]),
                    compacted=bool(meta[2]))
+
+
+@dataclass
+class RetractRecord:
+    """One decoded retraction record (``REC_RETRACT``, DESIGN.md §9).
+
+    A retraction drops committed sources; replay applies it through the
+    exact live path (``DetectionService._retract_locked``), so the record
+    only needs the row identities — ``row_ids`` in the corpus row coordinates
+    of the PRE-retraction epoch — plus the invariants replay asserts against
+    (``n_before``) and the invalidation currency (``touched_keys``).
+    """
+
+    rec_type = REC_RETRACT        # header type field for this record class
+
+    epoch: int                    # service epoch AFTER this retraction
+    row_ids: np.ndarray           # (k,) int64 — retracted corpus rows
+    touched_keys: np.ndarray      # sorted int64 claim keys of those rows
+    n_before: int                 # corpus rows BEFORE the retraction
+
+    def payload(self) -> bytes:
+        """Encode this record's fields to the framed npz payload."""
+        return _encode_arrays({
+            "row_ids": np.asarray(self.row_ids, np.int64),
+            "touched_keys": np.asarray(self.touched_keys, np.int64),
+            "meta": np.array([self.epoch, self.n_before], np.int64),
+        })
+
+    @classmethod
+    def from_payload(cls, payload: bytes) -> "RetractRecord":
+        """Decode a framed npz payload back into a record."""
+        d = _decode_arrays(payload)
+        meta = d["meta"]
+        return cls(epoch=int(meta[0]), row_ids=d["row_ids"],
+                   touched_keys=d["touched_keys"], n_before=int(meta[1]))
 
 
 class CommitLog:
@@ -222,11 +260,12 @@ class CommitLog:
         self._f = open(path, "ab")
         self._last_offset: Optional[int] = None
 
-    def append(self, record: CommitRecord) -> int:
-        """Append one record; returns bytes written. Durable per the fsync
-        policy before returning (the commit's durability point)."""
+    def append(self, record) -> int:
+        """Append one record (``CommitRecord`` or ``RetractRecord``); returns
+        bytes written. Durable per the fsync policy before returning (the
+        mutation's durability point)."""
         payload = record.payload()
-        header = _REC_HEADER.pack(_REC_MAGIC, WAL_VERSION, REC_COMMIT,
+        header = _REC_HEADER.pack(_REC_MAGIC, WAL_VERSION, record.rec_type,
                                   len(payload), zlib.crc32(payload))
         self._last_offset = self._f.tell()
         self._f.write(header)
@@ -289,6 +328,8 @@ class CommitLog:
                 break
             if rec_type == REC_COMMIT:
                 records.append(CommitRecord.from_payload(payload))
+            elif rec_type == REC_RETRACT:
+                records.append(RetractRecord.from_payload(payload))
             # unknown record types from same-version writers are skipped,
             # not fatal — forward-compatible markers
             off = end
@@ -310,7 +351,7 @@ class CommitLog:
                             discarded_bytes=discarded)
 
     @staticmethod
-    def read(path: str) -> Iterator[CommitRecord]:
+    def read(path: str) -> Iterator:
         """Iterate the valid records of the log (torn tail silently ignored —
         run ``recover`` first when the truncation must be made durable)."""
         records, _, _ = CommitLog.scan(path)
@@ -438,8 +479,9 @@ def read_manifest(state_dir: str) -> dict:
 
 __all__ = [
     "CommitLog", "CommitRecord", "DurabilityOptions", "NoValidSnapshotError",
-    "RecoveryInfo", "ReplayDivergenceError", "RestoreInfo", "WalError",
-    "LOG_NAME", "MANIFEST_NAME", "MANIFEST_VERSION", "SNAPSHOT_VERSION",
-    "WAL_VERSION", "latest_valid_snapshot", "list_snapshots", "load_snapshot",
-    "read_manifest", "snapshot_path", "write_manifest", "write_snapshot",
+    "RecoveryInfo", "ReplayDivergenceError", "RestoreInfo", "RetractRecord",
+    "WalError", "LOG_NAME", "MANIFEST_NAME", "MANIFEST_VERSION",
+    "SNAPSHOT_VERSION", "WAL_VERSION", "latest_valid_snapshot",
+    "list_snapshots", "load_snapshot", "read_manifest", "snapshot_path",
+    "write_manifest", "write_snapshot",
 ]

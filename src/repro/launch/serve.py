@@ -28,6 +28,20 @@
       re-index/compaction counters) are printed. --replicas N serves through
       a ReplicaRouter with epoch-consistent commit broadcast.
 
+      --deadline-s attaches a per-request deadline (DESIGN.md §9): requests
+      the admission controller predicts cannot be served in time are shed
+      at submit, queued requests whose deadline passes expire typed, and
+      the adaptive batch limit shrinks under pressure. Queue-wait
+      percentiles, shed/expired counts, and the final batch limit are
+      printed. --breaker-threshold / --breaker-cooldown-s tune the
+      per-replica commit circuit breaker when --replicas > 1.
+
+      --retract-last N retracts the N newest corpus rows after the serve
+      (and after --commit-accepted, if given) and prints the retraction
+      receipt — rows unwound, index entries touched/GC'd, cache
+      invalidations — demonstrating the membership-unwind path without a
+      rebuild.
+
       --state-dir makes the service durable (DESIGN.md §8, OPERATIONS.md):
       commits append to a fsync'd commit log and full snapshots land every
       --snapshot-every commits. When the directory already holds a manifest
@@ -79,7 +93,13 @@ def serve_detect(args):
     import jax
     import numpy as np
     from repro.core import CopyConfig, DurabilityOptions
-    from repro.core.serving import DetectRequest, DetectionService, ReplicaRouter
+    from repro.core.serving import (
+        DeadlineExceeded,
+        DetectRequest,
+        DetectionService,
+        ReplicaRouter,
+        ServiceOverloaded,
+    )
     from repro.data.claims import (
         SyntheticSpec,
         oracle_claim_probs,
@@ -99,7 +119,8 @@ def serve_detect(args):
     requests = [
         DetectRequest(rid=i, values=vals[i * q:(i + 1) * q],
                       accuracy=acc[i * q:(i + 1) * q],
-                      p_claim=pq[i * q:(i + 1) * q])
+                      p_claim=pq[i * q:(i + 1) * q],
+                      deadline_s=args.deadline_s)
         for i in range(args.requests)
     ]
     service_kw = dict(
@@ -123,6 +144,8 @@ def serve_detect(args):
               f"corpus {svc.resident.n_corpus} sources at epoch {svc.epoch}")
     elif args.replicas > 1:
         svc = ReplicaRouter(sc.dataset, p, cfg, n_replicas=args.replicas,
+                            breaker_threshold=args.breaker_threshold,
+                            breaker_cooldown_s=args.breaker_cooldown_s,
                             **service_kw)
     else:
         svc = DetectionService(sc.dataset, p, cfg, **service_kw)
@@ -150,31 +173,56 @@ def serve_detect(args):
     # the printed passes/mean-batch describe only the timed run
     n_warm = max(1, min(args.batch_requests, args.max_pending_rows // q))
     for r in requests[:n_warm]:
-        svc.submit(r)
+        # deadline-free clone: a tight --deadline-s must not shed the
+        # warm-up, whose whole point is to absorb JIT compilation
+        svc.submit(DetectRequest(rid=f"warm-{r.rid}", values=r.values,
+                                 accuracy=r.accuracy, p_claim=r.p_claim))
     svc.flush()
     _reset(svc)
 
+    shed = expired = 0
     t0 = time.perf_counter()
     with svc:
-        futs = [svc.submit(r) for r in requests]
-        results = [f.result() for f in futs]
+        pairs = []
+        for r in requests:
+            try:
+                pairs.append((r, svc.submit(r)))
+            except (DeadlineExceeded, ServiceOverloaded):
+                shed += 1
+        served, results = [], []
+        for r, f in pairs:
+            try:
+                results.append(f.result())
+                served.append(r)
+            except DeadlineExceeded:
+                expired += 1
     dt = time.perf_counter() - t0
 
-    lat = np.array([r.latency_s for r in results])
     hits = planted = 0
-    for i, resp in enumerate(results):
+    for r, resp in zip(served, results):
         for row in range(q):
-            o = int(origins[i * q + row])
+            o = int(origins[r.rid * q + row])
             if o >= 0:
                 planted += 1
                 hits += int(resp.copying[row, o])
-    print(f"[serve] {len(results)} requests in {dt:.2f}s "
+    print(f"[serve] {len(results)}/{len(requests)} requests in {dt:.2f}s "
           f"({len(results) / dt:.1f} req/s), "
           f"{svc.stats.batches} engine passes "
           f"(mean batch {svc.stats.mean_batch:.1f})")
-    print(f"[serve] latency p50={np.percentile(lat, 50) * 1e3:.0f} ms "
-          f"p99={np.percentile(lat, 99) * 1e3:.0f} ms; "
-          f"planted copiers detected {hits}/{planted}")
+    if results:
+        lat = np.array([r.latency_s for r in results])
+        print(f"[serve] latency p50={np.percentile(lat, 50) * 1e3:.0f} ms "
+              f"p99={np.percentile(lat, 99) * 1e3:.0f} ms; "
+              f"planted copiers detected {hits}/{planted}")
+    if args.deadline_s is not None:
+        st = svc.stats
+        limits = [s._batch_limit for s in _services(svc)]
+        print(f"[serve] deadline {args.deadline_s * 1e3:.0f} ms: "
+              f"{shed} shed at submit, {expired} expired in queue; "
+              f"queue wait p50={st.queue_wait_p50 * 1e3:.0f} ms "
+              f"p99={st.queue_wait_p99 * 1e3:.0f} ms; "
+              f"batch limit {max(limits)} "
+              f"({st.batch_shrinks} shrinks, {st.batch_grows} grows)")
 
     if args.commit_accepted:
         # fold the ACCEPTED rows into the live corpus — rows detection
@@ -183,7 +231,7 @@ def serve_detect(args):
         # claims no commit touched come straight from the result cache
         t0 = time.perf_counter()
         n_acc = 0
-        for r, resp in zip(requests, results):
+        for r, resp in zip(served, results):
             keep = ~resp.copying.any(axis=1) & ~resp.intra_copying.any(axis=1)
             if keep.any():
                 svc.commit(r.values[keep], r.accuracy[keep], r.p_claim[keep])
@@ -191,8 +239,17 @@ def serve_detect(args):
         t_commit = time.perf_counter() - t0
         t0 = time.perf_counter()
         with svc:
-            futs = [svc.submit(r) for r in requests]
-            [f.result() for f in futs]
+            futs = []
+            for r in requests:
+                try:
+                    futs.append(svc.submit(r))
+                except (DeadlineExceeded, ServiceOverloaded):
+                    pass
+            for f in futs:
+                try:
+                    f.result()
+                except DeadlineExceeded:
+                    pass
         t_wave2 = time.perf_counter() - t0
         st = svc.stats
         corpus_rows = max(s.resident.n_corpus for s in _services(svc))
@@ -207,6 +264,26 @@ def serve_detect(args):
               f"new_entries={st.new_entries}, "
               f"reindexed_entries={st.reindexed_entries}, "
               f"compactions={st.compactions}")
+
+    if args.retract_last:
+        n = max(s.resident.n_corpus for s in _services(svc))
+        k = min(args.retract_last, n - 1)
+        row_ids = list(range(n - k, n))
+        t0 = time.perf_counter()
+        out = svc.retract(row_ids)
+        t_retract = time.perf_counter() - t0
+        info = (next(i for i in out if i is not None)
+                if isinstance(out, list) else out)
+        st = svc.stats
+        print(f"[serve] retracted {info.rows} newest rows in "
+              f"{t_retract * 1e3:.1f} ms: {info.touched_entries} index "
+              f"entries re-scored, {info.gc_entries} GC'd, "
+              f"{st.cache_invalidations} cache invalidations; corpus now "
+              f"{max(s.resident.n_corpus for s in _services(svc))} sources "
+              f"at epoch {max(s.epoch for s in _services(svc))}")
+        if args.replicas > 1:
+            print(f"[serve] breaker: trips={st.breaker_trips} "
+                  f"open_now={st.breaker_open}")
 
 
 def main():
@@ -236,9 +313,23 @@ def main():
                          "request's rows into the live corpus (delta-chunk "
                          "re-index) and re-serve the wave; prints "
                          "ServiceStats incl. cache hit rate")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request deadline in seconds: hopeless "
+                         "requests are shed at submit, stale queued ones "
+                         "expire typed (DESIGN.md §9)")
+    ap.add_argument("--retract-last", type=int, default=0,
+                    help="after serving, retract the N newest corpus rows "
+                         "and print the retraction receipt")
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through a ReplicaRouter with this many "
                          "DetectionService replicas (commits broadcast)")
+    ap.add_argument("--breaker-threshold", type=int, default=5,
+                    help="consecutive commit failures before a replica's "
+                         "circuit breaker opens and it is ejected from "
+                         "the broadcast (--replicas > 1)")
+    ap.add_argument("--breaker-cooldown-s", type=float, default=5.0,
+                    help="seconds an open breaker waits before probing "
+                         "the replica with a catch-up replay")
     ap.add_argument("--state-dir", default=None,
                     help="durable state directory (commit log + snapshots); "
                          "restored from when it already holds a manifest")

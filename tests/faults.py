@@ -1,0 +1,117 @@
+"""Fault-injection harness for traffic-hardening tests (DESIGN.md §9).
+
+Three injectable faults, matching the failure modes the serving layer
+hardens against:
+
+- ``failing_writes(svc, n)`` — the replica's ``commit``/``retract`` raise
+  ``InjectedFault`` for the next ``n`` calls (a crashed disk, a wedged
+  replica): drives the router's circuit breaker through closed → open →
+  half-open → closed.
+- ``slow_passes(delay_s)`` — every ``serve_batch`` engine pass takes at
+  least ``delay_s`` longer (an overloaded accelerator): drives deadline
+  misses, admission-control shedding, and adaptive batch shrinking.
+- ``FakeClock`` / ``skewed_clock(svc, skew_s)`` — a deterministic manual
+  clock, or a skewed offset over the real one, for the service's
+  injectable ``_clock``: deadline logic is tested without real sleeps.
+
+All helpers are context managers that restore the patched attribute on
+exit, so tests compose them freely. ``benchmarks/run.py`` loads this
+module by path for the ``overload`` scenario's degraded-replica leg.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+import repro.core.serving as serving_mod
+
+
+class InjectedFault(RuntimeError):
+    """The exception injected faults raise — typed, so a test can tell an
+    injected failure from a real one leaking out of the code under test."""
+
+
+class FakeClock:
+    """Deterministic, manually advanced monotonic clock.
+
+    Drop-in for ``DetectionService._clock`` / ``CircuitBreaker``'s clock:
+    calling it returns the current reading; ``advance`` moves time forward.
+    """
+
+    def __init__(self, start: float = 0.0):
+        self.now = float(start)
+
+    def __call__(self) -> float:
+        return self.now
+
+    def advance(self, dt: float) -> float:
+        """Move the clock forward by ``dt`` seconds; returns the new now."""
+        self.now += float(dt)
+        return self.now
+
+
+@contextlib.contextmanager
+def failing_writes(svc, n: int = 10 ** 9):
+    """Make ``svc.commit`` / ``svc.retract`` raise for the next ``n`` calls.
+
+    Yields the mutable state dict (``state["left"]`` is the remaining
+    failure budget — a test can zero it to heal the replica mid-run, or
+    read it to count injected failures). Restores the original methods on
+    exit.
+    """
+    state = {"left": int(n), "injected": 0}
+    orig = {"commit": svc.commit, "retract": svc.retract}
+
+    def _make(op):
+        def call(*args, **kw):
+            if state["left"] > 0:
+                state["left"] -= 1
+                state["injected"] += 1
+                raise InjectedFault(f"injected {op} fault")
+            return orig[op](*args, **kw)
+        return call
+
+    svc.commit = _make("commit")
+    svc.retract = _make("retract")
+    try:
+        yield state
+    finally:
+        svc.commit, svc.retract = orig["commit"], orig["retract"]
+
+
+@contextlib.contextmanager
+def slow_passes(delay_s: float):
+    """Every ``serve_batch`` engine pass sleeps ``delay_s`` first.
+
+    Patches the module-level ``serve_batch`` that ``_run_batch`` resolves
+    at call time, so the added latency lands INSIDE the service's batch
+    timing — the EWMA, deadline checks, and adaptive batch limit all see
+    it, exactly like a genuinely slow engine.
+    """
+    orig = serving_mod.serve_batch
+
+    def slow(*args, **kw):
+        time.sleep(delay_s)
+        return orig(*args, **kw)
+
+    serving_mod.serve_batch = slow
+    try:
+        yield
+    finally:
+        serving_mod.serve_batch = orig
+
+
+@contextlib.contextmanager
+def skewed_clock(svc, skew_s: float):
+    """Offset the service's deadline clock by ``skew_s`` seconds.
+
+    Models a client whose deadline arithmetic disagrees with the server's
+    clock — the service's admission and expiry decisions shift by the skew
+    while wall time does not.
+    """
+    orig = svc._clock
+    svc._clock = lambda: orig() + skew_s
+    try:
+        yield
+    finally:
+        svc._clock = orig

@@ -1,0 +1,322 @@
+"""ISSUE 7 acceptance: traffic hardening under overload (DESIGN.md §9).
+
+Deadline propagation (admission shed → queue expiry → post-pass miss),
+the adaptive batch limit, failed-pass accounting, the per-replica circuit
+breaker's full closed → open → half-open → closed cycle with backlog
+catch-up, and the stop()-vs-submitters race — all driven through the
+tests/faults.py injection harness, no real overload required.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import faults
+from repro.core import CopyConfig
+from repro.core.serving import (
+    CircuitBreaker,
+    DeadlineExceeded,
+    DetectRequest,
+    DetectionService,
+    ReplicaBroadcastError,
+    ReplicaRouter,
+    ServiceOverloaded,
+    ServiceStopped,
+)
+from repro.data.claims import (
+    SyntheticSpec,
+    oracle_claim_probs,
+    synthetic_claims,
+    synthetic_query_rows,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+
+@pytest.fixture(scope="module")
+def world():
+    sc = synthetic_claims(SyntheticSpec(n_sources=48, n_items=240,
+                                        coverage="stock", n_cliques=3, seed=4))
+    p = oracle_claim_probs(sc)
+    vals, acc, pq, _ = synthetic_query_rows(sc, 3, seed=6)
+    return sc, p, (vals, acc, pq)
+
+
+def _req(world, rid, deadline_s=None):
+    _, _, (vals, acc, pq) = world
+    return DetectRequest(rid=rid, values=vals, accuracy=acc, p_claim=pq,
+                         deadline_s=deadline_s)
+
+
+def _svc(world, **kw):
+    sc, p, _ = world
+    kw.setdefault("mode", "bucketed")
+    kw.setdefault("tile", 64)
+    return DetectionService(sc.dataset, p, CFG, **kw)
+
+
+# ---------------------------------------------------------------------------
+# deadlines: queue expiry, admission control, wait percentiles
+# ---------------------------------------------------------------------------
+
+def test_deadline_expires_while_queued(world):
+    """A request whose deadline passes in the queue is shed at batch start
+    with a typed error — it never rides (and slows) the engine pass."""
+    svc = _svc(world)
+    clock = faults.FakeClock()
+    svc._clock = clock
+    f_ddl = svc.submit(_req(world, "ddl", deadline_s=1.0))
+    f_free = svc.submit(_req(world, "free"))
+    clock.advance(2.0)
+    svc.flush()
+    with pytest.raises(DeadlineExceeded, match="queued"):
+        f_ddl.result(timeout=5)
+    assert f_free.result(timeout=5).rid == "free"
+    assert svc.stats.expired == 1
+    assert svc.stats.rejected == 0          # expiry is not backpressure
+    assert svc.stats.requests == 1          # only the live request served
+
+
+def test_admission_control_sheds_on_arrival(world):
+    """When the latency EWMA predicts the deadline cannot hold, submit
+    raises immediately — the queue never sees the request."""
+    svc = _svc(world, max_batch_requests=2)
+    svc._ewma_batch_s = 1.0                  # as if batches take 1s
+    queued = [svc.submit(_req(world, f"q{i}")) for i in range(2)]
+    # one batch ahead + own pass → ~2s predicted; a 0.5s deadline is hopeless
+    with pytest.raises(DeadlineExceeded, match="shed on arrival"):
+        svc.submit(_req(world, "doomed", deadline_s=0.5))
+    assert svc.stats.shed == 1
+    # a generous deadline is admitted despite the same queue
+    ok = svc.submit(_req(world, "patient", deadline_s=60.0))
+    svc.flush()
+    assert all(f.result(timeout=5) for f in queued)
+    assert ok.result(timeout=5).rid == "patient"
+    # with no estimate yet, admission stands down instead of shedding blind
+    svc2 = _svc(world)
+    assert svc2._admission_wait_estimate() == 0.0
+
+
+def test_queue_wait_percentiles_recorded(world):
+    svc = _svc(world)
+    assert svc.stats.queue_wait_p50 == 0.0 == svc.stats.queue_wait_p99
+    futs = [svc.submit(_req(world, i)) for i in range(3)]
+    svc.flush()
+    [f.result(timeout=5) for f in futs]
+    assert len(svc.stats.queue_wait_samples) == 3
+    assert svc.stats.queue_wait_p99 >= svc.stats.queue_wait_p50 >= 0.0
+
+
+def test_clock_jump_expires_typed_not_hung(world):
+    """tests/faults.py skew: a forward clock jump between submit and drain
+    expires queued deadlines as typed errors — never a wedged future."""
+    svc = _svc(world)
+    fut = svc.submit(_req(world, "jump", deadline_s=5.0))
+    with faults.skewed_clock(svc, 60.0):
+        svc.flush()
+    with pytest.raises(DeadlineExceeded):
+        fut.result(timeout=5)
+    assert svc.stats.expired == 1
+
+
+# ---------------------------------------------------------------------------
+# adaptive batch limit + failed-pass accounting
+# ---------------------------------------------------------------------------
+
+def test_adaptive_batch_shrinks_on_miss_then_regrows(world):
+    svc = _svc(world, max_batch_requests=4)
+    clock = faults.FakeClock()
+    svc._clock = clock
+    import repro.core.serving as serving_mod
+    orig = serving_mod.serve_batch
+
+    def ticking(*a, **kw):                   # the pass takes 1 fake second
+        clock.advance(1.0)
+        return orig(*a, **kw)
+
+    serving_mod.serve_batch = ticking
+    try:
+        # alive at batch start, missed after the pass → multiplicative shrink
+        fut = svc.submit(_req(world, "miss", deadline_s=0.5))
+        svc.flush()
+        fut.result(timeout=5)                # a miss still gets its answer
+        assert svc._batch_limit == 2 and svc.stats.batch_shrinks == 1
+        assert svc._ewma_batch_s > 0.0
+        # deadline-clean batches regrow the limit additively (every 4th)
+        for i in range(8):
+            svc.submit(_req(world, f"ok{i}"))
+            svc.flush()
+        assert svc._batch_limit > 2
+        assert svc.stats.batch_grows >= 1
+    finally:
+        serving_mod.serve_batch = orig
+
+
+def test_failed_pass_counts_failed_stats(world):
+    """The PR-6 blind spot: a failing engine pass must show up in stats."""
+    svc = _svc(world)
+    import repro.core.serving as serving_mod
+    orig = serving_mod.serve_batch
+
+    def boom(*a, **kw):
+        raise RuntimeError("engine on fire")
+
+    serving_mod.serve_batch = boom
+    try:
+        futs = [svc.submit(_req(world, i)) for i in range(2)]
+        svc.flush()
+    finally:
+        serving_mod.serve_batch = orig
+    for f in futs:
+        with pytest.raises(RuntimeError, match="on fire"):
+            f.result(timeout=5)
+    assert svc.stats.failed_batches == 1
+    assert svc.stats.failed_requests == 2
+    assert svc.stats.requests == 0           # failures are not successes
+
+
+# ---------------------------------------------------------------------------
+# circuit breaker: unit cycle + router protocol under injected faults
+# ---------------------------------------------------------------------------
+
+def test_breaker_state_machine():
+    clock = faults.FakeClock()
+    br = CircuitBreaker(failure_threshold=3, cooldown_s=10.0, clock=clock)
+    assert br.allow() and br.state == "closed"
+    br.record_failure(); br.record_failure()
+    assert br.allow()                        # below threshold: still closed
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1 and not br.allow()
+    clock.advance(9.9)
+    assert not br.allow()                    # cooldown not elapsed
+    clock.advance(0.2)
+    assert br.allow() and br.state == "half-open"
+    br.record_failure()                      # probe failed: re-open, re-trip
+    assert br.state == "open" and br.trips == 2 and not br.allow()
+    clock.advance(10.1)
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+    with pytest.raises(ValueError, match="threshold"):
+        CircuitBreaker(failure_threshold=0)
+
+
+def test_router_breaker_ejects_and_replica_rejoins(world):
+    sc, p, _ = world
+    rng = np.random.default_rng(9)
+    c = lambda: (rng.integers(0, 3, (1, sc.dataset.n_items)).astype(np.int32),
+                 rng.uniform(0.5, 0.9, 1).astype(np.float32),
+                 rng.uniform(0.2, 0.8, (1, sc.dataset.n_items)).astype(np.float32))
+    router = ReplicaRouter(sc.dataset, p, CFG, n_replicas=2, mode="bucketed",
+                           tile=64, breaker_threshold=2,
+                           breaker_cooldown_s=10.0)
+    clock = faults.FakeClock()
+    router.breakers[1]._clock = clock
+    with faults.failing_writes(router.replicas[1]) as fault:
+        # failure 1 (below threshold): classic abort — fleet rolled back
+        with pytest.raises(ReplicaBroadcastError) as ei:
+            router.commit(*c())
+        assert ei.value.replica == 1
+        assert isinstance(ei.value.__cause__, faults.InjectedFault)
+        assert router.epoch == 0
+        # failure 2 (threshold): replica ejected, fleet commits without it
+        infos = router.commit(*c())
+        assert infos[0] is not None and infos[1] is None
+        assert router.epoch == 1 and router.replicas[1].epoch == 0
+        st = router.stats
+        assert st.breaker_trips == 1 and st.breaker_open == 1
+        # while open (cooldown pending): writes buffer, reads route around
+        router.retract([3])
+        assert router.epoch == 2 and len(router._backlogs[1]) == 2
+        fut = router.submit(_req(world, "read"))
+        router.replicas[0].flush()
+        assert fut.result(timeout=5).copying.shape[1] == \
+            router.replicas[0].resident.n_corpus
+        fault["left"] = 0                    # replica healed
+    clock.advance(11.0)                      # cooldown elapses → probe
+    router.commit(*c())                      # catch-up: 2 backlog ops + live
+    assert router.replicas[1].epoch == router.replicas[0].epoch == 3
+    assert router.stats.breaker_open == 0
+    assert not router._backlogs[1]
+    # two commits landed (the first aborted), one retraction: 48 + 2 - 1
+    assert {svc.resident.n_corpus for svc in router.replicas} == \
+        {sc.dataset.n_sources + 2 - 1}
+
+
+def test_router_all_open_is_typed(world):
+    sc, p, _ = world
+    rng = np.random.default_rng(11)
+    vals = rng.integers(0, 3, (1, sc.dataset.n_items)).astype(np.int32)
+    acc = np.array([0.7], np.float32)
+    pc = rng.uniform(0.2, 0.8, (1, sc.dataset.n_items)).astype(np.float32)
+    router = ReplicaRouter(sc.dataset, p, CFG, n_replicas=1, mode="bucketed",
+                           tile=64, breaker_threshold=1,
+                           breaker_cooldown_s=1e9)
+    with faults.failing_writes(router.replicas[0]):
+        # threshold=1 trips instantly; the sole replica ejected means NO
+        # replica applied — the write never happened, and the tentative
+        # backlog copy is popped back out
+        with pytest.raises(ReplicaBroadcastError):
+            router.commit(vals, acc, pc)
+    assert not router._backlogs[0]
+    assert router.breakers[0].state == "open"
+    # breaker open, nothing in sync: writes and reads both refuse, typed
+    with pytest.raises(ReplicaBroadcastError, match="circuit breaker"):
+        router.commit(vals, acc, pc)
+    with pytest.raises(ServiceOverloaded, match="in-sync"):
+        router.submit(_req(world, "r"))
+    with pytest.raises(RuntimeError, match="no in-sync"):
+        _ = router.epoch
+
+
+# ---------------------------------------------------------------------------
+# stop() vs blocked submitters and a mid-flight batch
+# ---------------------------------------------------------------------------
+
+def test_stop_race_no_stranded_futures(world):
+    """stop() while submitters are blocked on backpressure and a batch is
+    mid-flight: every submit either returns a future that resolves or
+    raises a typed rejection — no deadlock, nothing stranded."""
+    svc = _svc(world, max_batch_requests=2, max_pending_rows=9)
+    futures, errors = [], []
+    lock = threading.Lock()
+
+    def submitter(k):
+        for j in range(4):
+            try:
+                fut = svc.submit(_req(world, f"{k}-{j}"), timeout=5.0)
+                with lock:
+                    futures.append(fut)
+            except (ServiceStopped, ServiceOverloaded) as exc:
+                with lock:
+                    errors.append(exc)
+
+    with faults.slow_passes(0.05):
+        svc.start()
+        threads = [threading.Thread(target=submitter, args=(k,))
+                   for k in range(6)]
+        for t in threads:
+            t.start()
+        time.sleep(0.15)                     # mid-flight batch guaranteed
+        svc.stop()
+        for t in threads:
+            t.join(timeout=30)
+            assert not t.is_alive(), "submitter deadlocked across stop()"
+    svc.flush()          # drain submits that landed after the stop settled
+    assert len(futures) + len(errors) == 24
+    for fut in futures:
+        assert fut.done(), "future stranded past stop()+flush()"
+        assert fut.result(timeout=0).copying is not None
+    assert all(isinstance(e, (ServiceStopped, ServiceOverloaded))
+               for e in errors)
+    # at least the mid-flight batch's requests actually resolved
+    assert len(futures) > 0
+
+
+def test_submit_after_stopping_flag_is_typed(world):
+    svc = _svc(world)
+    svc._stopping = True
+    with pytest.raises(ServiceStopped, match="stopping"):
+        svc.submit(_req(world, "late"))
+    svc._stopping = False

@@ -1,0 +1,238 @@
+"""ISSUE 7 acceptance: retract-then-detect decisions equal a rebuild of the
+service without the retracted sources — every engine mode — including after
+a kill/restore that replays the retraction from the WAL.
+
+Mirrors tests/test_mutation_modes.py: the nine-mode matrix runs in one
+subprocess with 8 virtual devices at the INDEX level (commit, retract, then
+compare the committed-and-retracted index against ``build_index`` over the
+surviving claims). Service-level behavior — resident compaction, eager
+cache reconciliation, the WAL ``RetractRecord``, LIFO rollback — is pinned
+in-process on the servable modes.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    ClaimsDataset,
+    CopyConfig,
+    DetectionService,
+    DetectRequest,
+    DurabilityOptions,
+    RetractRecord,
+)
+from repro.core.wal import CommitLog, LOG_NAME
+from repro.data.claims import (
+    SyntheticSpec,
+    oracle_claim_probs,
+    synthetic_claims,
+    synthetic_query_rows,
+)
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import (CopyConfig, DetectionEngine, build_index,
+                            commit_rows, retract_rows)
+    from repro.core.types import ClaimsDataset
+    from repro.data.claims import (
+        SyntheticSpec, oracle_claim_probs, synthetic_claims,
+        synthetic_query_rows)
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+    INDEXED = ("exact", "bound", "bound+", "hybrid", "bucketed", "incremental")
+
+    def decisions(mode, ds, p, idx, devices):
+        eng = DetectionEngine(cfg, mode=mode, tile=64, devices=devices,
+                              sample_rate=0.2, sample_seed=1)
+        use_idx = idx if mode in INDEXED else None
+        return eng.detect(ds, p, index=use_idx).copying
+
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        q = 6
+        vals, acc, pq, _ = synthetic_query_rows(sc, q, seed=3)
+        union = ClaimsDataset(
+            values=np.concatenate([sc.dataset.values, vals]),
+            accuracy=np.concatenate([sc.dataset.accuracy, acc]))
+        union_p = np.concatenate([p, pq])
+
+        idx = build_index(sc.dataset, p, cfg, row_capacity=S + q)
+        commit_rows(idx, union, union_p, cfg, q, compact=False)
+        assert idx.store.n_delta_chunks > 0, "schedule must leave deltas"
+
+        # retract a mix: two original corpus rows (clique members — their
+        # loss changes decisions) and two committed rows (delta territory)
+        row_ids = np.array([1, 2, S + 1, S + 4], np.int64)
+        keep = np.setdiff1d(np.arange(S + q), row_ids)
+        ds_after = ClaimsDataset(values=union.values[keep],
+                                 accuracy=union.accuracy[keep])
+        p_after = union_p[keep]
+        info = retract_rows(idx, ds_after, cfg, row_ids)
+        idx_rebuilt = build_index(ds_after, p_after, cfg)
+
+        for mode in ("pairwise", "exact", "bound", "bound+", "hybrid",
+                     "incremental", "sampled", "sample_verify", "bucketed"):
+            dev_counts = (1, 8) if mode in ("bucketed", "sampled",
+                                            "sample_verify") else (1,)
+            for n_dev in dev_counts:
+                a = decisions(mode, ds_after, p_after, idx, n_dev)
+                b = decisions(mode, ds_after, p_after, idx_rebuilt, n_dev)
+                out[f"S{S}/{mode}/dev{n_dev}"] = {
+                    "equal": bool(np.array_equal(a, b)),
+                    "copying_bits": int(a.sum()),
+                    "touched": info.touched_entries,
+                    "gc": info.gc_entries}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_all_modes_retract_equals_rebuild():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=900,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    assert len(out) == 24, sorted(out)
+    for combo, r in out.items():
+        assert r["equal"], f"{combo}: retract-then-detect diverged from rebuild"
+        assert r["touched"] > 0, f"{combo}: retraction touched no entries"
+    assert any(r["copying_bits"] > 0 for r in out.values())
+
+
+# ---------------------------------------------------------------------------
+# service-level: resident compaction, cache reconciliation, WAL, rollback
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def world():
+    sc = synthetic_claims(SyntheticSpec(n_sources=60, n_items=300,
+                                        coverage="stock", n_cliques=4, seed=2))
+    p = oracle_claim_probs(sc)
+    vals, acc, pq, _ = synthetic_query_rows(sc, 9, seed=5)
+    reqs = [DetectRequest(rid=i, values=vals[3 * i: 3 * i + 3],
+                          accuracy=acc[3 * i: 3 * i + 3],
+                          p_claim=pq[3 * i: 3 * i + 3])
+            for i in range(3)]
+    return sc, p, reqs
+
+
+def _answers(svc, reqs, tag):
+    futs = [svc.submit(DetectRequest(rid=f"{tag}-{r.rid}", values=r.values,
+                                     accuracy=r.accuracy, p_claim=r.p_claim))
+            for r in reqs]
+    svc.flush()
+    return [f.result(timeout=30) for f in futs]
+
+
+def test_service_retract_with_warm_cache_equals_rebuild(world):
+    """A warm cache survives the retraction only where provably unaffected —
+    the post-retraction answers (hits included) equal a cold rebuild."""
+    sc, p, reqs = world
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64)
+    _answers(svc, reqs, "warm")
+    _answers(svc, reqs, "warm")          # second round hits the cache
+    assert svc.cache.hits > 0
+    row_ids = [3, 17, 41]
+    info = svc.retract(row_ids)
+    assert info.rows == 3
+    assert svc.stats.retractions == 1 and svc.stats.retracted_rows == 3
+    after = _answers(svc, reqs, "after")
+
+    keep = np.setdiff1d(np.arange(sc.dataset.n_sources), row_ids)
+    ref = DetectionService(
+        ClaimsDataset(values=sc.dataset.values[keep],
+                      accuracy=sc.dataset.accuracy[keep]),
+        p[keep], CFG, mode="bucketed", tile=64, result_cache=False)
+    expected = _answers(ref, reqs, "ref")
+    for a, b in zip(after, expected):
+        np.testing.assert_array_equal(a.copying, b.copying)
+        np.testing.assert_array_equal(a.intra_copying, b.intra_copying)
+        assert a.copying.shape[1] == keep.size
+
+
+def test_service_retract_rollback_bit_exact(world):
+    sc, p, reqs = world
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64)
+    before = _answers(svc, reqs, "before")
+    e0, n0 = svc.epoch, svc.resident.n_corpus
+    svc.retract([0, 7])
+    assert svc.epoch == e0 + 1 and svc.resident.n_corpus == n0 - 2
+    svc.rollback_last_retract()
+    assert svc.epoch == e0 and svc.resident.n_corpus == n0
+    assert svc.stats.retractions == 0 and svc.stats.retracted_rows == 0
+    after = _answers(svc, reqs, "rb")
+    for a, b in zip(after, before):
+        np.testing.assert_array_equal(a.copying, b.copying)
+    with pytest.raises(RuntimeError, match="no retraction"):
+        svc.rollback_last_retract()
+
+
+def test_service_retract_validates_and_guards_lifo(world):
+    sc, p, _ = world
+    svc = DetectionService(sc.dataset, p, CFG, mode="bucketed", tile=64)
+    with pytest.raises(ValueError, match="no rows"):
+        svc.retract([])
+    with pytest.raises(ValueError, match="row ids"):
+        svc.retract([sc.dataset.n_sources])
+    rng = np.random.default_rng(0)
+    svc.retract([5])
+    svc.commit(rng.integers(0, 3, (1, sc.dataset.n_items)).astype(np.int32),
+               np.array([0.7], np.float32),
+               rng.uniform(0.2, 0.8, (1, sc.dataset.n_items)).astype(np.float32))
+    # the commit is now the newest mutation — the retraction can no longer
+    # be unwound (LIFO), and vice versa after another retract
+    with pytest.raises(RuntimeError, match="no retraction"):
+        svc.rollback_last_retract()
+    svc.retract([9])
+    with pytest.raises(RuntimeError, match="no commit"):
+        svc.rollback_last_commit()
+
+
+def test_restore_replays_retraction_from_wal(tmp_path, world):
+    """Kill after commit→retract→commit; restore replays the RetractRecord
+    between the commits and lands on identical decisions and counters."""
+    sc, p, reqs = world
+    rng = np.random.default_rng(3)
+    c = lambda: (rng.integers(0, 3, (2, sc.dataset.n_items)).astype(np.int32),
+                 rng.uniform(0.5, 0.9, 2).astype(np.float32),
+                 rng.uniform(0.2, 0.8, (2, sc.dataset.n_items)).astype(np.float32))
+    svc = DetectionService(
+        sc.dataset, p, CFG, mode="bucketed", tile=64,
+        durability=DurabilityOptions(state_dir=str(tmp_path), snapshot_every=0))
+    svc.commit(*c())
+    svc.retract([2, sc.dataset.n_sources])   # one base row, one committed row
+    svc.commit(*c())
+    live = _answers(svc, reqs, "live")
+    e_live, n_live = svc.epoch, svc.resident.n_corpus
+    del svc                                   # simulated kill: no clean stop
+
+    records, _, _ = CommitLog.scan(str(tmp_path / LOG_NAME))
+    assert sum(isinstance(r, RetractRecord) for r in records) == 1
+
+    svc2 = DetectionService.restore(str(tmp_path))
+    assert svc2.restore_info.replayed_commits == 3
+    assert svc2.epoch == e_live and svc2.resident.n_corpus == n_live
+    assert svc2.stats.retractions == 1 and svc2.stats.retracted_rows == 2
+    restored = _answers(svc2, reqs, "restored")
+    for a, b in zip(restored, live):
+        np.testing.assert_array_equal(a.copying, b.copying)
+        np.testing.assert_array_equal(a.intra_copying, b.intra_copying)
