@@ -32,7 +32,10 @@ CI and future PRs can diff the perf trajectory.
           batching, p99 ≤ 1.5× unloaded asserted); commit
           circuit breaker trip/recovery with epoch equality;
           retraction asserted == rebuild-without-source
-  scaling DetectionEngine matrix: S × device-count             (engine)
+  scaling DetectionEngine matrix: S × device-count; with       (engine)
+          --sharded adds the S=16384 row-range-sharded storage
+          tier (bitpack + spill, per-shard peak-resident bytes
+          asserted < 1/n_shards of the unsharded footprint)
   kernel  copyscore tile path: legacy two-orientation vs fused (engine)
           triangular dual-direction, f32/bf16 vs int8 incidence
   lm      token-throughput smoke of the training substrate
@@ -60,6 +63,7 @@ from repro.core.truthfind import fusion_accuracy
 
 CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
 ROWS = []
+FLAGS = set()   # --flags stripped from argv by main(); tables may consult
 
 
 def emit(name: str, value, derived=""):
@@ -301,6 +305,75 @@ def scaling():
                 match = bool(np.array_equal(res.copying, exact.copying))
                 emit(f"scaling/S{n_sources}/dev{n_dev}/decisions_match_exact",
                      int(match))
+    if "--sharded" in FLAGS:
+        scaling_sharded()
+
+
+def scaling_sharded():
+    """Row-range-sharded storage plane at S where S² grids are off-limits.
+
+    Builds a synthetic incidence store, shards it by row range
+    (core/shardplan.py, DESIGN §10), seals each shard bitpacked
+    (1 bit/entry) under an LRU spill budget, then sweeps every chunk
+    through the assembly and pruning primitives the tiled scan uses.
+    No host ever materializes more than its row slice: max per-shard
+    peak-resident incidence bytes is asserted < 1/n_shards of the
+    unsharded store's resident footprint, and sampled row windows are
+    asserted bit-equal to the unsharded chunks (pack + spill lossless).
+    CI runs ``benchmarks.run scaling --sharded`` and checks the
+    ``shard_resident_ok`` row in BENCH_scaling.json.
+    """
+    import tempfile
+
+    from repro.core import CorpusStore, shard_store
+
+    sizes = [16384] + ([100_000] if "--full" in FLAGS else [])
+    n_shards, chunk_entries, n_chunks = 4, 1024, 8
+    T = 512
+    for S in sizes:
+        rng = np.random.default_rng(S)
+        chunks = [(rng.random((S, chunk_entries)) < 0.02).astype(np.int8)
+                  for _ in range(n_chunks)]
+        E = chunk_entries * n_chunks
+        base = CorpusStore(
+            chunks=chunks,
+            entry_item=np.arange(E, dtype=np.int32),
+            entry_value=np.zeros(E, np.int32),
+            entry_p=np.full(E, 0.5, np.float32),
+            entry_score=np.zeros(E, np.float32),
+            chunk_entries=chunk_entries, n_rows=S, capacity=S)
+        unsharded = sum(c.nbytes for c in base.chunks)
+
+        sh = shard_store(base, n_shards)
+        with tempfile.TemporaryDirectory() as spill:
+            # budget: half of each shard's bitpacked slice stays resident
+            packed_slice = unsharded // 8 // n_shards
+            sh.seal(pack=True, spill_dir=spill,
+                    resident_bytes=max(1, packed_slice // 2))
+            sh.reset_peak_bytes()   # drop the dense build transient
+            n_blocks = -(-S // T)
+            t0 = time.perf_counter()
+            for c in range(sh.n_chunks):
+                sh.block_or(c, T, n_blocks)           # tile∘chunk pruning
+                for r0 in range(0, S, 4096):          # scan-slab assembly
+                    sh.assemble_rows(c, r0, min(r0 + T, S))
+            sweep_s = time.perf_counter() - t0
+            # bit-exactness through pack + spill: sampled row windows
+            for c, r0 in [(0, 0), (n_chunks - 1, S - T),
+                          (n_chunks // 2, (S // 2) - 7)]:
+                got = sh.assemble_rows(c, r0, r0 + T)
+                assert np.array_equal(got, base.chunks[c][r0:r0 + T]), \
+                    f"sharded assembly diverged at chunk {c} rows {r0}"
+            peak = max(sh.shard_peak_bytes())
+        bound = unsharded // n_shards
+        ok = peak < bound
+        emit(f"scaling/S{S}/shards{n_shards}/unsharded_resident_bytes",
+             unsharded, f"chunks={n_chunks}x{chunk_entries} int8")
+        emit(f"scaling/S{S}/shards{n_shards}/max_shard_peak_resident_bytes",
+             peak, f"bound={bound} packed=1bit sweep_s={sweep_s:.2f}")
+        emit(f"scaling/S{S}/shards{n_shards}/shard_resident_ok", int(ok))
+        assert ok, (f"shard residency: peak {peak} >= {bound} "
+                    f"(unsharded {unsharded} / {n_shards} shards)")
 
 
 def kernel():
@@ -1205,7 +1278,9 @@ def write_bench_json(which, durations) -> str:
 
 
 def main() -> None:
-    which = sys.argv[1:] or list(TABLES)
+    args = sys.argv[1:]
+    FLAGS.update(a for a in args if a.startswith("--"))
+    which = [a for a in args if not a.startswith("--")] or list(TABLES)
     print("name,value,derived")
     durations = {}
     for w in which:

@@ -16,6 +16,11 @@ Public API:
   CorpusStore, engine_chunks, ResidentCorpus    — chunked incidence store +
                                                   resident serving buffers
                                                   (DESIGN §6)
+  ShardPlan, ShardedCorpusStore, shard_store    — row-range-sharded corpus
+                                                  data plane: per-shard row
+                                                  slices, spill/bitpack,
+                                                  exact partial merge
+                                                  (DESIGN §10)
   DurabilityOptions, CommitLog, RestoreInfo     — commit-log persistence +
                                                   snapshot/restore (DESIGN §8,
                                                   OPERATIONS.md)
@@ -66,7 +71,24 @@ from repro.core.serving import (
     ServiceStopped,
     serve_batch,
 )
-from repro.core.store import CorpusStore
+from repro.core.shardplan import (
+    SealedShardError,
+    ShardPlan,
+    ShardScanError,
+    ShardedCorpusStore,
+    SpillCorruptionError,
+    make_shard_plan,
+    merge_shard_partials,
+    rebalance_plan,
+    shard_store,
+)
+from repro.core.store import (
+    CorpusStore,
+    PackedBlock,
+    pack_membership,
+    packed_count_matmul,
+    unpack_membership,
+)
 from repro.core.wal import (
     CommitLog,
     CommitRecord,
@@ -89,6 +111,11 @@ __all__ = [
     "CopyConfig", "ClaimsDataset", "DetectionResult", "pair_f_measure",
     "claim_value_keys",
     "DetectionEngine", "EngineOptions", "CorpusStore",
+    "ShardPlan", "ShardedCorpusStore", "shard_store", "make_shard_plan",
+    "rebalance_plan", "merge_shard_partials", "ShardScanError",
+    "SealedShardError", "SpillCorruptionError",
+    "PackedBlock", "pack_membership", "unpack_membership",
+    "packed_count_matmul",
     "DetectRequest", "DetectResponse", "DetectionService", "ReplicaRouter",
     "ReplicaBroadcastError", "ResidentCorpus", "ResultCache", "serve_batch",
     "CircuitBreaker", "DeadlineExceeded", "ServiceOverloaded",

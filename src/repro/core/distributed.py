@@ -162,6 +162,91 @@ def _sharded_tile_fn(mesh: Mesh, tile: int, s: float, n: float, impl: str,
 
 
 # ---------------------------------------------------------------------------
+# 2-D tile sharding: tiles over `data`, entry chunks over `pod`
+# ---------------------------------------------------------------------------
+
+def _local_tile_scores_2d(v_skw, acc, p_hat, delta, nout_blk, coords, *,
+                          tile, s, n, impl, block_i, block_j, pod_axis):
+    """Per-device: scan this data-shard's tiles over the local chunk shard,
+    then one psum over ``pod`` combines the per-chunk partial channels."""
+    outs = _local_tile_scores(v_skw, acc, p_hat, delta, nout_blk, coords,
+                              tile=tile, s=s, n=n, impl=impl,
+                              block_i=block_i, block_j=block_j)
+    return tuple(jax.lax.psum(o, pod_axis) for o in outs)
+
+
+def sharded_tile_scores_2d(
+    mesh: Mesh,
+    v_skw,                   # (S_pad, K, w) incidence, S_pad % tile == 0
+    acc,                     # (S_pad,) accuracies (0.5 in padding rows)
+    p_hat,                   # (K,) representative p̂ per chunk
+    coords: np.ndarray,      # (n_tiles, 2) int32 surviving (row, col) tiles
+    cfg: CopyConfig,
+    *,
+    tile: int,
+    delta: np.ndarray,       # (K,) per-chunk score-error bound δ
+    nout: np.ndarray = None,  # (K,) 1.0 ⇔ chunk before the Ē boundary
+    impl: str = "auto",
+    block_i: int = 128,
+    block_j: int = 128,
+):
+    """Shard tiles over ``data`` AND entry chunks over ``pod`` (2-D mesh).
+
+    Same contract as ``sharded_tile_scores``, but each pod member scans
+    only its chunk slice of the group and one psum per channel combines
+    the partial sums — so a group's resident incidence per device is
+    K/pods chunks instead of K. Chunks are padded to a pod multiple with
+    INERT chunks (zero incidence, δ = 0, non-Ē flag 0): a zero chunk
+    contributes exactly zero to all five channels, so the padding never
+    perturbs a result. The psum reorders float additions relative to the
+    1-D stream, which the engine's rescore margin absorbs — decisions
+    stay bit-equal (DESIGN.md §3.4, §10).
+    """
+    d_axis, p_axis = mesh.axis_names
+    n_data = mesh.shape[d_axis]
+    del n_data  # coords padding below keys off the mesh size directly
+    n_pod = mesh.shape[p_axis]
+    v_skw = np.asarray(v_skw)
+    S_pad, K, w = v_skw.shape
+    p_hat = np.asarray(p_hat, np.float32)
+    delta = np.asarray(delta, np.float32)
+    nout = (np.ones(K, np.float32) if nout is None
+            else np.asarray(nout, np.float32))
+    kpad = (-K) % n_pod
+    if kpad:
+        v_skw = np.concatenate(
+            [v_skw, np.zeros((S_pad, kpad, w), v_skw.dtype)], axis=1)
+        p_hat = np.concatenate([p_hat, np.full(kpad, 0.5, np.float32)])
+        delta = np.concatenate([delta, np.zeros(kpad, np.float32)])
+        nout = np.concatenate([nout, np.zeros(kpad, np.float32)])
+    n_tiles = len(coords)
+    pad = (-n_tiles) % mesh.shape[d_axis]
+    if pad:
+        coords = np.concatenate([coords,
+                                 np.full((pad, 2), -1, coords.dtype)])
+    fn = _sharded_tile_fn_2d(mesh, tile, cfg.s, cfg.n, impl,
+                             block_i, block_j)
+    return fn(jnp.asarray(v_skw), jnp.asarray(acc, jnp.float32),
+              jnp.asarray(p_hat), jnp.asarray(delta), jnp.asarray(nout),
+              jnp.asarray(coords, jnp.int32))
+
+
+@functools.lru_cache(maxsize=64)
+def _sharded_tile_fn_2d(mesh: Mesh, tile: int, s: float, n: float,
+                        impl: str, block_i: int, block_j: int):
+    """Cached jitted shard_map for the 2-D (data×pod) tile scan."""
+    d_axis, p_axis = mesh.axis_names
+    local = partial(_local_tile_scores_2d, tile=tile, s=s, n=n, impl=impl,
+                    block_i=block_i, block_j=block_j, pod_axis=p_axis)
+    return jax.jit(shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, p_axis, None), P(), P(p_axis), P(p_axis),
+                  P(p_axis), P(d_axis)),
+        out_specs=(P(d_axis),) * 5,
+    ))
+
+
+# ---------------------------------------------------------------------------
 # 2-D pair-space sharding (production TPU mesh)
 # ---------------------------------------------------------------------------
 

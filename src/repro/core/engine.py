@@ -61,7 +61,7 @@ from jax.sharding import Mesh
 
 from repro.core.bound import bound_detect
 from repro.core.bucketed import index_detect_exact
-from repro.core.distributed import sharded_tile_scores
+from repro.core.distributed import sharded_tile_scores, sharded_tile_scores_2d
 from repro.core.incremental import (
     incremental_detect,
     make_incremental_state,
@@ -69,6 +69,13 @@ from repro.core.incremental import (
 )
 from repro.core.index import InvertedIndex, build_index, engine_chunks
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
+from repro.core.shardplan import (
+    ShardScanError,
+    ShardedCorpusStore,
+    make_shard_plan,
+    merge_shard_partials,
+    shard_store,
+)
 from repro.core.scoring import (
     bucket_score_deltas,
     decide_copying_np,
@@ -155,6 +162,25 @@ class EngineOptions:
     # byte budget for the largest single incidence allocation during index
     # build (wins over store_chunk_entries; width = bytes // rows).
     store_chunk_bytes: Optional[int] = None
+    # row-range shards of the corpus data plane (DESIGN.md §10). None/1 →
+    # unsharded. Indexes this engine builds are wrapped in a
+    # ShardedCorpusStore; each shard scans only the pair tiles whose ROW
+    # block it owns (assembling just the row blocks those tiles touch) and
+    # the per-shard partial grids merge — error channel by MAX — into
+    # decisions bit-equal to the unsharded engine.
+    n_shards: Optional[int] = None
+    # bitpack each shard's chunk blocks to 1 bit/entry when the engine
+    # store is sealed for the scan (8× over int8; unpacked per assembly).
+    shard_pack: bool = False
+    # per-shard resident-set byte cap: cold blocks spill to checksummed
+    # frames (WAL container) under shard_spill_dir, LRU. None → no cap.
+    shard_spill_bytes: Optional[int] = None
+    # spill directory; None → a fresh temp dir when a byte cap is set.
+    shard_spill_dir: Optional[str] = None
+    # 2-D device mesh (data, pod) for the tile scan: tiles shard over
+    # `data`, entry chunks over `pod`, one psum combines (DESIGN.md §10).
+    # None → the 1-D tile mesh.
+    mesh_shape: Optional[tuple] = None
 
 
 class DetectionEngine:
@@ -172,6 +198,7 @@ class DetectionEngine:
         self.options = EngineOptions(**options)
         self.last_stats: dict = {}
         self._mesh: Optional[Mesh] = None
+        self._mesh2: Optional[Mesh] = None
         self._inc_state = None
         self._last_considered: Optional[np.ndarray] = None
 
@@ -192,6 +219,19 @@ class DetectionEngine:
             n = self.options.devices or len(jax.devices())
             self._mesh = Mesh(np.array(jax.devices()[:n]), ("shards",))
         return self._mesh
+
+    def mesh2(self) -> Mesh:
+        """The 2-D ``data``×``pod`` tile mesh (``mesh_shape`` option)."""
+        if self._mesh2 is None:
+            d, p = self.options.mesh_shape
+            devs = jax.devices()
+            if d * p > len(devs):
+                raise ValueError(
+                    f"mesh_shape {d}x{p} needs {d * p} devices, "
+                    f"{len(devs)} available")
+            self._mesh2 = Mesh(np.array(devs[: d * p]).reshape(d, p),
+                               ("data", "pod"))
+        return self._mesh2
 
     # -- dispatch -----------------------------------------------------------
 
@@ -235,6 +275,8 @@ class DetectionEngine:
                 index=index)
         if self.mode == "incremental":
             if self._inc_state is None:
+                if index is None and opt.n_shards and opt.n_shards > 1:
+                    index = self._build_index(ds, p_claim)
                 result, self._inc_state = make_incremental_state(
                     ds, p_claim, self.cfg, n_buckets=opt.n_buckets,
                     chunk_entries=opt.store_chunk_entries,
@@ -363,11 +405,21 @@ class DetectionEngine:
 
     def _build_index(self, ds: ClaimsDataset,
                      p_claim: np.ndarray) -> InvertedIndex:
-        """Build an index honoring this engine's store-chunking options."""
+        """Build an index honoring this engine's store-chunking options.
+
+        With ``n_shards`` set, the index's store is wrapped in a
+        ``ShardedCorpusStore`` under a balanced row-range plan — every
+        consumer (exact, bound, tiled, incremental) then reads rows through
+        the shard facade, and the tiled path scans shard by shard.
+        """
         opt = self.options
-        return build_index(ds, p_claim, self.cfg,
-                           chunk_entries=opt.store_chunk_entries,
-                           chunk_bytes=opt.store_chunk_bytes)
+        idx = build_index(ds, p_claim, self.cfg,
+                          chunk_entries=opt.store_chunk_entries,
+                          chunk_bytes=opt.store_chunk_bytes)
+        if opt.n_shards and opt.n_shards > 1:
+            idx.store = shard_store(
+                idx.store, make_shard_plan(idx.store.n_rows, opt.n_shards))
+        return idx
 
     def _tile_edge(self, s_sources: int) -> int:
         """Tile edge: the smallest multiple of 8 (f32 sublane alignment) that
@@ -391,6 +443,124 @@ class DetectionEngine:
         return bucket_score_deltas(p_hat, p_lo, p_hi, acc, self.cfg,
                                    inflation=self.DELTA_INFLATION,
                                    slack=self.DELTA_SLACK)
+
+    def _tile_kernel(self, v_dev, acc_vec, p_g, coords_g, T, d_g, o_g,
+                     block):
+        """One group pass: 1-D tile mesh, or data×pod when mesh_shape is set."""
+        opt = self.options
+        if opt.mesh_shape is not None:
+            return sharded_tile_scores_2d(
+                self.mesh2(), v_dev, acc_vec, p_g, coords_g, self.cfg,
+                tile=T, delta=d_g, nout=o_g, impl=opt.kernel_impl,
+                block_i=block, block_j=block)
+        return sharded_tile_scores(
+            self.mesh(), v_dev, acc_vec, p_g, coords_g, self.cfg, tile=T,
+            delta=d_g, nout=o_g, impl=opt.kernel_impl,
+            block_i=block, block_j=block)
+
+    @staticmethod
+    def _scatter_tiles(grids, coords, stacks, n_blocks, T):
+        """Scatter both orientations of every unordered tile into the grids.
+
+        The blocked transpose is a writable view, so fancy assignment on
+        tile coordinates lands each (T, T) block in place. The (c, r)
+        mirror of tile (r, c) is C_same←ᵀ for the score and the plain
+        transpose for the symmetric-role channels; diagonal tiles write
+        identical values twice. ``grids`` = [c_same, n_cnt, n_out, err].
+        """
+        n = len(coords)
+        rr, cc = coords[:, 0], coords[:, 1]
+        cf_t, cb_t, n_t, o_t, e_t = (np.asarray(s, np.float32)[:n]
+                                     for s in stacks)
+        for grid, fwd, bwd in (
+            (grids[0], cf_t, cb_t.transpose(0, 2, 1)),
+            (grids[1], n_t, None),
+            (grids[2], o_t, None),
+            (grids[3], e_t, None),
+        ):
+            g4 = grid.reshape(n_blocks, T, n_blocks, T).transpose(0, 2, 1, 3)
+            g4[rr, cc] = fwd
+            g4[cc, rr] = fwd.transpose(0, 2, 1) if bwd is None else bwd
+
+    def _scan_shards(self, ech, coords, chunk_keep, acc_pad, T, n_blocks,
+                     Gc, delta, block, dtype):
+        """Per-shard tile scans over compact row-block slabs (DESIGN.md §10).
+
+        Each shard owns the tiles whose ROW block falls inside its row
+        range and assembles only the row blocks its tiles touch (row AND
+        column sides) — never the full S_pad incidence. Per-tile kernel
+        operands are identical to the unsharded scan, so per-tile outputs
+        are bit-identical; tile placement across shards is disjoint, so
+        the merge is exact. A shard failing mid-scan surfaces as ONE
+        ``ShardScanError`` before any merge happens — no partial decision
+        grids escape to the caller.
+        """
+        store = ech.store
+        plan = store.plan
+        S_pad = n_blocks * T
+        last_row = max(plan.n_rows - 1, 0)
+        owner = np.array([plan.owner_of_row(min(r * T, last_row))
+                          for r in range(n_blocks)], np.int64)
+        tile_keep = chunk_keep[:, coords[:, 0], coords[:, 1]]
+        partials = []
+        run_total = 0
+        for s in range(store.n_shards):
+            grids = [np.zeros((S_pad, S_pad), np.float32) for _ in range(4)]
+            mine = owner[coords[:, 0]] == s
+            if mine.any():
+                try:
+                    run_total += self._scan_one_shard(
+                        ech, coords[mine], tile_keep[:, mine], acc_pad, T,
+                        n_blocks, Gc, delta, block, dtype, grids)
+                except Exception as e:
+                    raise ShardScanError(
+                        s, f"tile scan failed: "
+                           f"{type(e).__name__}: {e}") from e
+            partials.append(tuple(grids))
+        return partials, run_total
+
+    def _scan_one_shard(self, ech, coords_s, tile_keep_s, acc_pad, T,
+                        n_blocks, Gc, delta, block, dtype, grids):
+        """Stream chunk groups for ONE shard's tiles over its compact slab."""
+        store = ech.store
+        K = ech.n_chunks
+        b = ech.width
+        blocks_needed = np.unique(coords_s)
+        pos = np.full(n_blocks, -1, np.int64)
+        pos[blocks_needed] = np.arange(len(blocks_needed))
+        slab_rows = len(blocks_needed) * T
+        coords_c = pos[coords_s].astype(np.int32)
+        acc_slab = np.ascontiguousarray(
+            acc_pad.reshape(n_blocks, T)[blocks_needed]).reshape(slab_rows)
+        stacks = None
+        run = 0
+        for g0 in range(0, K, Gc):
+            ks = range(g0, min(g0 + Gc, K))
+            gmask = tile_keep_s[ks].any(axis=0)
+            if not gmask.any():
+                continue
+            run += int(gmask.sum()) * len(ks)
+            coords_g = np.where(gmask[:, None], coords_c, -1).astype(np.int32)
+            p_g = np.full(Gc, 0.5, np.float32)
+            d_g = np.zeros(Gc, np.float32)
+            o_g = np.zeros(Gc, np.float32)
+            v_np = np.zeros((slab_rows, Gc, b), np.int8)
+            for i, k in enumerate(ks):
+                for bi, blk in enumerate(blocks_needed):
+                    v_np[bi * T:(bi + 1) * T, i, :] = store.assemble_rows(
+                        int(k), int(blk) * T, (int(blk) + 1) * T)
+                p_g[i] = ech.p_hat[k]
+                d_g[i] = delta[k]
+                o_g[i] = ech.nout[k]
+            v_dev = (v_np if dtype == jnp.int8
+                     else jnp.asarray(v_np, dtype=dtype))
+            outs = self._tile_kernel(v_dev, acc_slab, p_g, coords_g, T,
+                                     d_g, o_g, block)
+            stacks = (list(outs) if stacks is None
+                      else [st + o for st, o in zip(stacks, outs)])
+        if stacks is not None:
+            self._scatter_tiles(grids, coords_s, stacks, n_blocks, T)
+        return run
 
     def _detect_tiled(
         self,
@@ -431,6 +601,16 @@ class DetectionEngine:
         K = ech.n_chunks
         b = ech.width
         delta = self._bucket_deltas(ech.p_hat, ech.p_lo, ech.p_hi, ds.accuracy)
+        # row-range sharded plane (DESIGN.md §10): the engine store is a
+        # ShardedCorpusStore whenever the index's store was (gather_entries
+        # preserves the plan). Sealing freezes it for the scan — optionally
+        # bitpacked to 1 bit/entry and/or under a per-shard LRU byte cap
+        # with cold blocks spilled to checksummed frames.
+        sharded = isinstance(ech.store, ShardedCorpusStore)
+        if sharded and (opt.shard_pack or opt.shard_spill_bytes is not None):
+            ech.store.seal(pack=opt.shard_pack,
+                           spill_dir=opt.shard_spill_dir,
+                           resident_bytes=opt.shard_spill_bytes)
 
         # ---- tile ∘ chunk pruning on the OR-reduced incidence -------------
         # Per chunk k, G_k[r] ORs the chunk's incidence over tile r's rows;
@@ -445,8 +625,12 @@ class DetectionEngine:
         keep = np.zeros((n_blocks, n_blocks), bool)
         chunk_keep = np.zeros((K, n_blocks, n_blocks), bool)
         for k in range(K):
-            g_k = (ech.store.chunks[k]
-                   .reshape(n_blocks, T, b).any(axis=1).astype(np.int32))
+            if sharded:
+                # per-shard per-tile OR — no host assembles the full chunk
+                g_k = ech.store.block_or(k, T, n_blocks).astype(np.int32)
+            else:
+                g_k = (ech.store.chunks[k]
+                       .reshape(n_blocks, T, b).any(axis=1).astype(np.int32))
             chunk_keep[k] = (g_k @ g_k.T) > 0
             if k < ech.ebar_chunk:
                 keep |= chunk_keep[k]
@@ -474,7 +658,16 @@ class DetectionEngine:
         n_out = np.zeros((S_pad, S_pad), np.float32)
         err = np.zeros((S_pad, S_pad), np.float32)
         chunk_tiles_run = 0
-        if n_tiles and K:
+        if n_tiles and K and sharded:
+            # per-shard scans over compact row-block slabs; the merge takes
+            # the MAX of the error channel (and the sum of the others —
+            # placement is disjoint, so both are exact)
+            partials, chunk_tiles_run = self._scan_shards(
+                ech, coords, chunk_keep, acc_pad, T, n_blocks, Gc, delta,
+                block, dtype)
+            c_same, n_cnt, n_out, err = merge_shard_partials(
+                partials, shape=(S_pad, S_pad))
+        elif n_tiles and K:
             # per-tile accumulators live on device, KEEPING the mesh-padded
             # tile sharding (slicing mid-stream would reshard every group);
             # one host transfer at the end feeds the scatter. Peak resident
@@ -510,32 +703,14 @@ class DetectionEngine:
                     o_g[i] = ech.nout[k]
                 v_dev = (v_np if dtype == jnp.int8
                          else jnp.asarray(v_np, dtype=dtype))
-                outs = sharded_tile_scores(
-                    self.mesh(), v_dev, acc_pad, p_g, coords_g, cfg, tile=T,
-                    delta=d_g, nout=o_g, impl=opt.kernel_impl,
-                    block_i=block, block_j=block)
+                outs = self._tile_kernel(v_dev, acc_pad, p_g, coords_g, T,
+                                         d_g, o_g, block)
                 stacks = (list(outs) if stacks is None
                           else [s + o for s, o in zip(stacks, outs)])
-            # scatter both orientations of every unordered tile back into the
-            # (S_pad, S_pad) grid: the blocked transpose is a writable view,
-            # so fancy assignment on tile coordinates lands each (T, T) block
-            # in place. The (c, r) mirror of tile (r, c) is C_same←ᵀ for the
-            # score and the plain transpose for the symmetric-role channels;
-            # diagonal tiles write identical values twice.
-            rr, cc = coords[:, 0], coords[:, 1]
             if stacks is None:
                 stacks = [jnp.zeros((n_tiles, T, T), jnp.float32)] * 5
-            cf_t, cb_t, n_t, o_t, e_t = (np.asarray(s, np.float32)[:n_tiles]
-                                         for s in stacks)
-            for grid, fwd, bwd in (
-                (c_same, cf_t, cb_t.transpose(0, 2, 1)),
-                (n_cnt, n_t, None),
-                (n_out, o_t, None),
-                (err, e_t, None),
-            ):
-                g4 = grid.reshape(n_blocks, T, n_blocks, T).transpose(0, 2, 1, 3)
-                g4[rr, cc] = fwd
-                g4[cc, rr] = fwd.transpose(0, 2, 1) if bwd is None else bwd
+            self._scatter_tiles([c_same, n_cnt, n_out, err], coords, stacks,
+                                n_blocks, T)
         c_same = c_same[:S, :S]
         n_cnt = n_cnt[:S, :S]
         err = err[:S, :S]
@@ -582,7 +757,8 @@ class DetectionEngine:
             "tiles_pruned": tiles_total - n_tiles,
             "schedule": "triangular",
             "incidence_dtype": str(np.dtype(dtype)),
-            "n_devices": self.mesh().shape["shards"],
+            "n_devices": (int(np.prod(opt.mesh_shape)) if opt.mesh_shape
+                          else self.mesh().shape["shards"]),
             "rescored_pairs": n_rescored,
             # chunked-store telemetry (DESIGN.md §6)
             "chunks": K,
@@ -594,6 +770,18 @@ class DetectionEngine:
             "chunk_tiles_run": chunk_tiles_run,
             "peak_group_bytes": int(Gc * chunk_nbytes),
         }
+        if sharded:
+            # shard-plane telemetry (DESIGN.md §10): what each host actually
+            # held; the scaling bench asserts the peak against 1/shards of
+            # the unsharded footprint
+            self.last_stats.update({
+                "n_shards": ech.store.n_shards,
+                "shard_plan": ech.store.plan.sizes().tolist(),
+                "shard_resident_bytes": ech.store.shard_resident_bytes(),
+                "shard_peak_resident_bytes": ech.store.shard_peak_bytes(),
+                "mesh_shape": (list(opt.mesh_shape) if opt.mesh_shape
+                               else None),
+            })
         return DetectionResult(c_fwd=c_fwd, pr_independent=pr_ind,
                                copying=copying, counter=counter,
                                wall_time_s=time.perf_counter() - t0)

@@ -172,8 +172,16 @@ class InvertedIndex:
         ebar_mask = None
         if int(meta[1]):
             ebar_mask = np.asarray(d["index/ebar_mask"], np.uint8).astype(bool)
+        if "store/shard_starts" in d:
+            # the corpus was row-range sharded when captured — re-establish
+            # the same plan (shardplan.py; imported here to avoid a cycle)
+            from repro.core.shardplan import ShardedCorpusStore
+            store = ShardedCorpusStore.from_state_dict(
+                d, capacity=row_capacity)
+        else:
+            store = CorpusStore.from_state_dict(d, capacity=row_capacity)
         return cls(
-            store=CorpusStore.from_state_dict(d, capacity=row_capacity),
+            store=store,
             ebar_start=int(meta[0]),
             l_counts=np.asarray(d["index/l_counts"], np.int32),
             items_per_source=np.asarray(d["index/items_per_source"], np.int32),
@@ -221,7 +229,9 @@ def entry_extreme_accuracies(
     """Per-entry (min, second-min, max) provider accuracies from the
     incidence, chunked over entries to bound peak memory. ``V`` may be a
     ``CorpusStore`` (iterated chunk by chunk) or a dense array."""
-    if isinstance(V, CorpusStore):
+    if isinstance(V, CorpusStore) or hasattr(V, "iter_chunks"):
+        # CorpusStore or the row-sharded facade (shardplan.py) — both
+        # stream chunk handles; the dense branch below is arrays only
         E = V.n_entries
         a_min = np.empty(E, np.float64)
         a_second = np.empty(E, np.float64)

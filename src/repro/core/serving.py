@@ -84,6 +84,7 @@ from repro.core.index import (
     rollback_commit,
 )
 from repro.core.index import retract_rows as index_retract_rows
+from repro.core.shardplan import make_shard_plan, shard_store
 from repro.core.types import ClaimsDataset, CopyConfig, claim_value_keys
 from repro.core.wal import (
     LOG_NAME,
@@ -835,6 +836,17 @@ class DetectionService:
                     chunk_entries=opt.store_chunk_entries,
                     chunk_bytes=opt.store_chunk_bytes,
                     row_capacity=row_cap)
+                if opt.n_shards and opt.n_shards > 1:
+                    # row-range-sharded data plane (DESIGN.md §10): the
+                    # committed store becomes per-shard row slices; commits,
+                    # retractions, snapshots, and the engine's per-shard
+                    # scans all flow through the facade. A restored index
+                    # re-establishes its persisted plan instead (the
+                    # shard_starts key in the state dict).
+                    self._index.store = shard_store(
+                        self._index.store,
+                        make_shard_plan(self._index.store.n_rows,
+                                        opt.n_shards))
         self.epoch = 0
         # the cache's exactness argument (§7.5) needs (a) considered-gated
         # decisions — pairwise scores EVERY pair, so disjoint-pair padding

@@ -1,0 +1,1240 @@
+"""Row-range-sharded corpus data plane (DESIGN.md §10).
+
+Every replica so far held the ENTIRE corpus: the engine sharded pair tiles
+over devices, but each host still materialized all S rows of every chunk.
+This module is the storage half of the scale-out story:
+
+  * ``ShardPlan`` — a row-range partition of the corpus: shard ``s`` owns
+    the contiguous global rows ``[bounds[s], bounds[s+1])``. Plans are
+    balanced on construction (``make_shard_plan``) and re-balanced after
+    commit/retract growth skews them (``rebalance_plan`` /
+    ``ShardedCorpusStore.rebalance``).
+  * ``ShardedCorpusStore`` — a drop-in facade over per-shard row slices: it
+    speaks the full ``CorpusStore`` consumer API (chunk views, slices,
+    co-occurrence, gathers, row/entry mutation, snapshot/state_dict), but
+    each shard holds ONLY its row slice of every chunk. Nothing below the
+    facade ever allocates an (S, width) block — per-shard peak-resident
+    bytes are tracked and asserted by ``BENCH_scaling``.
+  * Cold-chunk **spill**: ``seal`` puts a shard's resident set under an LRU
+    byte cap; evicted blocks land on disk in the WAL's checksummed-frame
+    container (``wal.write_framed`` with ``SPILL_MAGIC``). A corrupt spill
+    file (torn frame, CRC mismatch) is never trusted: the block is
+    regathered from the committed source store when the facade was derived
+    by ``gather_entries``, else a typed ``SpillCorruptionError`` surfaces.
+  * **Bitpacking**: ``seal(pack=True)`` stores membership at 1 bit/entry
+    (``store.pack_membership``), unpacked on gather — 8× on top of int8.
+  * ``merge_shard_partials`` — the detection merge step: per-shard partial
+    score/count grids cover disjoint pair tiles so they combine by sum,
+    while the per-pair p̂-error bound merges by **elementwise max** — the
+    exact-rescore trigger is therefore never weaker than single-host, which
+    is what makes the merged decisions bit-equal to the unsharded engine
+    (DetectionEngine's rescore argument, DESIGN.md §3.4/§10).
+
+A shard failing mid-scan must never leak a partial decision matrix: the
+engine wraps per-shard scans and raises one typed ``ShardScanError``.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import numpy as np
+
+from repro.core import wal
+from repro.core.store import (
+    ChunkView,
+    CorpusStore,
+    PackedBlock,
+    align_chunk,
+    pack_membership,
+    packed_count_matmul,
+    unpack_membership,
+)
+
+#: Serialized-plan version (rides inside the store state dict).
+SHARD_LAYOUT_VERSION = 1
+
+
+class ShardScanError(RuntimeError):
+    """One shard failed mid-scan; no partial decision matrix was produced.
+
+    Raised by the engine's sharded tile scan: the merge step runs only
+    after EVERY owning shard returned its partial grids, so a raising
+    shard surfaces as this single typed error instead of a half-merged
+    (and silently wrong) decision matrix.
+    """
+
+    def __init__(self, shard: int, message: str):
+        super().__init__(f"shard {shard}: {message}")
+        self.shard = int(shard)
+
+
+class SpillCorruptionError(RuntimeError):
+    """A spilled chunk failed frame validation and no source can regather it.
+
+    When the facade was derived with ``gather_entries`` the corrupt block
+    is silently regathered from the committed source store (and the spill
+    file rewritten); only a facade with no regather source raises this.
+    """
+
+
+class SealedShardError(RuntimeError):
+    """A mutating operation was attempted on a sealed (packed/spilled) store.
+
+    Sealing freezes the block layout so spill files and packed blocks stay
+    authoritative; call ``unseal()`` before committing/retracting rows.
+    """
+
+
+# ---------------------------------------------------------------------------
+# The plan
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardPlan:
+    """A row-range partition: shard ``s`` owns rows [bounds[s], bounds[s+1]).
+
+    ``bounds`` is a non-decreasing ``(n_shards + 1,)`` int64 array with
+    ``bounds[0] == 0``; empty shards (equal consecutive bounds) are legal —
+    a plan over fewer rows than shards simply leaves trailing shards empty.
+    """
+
+    bounds: np.ndarray
+
+    def __post_init__(self):
+        b = np.asarray(self.bounds, np.int64)
+        if b.ndim != 1 or len(b) < 2 or b[0] != 0 or np.any(np.diff(b) < 0):
+            raise ValueError(f"invalid shard bounds {b!r}")
+        object.__setattr__(self, "bounds", b)
+
+    @property
+    def n_shards(self) -> int:
+        """Number of shards in the plan."""
+        return len(self.bounds) - 1
+
+    @property
+    def n_rows(self) -> int:
+        """Total rows the plan covers (the last bound)."""
+        return int(self.bounds[-1])
+
+    def sizes(self) -> np.ndarray:
+        """Rows per shard, ``(n_shards,)`` int64."""
+        return np.diff(self.bounds)
+
+    def range_of(self, s: int) -> tuple[int, int]:
+        """Global row range ``[r0, r1)`` owned by shard ``s``."""
+        return int(self.bounds[s]), int(self.bounds[s + 1])
+
+    def owner_of_row(self, r: int) -> int:
+        """Shard owning global row ``r`` (rows past the last bound → last)."""
+        r = int(r)
+        s = int(np.searchsorted(self.bounds, r, side="right")) - 1
+        return min(max(s, 0), self.n_shards - 1)
+
+    def imbalance(self) -> float:
+        """max shard size / ideal size (1.0 = perfectly balanced)."""
+        sizes = self.sizes()
+        if self.n_rows == 0:
+            return 1.0
+        return float(sizes.max() * self.n_shards / self.n_rows)
+
+
+def make_shard_plan(n_rows: int, n_shards: int) -> ShardPlan:
+    """A balanced plan: shard sizes differ by at most one row."""
+    n_rows, n_shards = int(n_rows), int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"need at least one shard, got {n_shards}")
+    if n_rows < 0:
+        raise ValueError(f"negative n_rows {n_rows}")
+    bounds = (np.arange(n_shards + 1, dtype=np.int64) * n_rows) // n_shards
+    return ShardPlan(bounds=bounds)
+
+
+def rebalance_plan(plan: ShardPlan, n_rows: Optional[int] = None,
+                   tolerance: float = 0.25) -> ShardPlan:
+    """The plan to use after growth: re-split when skew exceeds tolerance.
+
+    ``n_rows`` is the corpus's CURRENT row count (commits grow the last
+    shard past ``plan.n_rows``; retractions shrink interior shards). The
+    plan is extended to cover ``n_rows`` and re-balanced from scratch when
+    its imbalance exceeds ``1 + tolerance``; otherwise the (extended)
+    original plan is kept so shard-local state stays put.
+    """
+    rows = plan.n_rows if n_rows is None else int(n_rows)
+    bounds = plan.bounds.copy()
+    bounds[-1] = max(rows, int(bounds[-2]))
+    grown = ShardPlan(bounds=bounds)
+    if grown.imbalance() > 1.0 + float(tolerance):
+        return make_shard_plan(rows, plan.n_shards)
+    return grown
+
+
+# ---------------------------------------------------------------------------
+# Merge step (detection plane)
+# ---------------------------------------------------------------------------
+
+def merge_shard_partials(partials: list, shape: Optional[tuple] = None):
+    """Combine per-shard partial pair grids into the single-host grids.
+
+    Each element of ``partials`` is ``(c_same, count, count_outside, err)``
+    full-size float32 grids with only that shard's owned tiles populated
+    (everything else zero). Tile ownership partitions the pair space, so
+    the three score/count channels combine by SUM (placement — on disjoint
+    support, x + 0 is exact in any float order). The p̂-error bound channel
+    combines by elementwise MAX: a bound must dominate EVERY shard's
+    accumulated error for the pair, so max keeps the exact-rescore trigger
+    at least as eager as single-host — the merged decision matrix is then
+    bit-equal to the unsharded engine by the same rescore argument.
+    Returns the four merged grids (zeros of ``shape`` when no partials).
+    """
+    if not partials:
+        if shape is None:
+            raise ValueError("merge_shard_partials: no partials and no shape")
+        z = np.zeros(shape, np.float32)
+        return z, z.copy(), z.copy(), z.copy()
+    c_same, n_cnt, n_out, err = (p.copy() for p in partials[0])
+    for cs, nc, no, er in partials[1:]:
+        c_same += cs
+        n_cnt += nc
+        n_out += no
+        np.maximum(err, er, out=err)
+    return c_same, n_cnt, n_out, err
+
+
+# ---------------------------------------------------------------------------
+# Per-shard row slice
+# ---------------------------------------------------------------------------
+
+@dataclass
+class _SpillRef:
+    """Marker for a block whose bytes live on disk (spilled)."""
+
+    path: str
+    packed: bool               # was the resident form a PackedBlock?
+    rows: int
+    width: int
+
+
+class _ShardSlice:
+    """One shard's row slice of every chunk (dense | packed | spilled).
+
+    ``blocks[c]`` holds this shard's rows of chunk ``c`` as a dense int8
+    array (``(cap_rows, width)``), a ``PackedBlock`` (1 bit/entry), or a
+    ``_SpillRef`` (bytes on disk). Residency is LRU-tracked; ``budget``
+    caps resident bytes once sealed. ``peak_bytes`` records the high-water
+    mark (packed blocks counted at their packed size — 1 bit/entry).
+    """
+
+    def __init__(self, shard_id: int, start: int, cap_rows: int):
+        self.shard_id = int(shard_id)
+        self.start = int(start)
+        self.cap_rows = int(cap_rows)
+        self.blocks: list = []
+        self.sealed = False
+        self.budget: Optional[int] = None
+        self.spill_dir: Optional[str] = None
+        self.peak_bytes = 0
+        self._lru: OrderedDict = OrderedDict()   # chunk id → resident bytes
+        self._owner = None                       # back-ref for regather
+
+    # -- residency accounting ------------------------------------------------
+
+    @staticmethod
+    def _block_bytes(blk) -> int:
+        if isinstance(blk, np.ndarray):
+            return int(blk.nbytes)
+        if isinstance(blk, PackedBlock):
+            return blk.nbytes
+        return 0
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes of incidence currently held in memory by this shard."""
+        return sum(self._block_bytes(b) for b in self.blocks)
+
+    def _note_peak(self) -> None:
+        self.peak_bytes = max(self.peak_bytes, self.resident_bytes)
+
+    def _touch(self, c: int) -> None:
+        self._lru[c] = self._block_bytes(self.blocks[c])
+        self._lru.move_to_end(c)
+
+    # -- block access ---------------------------------------------------------
+
+    def block_width(self, c: int) -> int:
+        """Column count of chunk ``c``'s block."""
+        blk = self.blocks[c]
+        if isinstance(blk, np.ndarray):
+            return blk.shape[1]
+        return blk.width
+
+    def get_block(self, c: int) -> np.ndarray:
+        """Chunk ``c``'s rows as dense int8 ``(cap_rows, width)``.
+
+        Packed blocks unpack transiently (the packed form stays resident);
+        spilled blocks reload from disk — evicting colder blocks to stay
+        under the budget — with corrupt frames regathered from the source
+        store (see ``_reload``).
+        """
+        blk = self.blocks[c]
+        if isinstance(blk, _SpillRef):
+            blk = self._reload(c)
+        self._touch(c)
+        if isinstance(blk, PackedBlock):
+            return unpack_membership(blk)
+        return blk
+
+    def packed_block(self, c: int) -> Optional[PackedBlock]:
+        """Chunk ``c``'s resident ``PackedBlock``, or None when not packed."""
+        blk = self.blocks[c]
+        return blk if isinstance(blk, PackedBlock) else None
+
+    # -- spill machinery --------------------------------------------------------
+
+    def _spill_path(self, c: int) -> str:
+        return os.path.join(self.spill_dir,
+                            f"shard-{self.shard_id:03d}-chunk-{c:05d}.spill")
+
+    def _write_spill(self, c: int) -> str:
+        """Persist chunk ``c``'s resident block as a checksummed frame."""
+        blk = self.blocks[c]
+        if isinstance(blk, PackedBlock):
+            arrays = {"bits": blk.bits,
+                      "meta": np.array([1, blk.bits.shape[0], blk.width],
+                                       np.int64)}
+        else:
+            arrays = {"bits": blk,
+                      "meta": np.array([0, blk.shape[0], blk.shape[1]],
+                                       np.int64)}
+        return wal.write_framed(self._spill_path(c), arrays,
+                                magic=wal.SPILL_MAGIC, fsync=False)
+
+    def evict(self, c: int) -> None:
+        """Spill chunk ``c`` to disk and drop its resident bytes (idempotent)."""
+        blk = self.blocks[c]
+        if isinstance(blk, _SpillRef):
+            return
+        if self.spill_dir is None:
+            raise SealedShardError(
+                f"shard {self.shard_id}: no spill_dir; seal(spill_dir=...) first")
+        packed = isinstance(blk, PackedBlock)
+        path = self._spill_path(c)
+        if not os.path.exists(path):
+            self._write_spill(c)
+        rows = blk.bits.shape[0] if packed else blk.shape[0]
+        width = blk.width if packed else blk.shape[1]
+        self.blocks[c] = _SpillRef(path=path, packed=packed,
+                                   rows=rows, width=width)
+        self._lru.pop(c, None)
+
+    def _reload(self, c: int):
+        """Reinstate a spilled block, healing corrupt frames via regather."""
+        ref = self.blocks[c]
+        try:
+            d = wal.load_framed(ref.path, magic=wal.SPILL_MAGIC)
+            meta = np.asarray(d["meta"], np.int64)
+            if int(meta[0]):
+                blk = PackedBlock(bits=np.asarray(d["bits"], np.uint8),
+                                  width=int(meta[2]))
+            else:
+                blk = np.asarray(d["bits"], np.int8)
+        except wal.WalError as e:
+            blk = self._regather_block(c, ref, cause=e)
+        self.blocks[c] = blk
+        self._enforce_budget(protect=c)
+        self._note_peak()
+        return blk
+
+    def _regather_block(self, c: int, ref: _SpillRef, cause: Exception):
+        """Rebuild a corrupt spilled block from the committed source store.
+
+        The facade records ``(source, order)`` when it was derived by
+        ``gather_entries``; the corrupt frame is rebuilt from those exact
+        source columns (bit-equal by construction — the same gather that
+        produced the block originally) and the spill file rewritten. A
+        facade with no source cannot regather → ``SpillCorruptionError``.
+        """
+        owner = self._owner
+        regather = getattr(owner, "_regather", None) if owner else None
+        if regather is None:
+            raise SpillCorruptionError(
+                f"shard {self.shard_id} chunk {c}: corrupt spill frame "
+                f"({cause}) and no source store to regather from") from cause
+        source, order = regather
+        w = owner.chunk_entries
+        sel = order[c * w: c * w + ref.width]
+        dense = _gather_rows_cols(source, sel, self.start,
+                                  self.start + ref.rows)
+        blk = pack_membership(dense) if ref.packed else dense
+        self.blocks[c] = blk
+        self._write_spill(c)      # heal the on-disk copy
+        return blk
+
+    def _enforce_budget(self, protect: Optional[int] = None) -> None:
+        """Evict LRU blocks until resident bytes fit the budget."""
+        if self.budget is None:
+            return
+        while self.resident_bytes > self.budget and self._lru:
+            victim = next(iter(self._lru))
+            if victim == protect:
+                self._lru.move_to_end(victim)
+                if len(self._lru) == 1:
+                    break
+                victim = next(iter(self._lru))
+            self.evict(victim)
+
+
+def _gather_rows_cols(src, order_slice: np.ndarray, r0: int,
+                      r1: int) -> np.ndarray:
+    """Dense ``(r1 − r0, len(order_slice))`` gather of global rows × columns.
+
+    ``order_slice`` may contain ``-1`` padding markers (zero columns). Rows
+    past the source's capacity read as zero (slack). Works for both a plain
+    ``CorpusStore`` (direct chunk slicing) and a ``ShardedCorpusStore``
+    (per-shard assembly) — the regather fallback and ``gather_entries``
+    share it.
+    """
+    order_slice = np.asarray(order_slice, np.int64)
+    out = np.zeros((r1 - r0, len(order_slice)), np.int8)
+    live = order_slice >= 0
+    if not live.any():
+        return out
+    cols = order_slice[live]
+    dst = np.nonzero(live)[0]
+    w = max(src.chunk_entries, 1)
+    for cid in np.unique(cols // w):
+        m = cols // w == cid
+        if isinstance(src, ShardedCorpusStore):
+            blk = src.assemble_rows(int(cid), r0, r1)
+            out[:, dst[m]] = blk[:, cols[m] - cid * w]
+        else:
+            src_blk = src.chunks[int(cid)]
+            hi = min(r1, src_blk.shape[0])
+            if hi > r0:
+                out[: hi - r0, dst[m]] = src_blk[r0:hi, cols[m] - cid * w]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# The facade
+# ---------------------------------------------------------------------------
+
+class ShardedCorpusStore:
+    """Row-range-sharded ``CorpusStore`` facade (DESIGN.md §10).
+
+    Speaks the full consumer API of ``CorpusStore`` — chunk views, column /
+    slice / co-occurrence access, ``gather_entries``, the row/entry
+    mutation protocol (append, truncate, retract, deactivate, delta
+    chunks), snapshot/rollback, ``state_dict`` — but the incidence lives as
+    per-shard row slices (``_ShardSlice``): shard ``s`` holds rows
+    ``[starts[s], starts[s+1])`` of every chunk and nothing else. Entry
+    metadata (item / value / p / score) is row-independent and stays
+    global, sharing the copy-on-write discipline of ``CorpusStore``.
+
+    Consumers that need a dense row range assemble it explicitly
+    (``assemble_rows``); the per-shard resident set is what ``seal`` packs
+    to 1 bit/entry and spills under an LRU byte cap.
+    """
+
+    def __init__(self, slices: list, starts: np.ndarray, widths: list,
+                 entry_item, entry_value, entry_p, entry_score,
+                 chunk_entries: int, n_rows: int, capacity: int,
+                 delta_start: Optional[int], epoch: int):
+        self._slices = list(slices)
+        self._starts = np.asarray(starts, np.int64)
+        self._widths = list(int(w) for w in widths)
+        self.entry_item = entry_item
+        self.entry_value = entry_value
+        self.entry_p = entry_p
+        self.entry_score = entry_score
+        self.chunk_entries = int(chunk_entries)
+        self.n_rows = int(n_rows)
+        self.capacity = int(capacity)
+        self.delta_start = delta_start
+        self.epoch = int(epoch)
+        self._regather = None            # (source store, gather order)
+        for sl in self._slices:
+            sl._owner = self
+
+    # -- plan / geometry ------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        """Number of row-range shards."""
+        return len(self._slices)
+
+    @property
+    def plan(self) -> ShardPlan:
+        """The current row-range plan (last bound = live rows)."""
+        return ShardPlan(bounds=np.append(self._starts,
+                                          max(self.n_rows,
+                                              int(self._starts[-1]))))
+
+    def _coverage(self, s: int) -> tuple[int, int]:
+        """Global row range shard ``s``'s blocks physically cover."""
+        cov0 = int(self._starts[s])
+        cov1 = (int(self._starts[s + 1]) if s + 1 < self.n_shards
+                else self.capacity)
+        return cov0, cov1
+
+    @property
+    def n_entries(self) -> int:
+        """E — total entry columns across chunks (padding included)."""
+        return len(self.entry_item)
+
+    @property
+    def n_chunks(self) -> int:
+        """Number of entry chunks."""
+        return len(self._widths)
+
+    @property
+    def max_chunk_nbytes(self) -> int:
+        """Largest single resident incidence allocation across all shards."""
+        return max((sl._block_bytes(b) for sl in self._slices
+                    for b in sl.blocks), default=0)
+
+    @property
+    def n_live_entries(self) -> int:
+        """Entries that are real (non-padding) columns."""
+        return int(np.count_nonzero(self.entry_item >= 0))
+
+    @property
+    def n_delta_entries(self) -> int:
+        """Live entries in the delta region (appended since the last base)."""
+        if self.delta_start is None:
+            return 0
+        return int(np.count_nonzero(self.entry_item[self.delta_start:] >= 0))
+
+    @property
+    def n_delta_chunks(self) -> int:
+        """Chunks that hold at least one delta entry."""
+        if self.delta_start is None:
+            return 0
+        return self.n_chunks - self.delta_start // self.chunk_entries
+
+    def chunk_start(self, c: int) -> int:
+        """Global index of chunk ``c``'s first entry column."""
+        return c * self.chunk_entries
+
+    # -- sealing / residency ----------------------------------------------------
+
+    @property
+    def sealed(self) -> bool:
+        """True once ``seal`` froze the block layout (read-only mode)."""
+        return any(sl.sealed for sl in self._slices)
+
+    def _require_mutable(self) -> None:
+        if self.sealed:
+            raise SealedShardError(
+                "store is sealed (packed/spilled blocks); unseal() before "
+                "mutating")
+
+    def seal(self, pack: bool = False, spill_dir: Optional[str] = None,
+             resident_bytes: Optional[int] = None) -> None:
+        """Freeze the block layout; optionally bitpack and cap residency.
+
+        ``pack=True`` converts every dense block to a ``PackedBlock``
+        (1 bit/entry — 8× over int8; gathers unpack transiently).
+        ``resident_bytes`` puts EACH shard's resident set under an LRU byte
+        cap, spilling cold blocks to checksummed frames under
+        ``spill_dir`` (a temp dir is created when a cap is given without
+        one). Mutations raise ``SealedShardError`` until ``unseal``.
+        """
+        if resident_bytes is not None and spill_dir is None:
+            spill_dir = tempfile.mkdtemp(prefix="cd-spill-")
+        if spill_dir is not None:
+            os.makedirs(spill_dir, exist_ok=True)
+        for sl in self._slices:
+            sl.sealed = True
+            sl.spill_dir = spill_dir
+            sl.budget = (None if resident_bytes is None
+                         else int(resident_bytes))
+            if pack:
+                sl.blocks = [pack_membership(b) if isinstance(b, np.ndarray)
+                             else b for b in sl.blocks]
+            sl._lru = OrderedDict(
+                (c, sl._block_bytes(b)) for c, b in enumerate(sl.blocks)
+                if not isinstance(b, _SpillRef))
+            sl._note_peak()
+            sl._enforce_budget()
+
+    def unseal(self) -> None:
+        """Reload/unpack every block to dense int8 and re-enable mutation."""
+        for sl in self._slices:
+            sl.budget = None
+            for c in range(len(sl.blocks)):
+                blk = sl.blocks[c]
+                if isinstance(blk, _SpillRef):
+                    blk = sl._reload(c)
+                if isinstance(blk, PackedBlock):
+                    sl.blocks[c] = unpack_membership(blk)
+            sl.sealed = False
+            sl._lru.clear()
+            sl._note_peak()
+
+    def evict_block(self, shard: int, c: int) -> None:
+        """Spill one block of one shard (test/operator hook; needs a seal)."""
+        self._slices[shard].evict(c)
+
+    def shard_resident_bytes(self) -> list:
+        """Per-shard resident incidence bytes (packed counted packed)."""
+        return [sl.resident_bytes for sl in self._slices]
+
+    def shard_peak_bytes(self) -> list:
+        """Per-shard peak resident incidence bytes since construction."""
+        return [max(sl.peak_bytes, sl.resident_bytes)
+                for sl in self._slices]
+
+    def reset_peak_bytes(self) -> None:
+        """Restart the per-shard peak-resident high-water marks from now.
+
+        Construction (``shard_store``) materializes each shard's row slice
+        as dense int8 before ``seal`` packs/spills it; benchmarks call this
+        after sealing so the reported peak reflects steady-state residency
+        under the byte budget rather than the one-off build transient.
+        """
+        for sl in self._slices:
+            sl.peak_bytes = sl.resident_bytes
+
+    # -- assembly primitives ------------------------------------------------------
+
+    def assemble_rows(self, c: int, r0: int, r1: int) -> np.ndarray:
+        """Dense int8 ``(r1 − r0, width_c)`` slab of chunk ``c``'s rows.
+
+        Rows beyond the live range read as zero (slack / tile padding), so
+        the engine can request tile-aligned slabs straight off the facade.
+        """
+        out = np.zeros((r1 - r0, self._widths[c]), np.int8)
+        for s, sl in enumerate(self._slices):
+            cov0, cov1 = self._coverage(s)
+            lo, hi = max(r0, cov0), min(r1, cov1)
+            if lo < hi:
+                blk = sl.get_block(c)
+                out[lo - r0: hi - r0] = blk[lo - cov0: hi - cov0]
+        return out
+
+    def block_or(self, c: int, tile: int, n_blocks: int) -> np.ndarray:
+        """Per-tile OR-reduction of chunk ``c`` — bool ``(n_blocks, width)``.
+
+        The engine's tile∘chunk pruning input, computed shard by shard so
+        no host ever assembles the full chunk for it.
+        """
+        out = np.zeros((n_blocks, self._widths[c]), bool)
+        for s, sl in enumerate(self._slices):
+            cov0, cov1 = self._coverage(s)
+            hi = min(cov1, self.n_rows)
+            if hi <= cov0:
+                continue
+            blk = sl.get_block(c)
+            b0, b1 = cov0 // tile, (hi - 1) // tile
+            for b in range(b0, min(b1, n_blocks - 1) + 1):
+                lo = max(b * tile - cov0, 0)
+                up = min((b + 1) * tile - cov0, hi - cov0)
+                if up > lo:
+                    out[b] |= blk[lo:up].any(axis=0)
+        return out
+
+    # -- CorpusStore consumer API ---------------------------------------------
+
+    def chunk(self, c: int) -> ChunkView:
+        """Chunk ``c`` as a handle (incidence assembled across shards).
+
+        Unlike ``CorpusStore.chunk`` the incidence is a fresh assembly, not
+        a memoized view — caching assembled chunks would silently grow a
+        host's residency back to the full corpus.
+        """
+        s0 = self.chunk_start(c)
+        s1 = s0 + self._widths[c]
+        return ChunkView(
+            start=s0,
+            V=self.assemble_rows(c, 0, self.n_rows),
+            item=self.entry_item[s0:s1],
+            value=self.entry_value[s0:s1],
+            p=self.entry_p[s0:s1],
+            score=self.entry_score[s0:s1],
+        )
+
+    def iter_chunks(self) -> Iterator[ChunkView]:
+        """Iterate chunk handles in entry order."""
+        for c in range(self.n_chunks):
+            yield self.chunk(c)
+
+    def column(self, e: int) -> np.ndarray:
+        """Incidence column of entry ``e`` over live rows (assembled)."""
+        c, off = divmod(int(e), self.chunk_entries)
+        out = np.zeros(self.n_rows, np.int8)
+        for s, sl in enumerate(self._slices):
+            cov0, cov1 = self._coverage(s)
+            hi = min(cov1, self.n_rows)
+            if hi > cov0:
+                out[cov0:hi] = sl.get_block(c)[: hi - cov0, off]
+        return out
+
+    def providers(self, e: int) -> np.ndarray:
+        """S̄(E) — indices of the sources providing entry ``e``'s value."""
+        return np.nonzero(self.column(e))[0]
+
+    def slice_entries(self, e0: int, e1: int,
+                      dtype=np.int8, rows: Optional[int] = None) -> np.ndarray:
+        """Dense ``(rows, e1 − e0)`` gather of an entry range across chunks.
+
+        Bit-equal to ``CorpusStore.slice_entries`` over the same corpus —
+        the shard assembly only changes WHERE the rows come from.
+        """
+        e0, e1 = int(e0), int(e1)
+        n = self.n_rows if rows is None else int(rows)
+        out = np.zeros((n, e1 - e0), dtype)
+        w = self.chunk_entries
+        nr = min(n, self.n_rows)
+        for c in range(e0 // w if w else 0, self.n_chunks):
+            s0 = self.chunk_start(c)
+            if s0 >= e1:
+                break
+            s1 = s0 + self._widths[c]
+            lo, hi = max(e0, s0), min(e1, s1)
+            if lo < hi:
+                for s, sl in enumerate(self._slices):
+                    cov0, cov1 = self._coverage(s)
+                    rhi = min(cov1, nr)
+                    if rhi > cov0:
+                        blk = sl.get_block(c)
+                        out[cov0:rhi, lo - e0: hi - e0] = \
+                            blk[: rhi - cov0, lo - s0: hi - s0]
+        return out
+
+    def to_dense(self) -> np.ndarray:
+        """The full ``(n_rows, E)`` incidence — compat/debug accessor ONLY."""
+        if self.n_chunks == 0:
+            return np.zeros((self.n_rows, 0), np.int8)
+        return np.concatenate(
+            [self.assemble_rows(c, 0, self.n_rows)
+             for c in range(self.n_chunks)], axis=1)
+
+    def cooccurrence(self, stop: Optional[int] = None,
+                     dtype=np.float32,
+                     mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Pair co-occurrence counts over selected entries (chunk-streamed).
+
+        Same chunk order and float32 0/1-product arithmetic as
+        ``CorpusStore.cooccurrence`` — exact small integers, hence
+        bit-equal to the dense matmul for any sharding. Fully-selected
+        chunks whose shards are all bitpacked accumulate through
+        ``packed_count_matmul`` (byte-AND + popcount) without unpacking —
+        also exact integers, so equality still holds bit-for-bit.
+        """
+        S = self.n_rows
+        out = np.zeros((S, S), dtype)
+        stop_eff = self.n_entries if stop is None else int(stop)
+        for c in range(self.n_chunks):
+            s0 = self.chunk_start(c)
+            wc = self._widths[c]
+            if mask is not None:
+                m = mask[s0: s0 + wc]
+                if not m.any():
+                    continue
+                whole = bool(m.all())
+            else:
+                if s0 >= stop_eff:
+                    break
+                whole = s0 + wc <= stop_eff
+                m = None
+            if whole and self._packed_coocc(c, out, dtype):
+                continue
+            v = self.assemble_rows(c, 0, S)
+            if mask is not None and not whole:
+                v = v[:, m]
+            elif mask is None and not whole:
+                v = v[:, : stop_eff - s0]
+            v = v.astype(dtype)
+            out += v @ v.T
+        return out
+
+    def _packed_coocc(self, c: int, out: np.ndarray, dtype) -> bool:
+        """Accumulate chunk ``c``'s counts straight off packed bits.
+
+        Returns False (caller falls back to assembly) unless EVERY shard
+        holds the chunk as a resident ``PackedBlock``.
+        """
+        packs = []
+        for s, sl in enumerate(self._slices):
+            pb = sl.packed_block(c)
+            if pb is None:
+                return False
+            cov0, cov1 = self._coverage(s)
+            lv = max(min(cov1, self.n_rows) - cov0, 0)
+            packs.append((cov0, lv,
+                          PackedBlock(bits=pb.bits[:lv], width=pb.width)))
+        for i, (ri, ni, pi) in enumerate(packs):
+            if ni == 0:
+                continue
+            for rj, nj, pj in packs[i:]:
+                if nj == 0:
+                    continue
+                blk = packed_count_matmul(pi, pj, dtype)
+                out[ri: ri + ni, rj: rj + nj] += blk
+                if rj != ri:
+                    out[rj: rj + nj, ri: ri + ni] += blk.T
+        return True
+
+    # -- derived stores -----------------------------------------------------
+
+    def gather_entries(self, order: np.ndarray,
+                       chunk_entries: Optional[int] = None,
+                       capacity: Optional[int] = None) -> "ShardedCorpusStore":
+        """A sharded store whose column ``j`` is this store's ``order[j]``.
+
+        Same plan, shard by shard: shard ``s`` of the result is gathered
+        ONLY from shard ``s`` of the source — no host touches rows it does
+        not own. The result remembers ``(source, order)`` so corrupt spill
+        frames can be regathered (``_SpillRef`` fallback).
+        """
+        order = np.asarray(order, np.int64)
+        E_out = len(order)
+        w = (self.chunk_entries if chunk_entries is None
+             else align_chunk(chunk_entries))
+        cap = (self.capacity if capacity is None
+               else max(int(capacity), self.n_rows))
+        live = order >= 0
+        safe = np.where(live, order, 0)
+
+        item = np.full(E_out, -1, np.int32)
+        value = np.full(E_out, -1, np.int32)
+        p = np.zeros(E_out, np.float32)
+        score = np.zeros(E_out, np.float32)
+        item[live] = self.entry_item[safe[live]]
+        value[live] = self.entry_value[safe[live]]
+        p[live] = self.entry_p[safe[live]]
+        score[live] = self.entry_score[safe[live]]
+
+        starts = self._starts.copy()
+        slices, widths = [], []
+        for s in range(self.n_shards):
+            cov0 = int(starts[s])
+            cov1 = int(starts[s + 1]) if s + 1 < self.n_shards else cap
+            slices.append(_ShardSlice(s, cov0, max(cov1 - cov0, 0)))
+        for j0 in range(0, E_out, max(w, 1)):
+            width = min(w, E_out - j0)
+            widths.append(width)
+            sel = order[j0: j0 + width]
+            for s, sl in enumerate(slices):
+                blk = _gather_rows_cols(self, sel, sl.start,
+                                        sl.start + sl.cap_rows)
+                sl.blocks.append(blk)
+        out = ShardedCorpusStore(
+            slices=slices, starts=starts, widths=widths,
+            entry_item=item, entry_value=value, entry_p=p, entry_score=score,
+            chunk_entries=w, n_rows=self.n_rows, capacity=cap,
+            delta_start=None, epoch=0)
+        out._regather = (self, order)
+        for sl in out._slices:
+            sl._note_peak()
+        return out
+
+    # -- row mutation ---------------------------------------------------------
+
+    def append_rows(self, values_rows: np.ndarray,
+                    collect_touched: bool = False):
+        """Stage incidence rows for new sources (always in the LAST shard).
+
+        Semantics identical to ``CorpusStore.append_rows`` — global row ids
+        keep growing at the end, and the end of the row space belongs to
+        the last shard until a ``rebalance`` re-splits.
+        """
+        self._require_mutable()
+        values_rows = np.asarray(values_rows, np.int32)
+        q = values_rows.shape[0]
+        if self.n_rows + q > self.capacity:
+            raise ValueError(
+                f"append_rows: {q} rows exceed capacity "
+                f"({self.n_rows}/{self.capacity} used)")
+        last = self._slices[-1]
+        loc = self.n_rows - last.start
+        bits = 0
+        touched = []
+        for c in range(self.n_chunks):
+            s0 = self.chunk_start(c)
+            s1 = s0 + self._widths[c]
+            it = self.entry_item[s0:s1]
+            va = self.entry_value[s0:s1]
+            ok = it >= 0
+            hit = np.zeros((q, s1 - s0), np.int8)
+            if ok.any() and q:
+                hit[:, ok] = (
+                    values_rows[:, it[ok]] == va[ok][None, :]
+                ).astype(np.int8)
+            last.blocks[c][loc: loc + q] = hit
+            bits += int(hit.sum())
+            if collect_touched:
+                touched.append(s0 + np.nonzero(hit.any(axis=0))[0])
+        self.n_rows += q
+        if collect_touched:
+            return bits, (np.concatenate(touched) if touched
+                          else np.zeros(0, np.int64))
+        return bits
+
+    def truncate_rows(self, n_rows: int) -> None:
+        """Drop appended rows back down to ``n_rows`` (zeroing their slack)."""
+        self._require_mutable()
+        n_rows = int(n_rows)
+        if n_rows > self.n_rows:
+            raise ValueError(
+                f"truncate_rows({n_rows}) above n_rows={self.n_rows}")
+        last = self._slices[-1]
+        if n_rows < last.start:
+            raise ValueError(
+                f"truncate_rows({n_rows}) would cross the last shard "
+                f"boundary ({last.start}); retract_rows handles committed rows")
+        lo = n_rows - last.start
+        hi = self.n_rows - last.start
+        for blk in last.blocks:
+            blk[lo:hi] = 0
+        self.n_rows = n_rows
+
+    def retract_rows(self, row_ids: np.ndarray) -> None:
+        """Physically remove arbitrary live rows (source retraction).
+
+        Each shard compacts its own surviving rows in place (fresh arrays —
+        a pre-retraction snapshot's refs stay bit-exact for rollback); the
+        shard starts shift down by the rows removed before them. Bumps
+        ``epoch``. GC bookkeeping is the caller's job (``index.retract_rows``).
+        """
+        self._require_mutable()
+        row_ids = np.unique(np.asarray(row_ids, np.int64))
+        if len(row_ids) == 0:
+            return
+        if row_ids[0] < 0 or row_ids[-1] >= self.n_rows:
+            raise ValueError(
+                f"retract_rows: ids out of range [0, {self.n_rows})")
+        keep = np.ones(self.n_rows, bool)
+        keep[row_ids] = False
+        new_starts = self._starts.copy()
+        offset = 0
+        for s, sl in enumerate(self._slices):
+            cov0, cov1 = self._coverage(s)
+            hi = min(cov1, self.n_rows)
+            lv = max(hi - cov0, 0)
+            k_local = keep[cov0:hi]
+            n_keep = int(k_local.sum())
+            new_starts[s] = offset
+            for c in range(self.n_chunks):
+                old = sl.blocks[c]
+                blk = np.zeros((sl.cap_rows, old.shape[1]), np.int8)
+                if n_keep:
+                    blk[:n_keep] = old[:lv][k_local]
+                sl.blocks[c] = blk
+            offset += n_keep
+        for s, sl in enumerate(self._slices):
+            sl.start = int(new_starts[s])
+        self._starts = new_starts
+        self.capacity = int(new_starts[-1]) + self._slices[-1].cap_rows
+        self.n_rows = offset
+        self.epoch += 1
+
+    def deactivate_entries(self, entry_ids: np.ndarray) -> None:
+        """Turn entry columns into inert padding (retraction GC).
+
+        Copy-on-write on the touched blocks of EVERY shard and on the
+        global metadata arrays, mirroring ``CorpusStore.deactivate_entries``.
+        Bumps ``epoch``.
+        """
+        self._require_mutable()
+        entry_ids = np.asarray(entry_ids, np.int64)
+        if len(entry_ids) == 0:
+            return
+        w = self.chunk_entries
+        for cid in np.unique(entry_ids // w):
+            cols = entry_ids[entry_ids // w == cid] - cid * w
+            for sl in self._slices:
+                blk = sl.blocks[int(cid)].copy()
+                blk[:, cols] = 0
+                sl.blocks[int(cid)] = blk
+        item = self.entry_item.copy()
+        value = self.entry_value.copy()
+        p = self.entry_p.copy()
+        score = self.entry_score.copy()
+        item[entry_ids] = -1
+        value[entry_ids] = -1
+        p[entry_ids] = 0.0
+        score[entry_ids] = 0.0
+        self.entry_item, self.entry_value = item, value
+        self.entry_p, self.entry_score = p, score
+        self.epoch += 1
+
+    # -- entry mutation ---------------------------------------------------------
+
+    def _pad_last_chunk_full(self) -> None:
+        """Pad the trailing chunk to uniform width with inert columns.
+
+        Per-shard padded COPIES replace the old blocks (snapshot refs stay
+        bit-exact), and the global metadata grows the same inert columns
+        ``CorpusStore._pad_last_chunk_full`` would add.
+        """
+        if not self._widths:
+            return
+        w = self._widths[-1]
+        if w == self.chunk_entries:
+            return
+        pad = self.chunk_entries - w
+        for sl in self._slices:
+            old = sl.blocks[-1]
+            blk = np.zeros((sl.cap_rows, self.chunk_entries), np.int8)
+            blk[:, :w] = old
+            sl.blocks[-1] = blk
+        self._widths[-1] = self.chunk_entries
+        self.entry_item = np.concatenate(
+            [self.entry_item, np.full(pad, -1, np.int32)])
+        self.entry_value = np.concatenate(
+            [self.entry_value, np.full(pad, -1, np.int32)])
+        self.entry_p = np.concatenate(
+            [self.entry_p, np.zeros(pad, np.float32)])
+        self.entry_score = np.concatenate(
+            [self.entry_score, np.zeros(pad, np.float32)])
+
+    def append_entries(self, cols: np.ndarray, item, value, p, score) -> int:
+        """Append new entry columns as delta chunks, split by shard rows.
+
+        Mirrors ``CorpusStore.append_entries`` exactly in metadata and
+        chunk addressing; the new columns' rows land on the shard that
+        owns them. Bumps ``epoch``; returns delta chunks added.
+        """
+        self._require_mutable()
+        cols = np.asarray(cols, np.int8)
+        n_new = cols.shape[1]
+        if n_new == 0:
+            return 0
+        if cols.shape[0] != self.n_rows:
+            raise ValueError(
+                f"append_entries: {cols.shape[0]} rows, store has "
+                f"{self.n_rows}")
+        self._pad_last_chunk_full()
+        if self.delta_start is None:
+            self.delta_start = self.n_entries
+        w = self.chunk_entries
+        added = 0
+        for j0 in range(0, n_new, w):
+            width = min(w, n_new - j0)
+            for s, sl in enumerate(self._slices):
+                cov0, cov1 = self._coverage(s)
+                hi = min(cov1, self.n_rows)
+                blk = np.zeros((sl.cap_rows, width), np.int8)
+                if hi > cov0:
+                    blk[: hi - cov0] = cols[cov0:hi, j0: j0 + width]
+                sl.blocks.append(blk)
+            self._widths.append(width)
+            added += 1
+        self.entry_item = np.concatenate(
+            [self.entry_item, np.asarray(item, np.int32)])
+        self.entry_value = np.concatenate(
+            [self.entry_value, np.asarray(value, np.int32)])
+        self.entry_p = np.concatenate(
+            [self.entry_p, np.asarray(p, np.float32)])
+        self.entry_score = np.concatenate(
+            [self.entry_score, np.asarray(score, np.float32)])
+        self.epoch += 1
+        return added
+
+    def ensure_row_capacity(self, n: int) -> None:
+        """Grow row capacity (slack lives in the LAST shard; geometric)."""
+        self._require_mutable()
+        if n <= self.capacity:
+            return
+        new_cap = max(int(n), 2 * self.capacity)
+        last = self._slices[-1]
+        new_local = new_cap - last.start
+        lv = max(self.n_rows - last.start, 0)
+        for c in range(self.n_chunks):
+            blk = np.zeros((new_local, last.blocks[c].shape[1]), np.int8)
+            blk[:lv] = last.blocks[c][:lv]
+            last.blocks[c] = blk
+        last.cap_rows = new_local
+        self.capacity = new_cap
+        self.epoch += 1
+
+    # -- rebalance ---------------------------------------------------------------
+
+    def rebalance(self, tolerance: float = 0.25) -> bool:
+        """Re-split rows evenly when commit/retract growth skewed the plan.
+
+        Returns True when rows moved. Chunks are re-sliced one at a time
+        (transiently assembling ONE chunk, never the incidence whole);
+        see OPERATIONS.md for the operator runbook.
+        """
+        self._require_mutable()
+        new_plan = rebalance_plan(self.plan, self.n_rows, tolerance)
+        if np.array_equal(np.append(self._starts,
+                                    max(self.n_rows, int(self._starts[-1]))),
+                          new_plan.bounds):
+            return False
+        starts = new_plan.bounds[:-1].copy()
+        slices = []
+        for s in range(len(starts)):
+            cov0 = int(starts[s])
+            cov1 = (int(starts[s + 1]) if s + 1 < len(starts)
+                    else self.capacity)
+            slices.append(_ShardSlice(s, cov0, max(cov1 - cov0, 0)))
+        for c in range(self.n_chunks):
+            full = self.assemble_rows(c, 0, self.capacity)
+            for sl in slices:
+                sl.blocks.append(
+                    np.ascontiguousarray(
+                        full[sl.start: sl.start + sl.cap_rows]))
+        for sl in slices:
+            sl._owner = self
+            sl._note_peak()
+        self._slices = slices
+        self._starts = starts
+        self.epoch += 1
+        return True
+
+    # -- snapshot / serialization --------------------------------------------
+
+    def snapshot(self) -> "ShardedStoreSnapshot":
+        """Capture a rollback point (block refs, not copies — O(blocks))."""
+        return ShardedStoreSnapshot(
+            store=self,
+            blocks=[list(sl.blocks) for sl in self._slices],
+            cap_rows=[sl.cap_rows for sl in self._slices],
+            starts=self._starts.copy(), widths=list(self._widths),
+            entry_item=self.entry_item, entry_value=self.entry_value,
+            entry_p=self.entry_p, entry_score=self.entry_score,
+            n_rows=self.n_rows, capacity=self.capacity,
+            delta_start=self.delta_start, epoch=self.epoch)
+
+    def state_dict(self, prefix: str = "store/") -> dict:
+        """Flat ``{key: ndarray}`` dict capturing this store bit-exactly.
+
+        The chunk payload is identical to ``CorpusStore.state_dict`` over
+        the same corpus (assembled, trimmed to live rows) — an unsharded
+        loader reads it unchanged — plus a ``shard_starts`` key that
+        shard-aware loaders (``from_state_dict``, the service restore
+        path) use to re-establish the SAME row-range plan.
+        """
+        d = {
+            prefix + "meta": np.array(
+                [1, self.chunk_entries, self.n_rows,
+                 -1 if self.delta_start is None else self.delta_start,
+                 self.epoch, self.n_chunks], np.int64),
+            prefix + "entry_item": self.entry_item,
+            prefix + "entry_value": self.entry_value,
+            prefix + "entry_p": self.entry_p,
+            prefix + "entry_score": self.entry_score,
+            prefix + "shard_starts": np.concatenate(
+                [np.array([SHARD_LAYOUT_VERSION], np.int64), self._starts]),
+        }
+        for c in range(self.n_chunks):
+            d[f"{prefix}chunk_{c:05d}"] = self.assemble_rows(
+                c, 0, self.n_rows)
+        return d
+
+    @classmethod
+    def from_state_dict(cls, d: dict, prefix: str = "store/",
+                        capacity: Optional[int] = None) -> "ShardedCorpusStore":
+        """Rebuild a sharded store (same plan) from ``state_dict`` output."""
+        marker = np.asarray(d[prefix + "shard_starts"], np.int64)
+        if int(marker[0]) > SHARD_LAYOUT_VERSION:
+            raise ValueError(
+                f"shard layout version {int(marker[0])} is newer than this "
+                f"reader ({SHARD_LAYOUT_VERSION})")
+        base = CorpusStore.from_state_dict(d, prefix=prefix,
+                                           capacity=capacity)
+        plan = ShardPlan(bounds=np.append(marker[1:], base.n_rows))
+        return shard_store(base, plan)
+
+
+@dataclass
+class ShardedStoreSnapshot:
+    """Rollback point for one ``ShardedCorpusStore`` (refs, not copies)."""
+
+    store: "ShardedCorpusStore"
+    blocks: list                 # per shard: list of block refs
+    cap_rows: list
+    starts: np.ndarray
+    widths: list
+    entry_item: np.ndarray
+    entry_value: np.ndarray
+    entry_p: np.ndarray
+    entry_score: np.ndarray
+    n_rows: int
+    capacity: int
+    delta_start: Optional[int]
+    epoch: int
+
+    def restore(self) -> None:
+        """Put the captured store back to its snapshot state, bit-exact.
+
+        Restores block refs, shard starts, and capacities, then zeroes the
+        row slack of every dense block — staged rows were written in place
+        (the same contract as ``StoreSnapshot.restore``).
+        """
+        st = self.store
+        for s, sl in enumerate(st._slices):
+            sl.blocks = list(self.blocks[s])
+            sl.cap_rows = int(self.cap_rows[s])
+            sl.start = int(self.starts[s])
+            sl._lru.clear()
+        st._starts = self.starts.copy()
+        st._widths = list(self.widths)
+        st.entry_item = self.entry_item
+        st.entry_value = self.entry_value
+        st.entry_p = self.entry_p
+        st.entry_score = self.entry_score
+        st.delta_start = self.delta_start
+        st.epoch = self.epoch
+        st.n_rows = self.n_rows
+        st.capacity = self.capacity
+        for s, sl in enumerate(st._slices):
+            cov0, cov1 = st._coverage(s)
+            lv = max(min(cov1, st.n_rows) - cov0, 0)
+            for blk in sl.blocks:
+                if isinstance(blk, np.ndarray):
+                    blk[lv:] = 0
+
+
+def shard_store(store: CorpusStore, plan) -> ShardedCorpusStore:
+    """Slice a ``CorpusStore`` into a ``ShardedCorpusStore`` under ``plan``.
+
+    ``plan`` is a ``ShardPlan`` or a shard count. Incidence rows are COPIED
+    into per-shard blocks (the source store is not mutated); entry metadata
+    arrays are shared (both sides follow copy-on-write). Row slack beyond
+    the committed rows lands in the last shard.
+    """
+    if isinstance(plan, int):
+        plan = make_shard_plan(store.n_rows, plan)
+    if plan.n_rows != store.n_rows:
+        raise ValueError(
+            f"plan covers {plan.n_rows} rows, store has {store.n_rows}")
+    starts = plan.bounds[:-1].copy()
+    n_shards = plan.n_shards
+    slices = []
+    widths = [blk.shape[1] for blk in store.chunks]
+    for s in range(n_shards):
+        cov0 = int(starts[s])
+        cov1 = int(starts[s + 1]) if s + 1 < n_shards else store.capacity
+        sl = _ShardSlice(s, cov0, max(cov1 - cov0, 0))
+        for c in range(store.n_chunks):
+            blk = np.zeros((sl.cap_rows, widths[c]), np.int8)
+            lv = max(min(cov1, store.n_rows) - cov0, 0)
+            if lv:
+                blk[:lv] = store.chunks[c][cov0: cov0 + lv]
+            sl.blocks.append(blk)
+        sl._note_peak()
+        slices.append(sl)
+    return ShardedCorpusStore(
+        slices=slices, starts=starts, widths=widths,
+        entry_item=store.entry_item, entry_value=store.entry_value,
+        entry_p=store.entry_p, entry_score=store.entry_score,
+        chunk_entries=store.chunk_entries, n_rows=store.n_rows,
+        capacity=store.capacity, delta_start=store.delta_start,
+        epoch=store.epoch)
+
+
+__all__ = [
+    "SHARD_LAYOUT_VERSION", "SealedShardError", "ShardPlan", "ShardScanError",
+    "ShardedCorpusStore", "ShardedStoreSnapshot", "SpillCorruptionError",
+    "make_shard_plan", "merge_shard_partials", "rebalance_plan",
+    "shard_store",
+]
+

@@ -654,6 +654,84 @@ class CorpusStore:
                    chunk_entries=w, n_rows=n_rows, capacity=cap)
 
 
+# ---------------------------------------------------------------------------
+# Bitpacked membership (sharded data plane, DESIGN.md §10)
+# ---------------------------------------------------------------------------
+
+#: Byte → set-bit-count lookup table for ``packed_count_matmul``.
+_POPCOUNT = np.array([bin(i).count("1") for i in range(256)], np.int64)
+
+
+@dataclass(frozen=True)
+class PackedBlock:
+    """One bitpacked incidence block: int8 membership at 1 bit per entry.
+
+    ``bits[r, :]`` is row ``r``'s membership packed MSB-first along the
+    column axis (``np.packbits`` layout); ``width`` records the original
+    column count because the packed byte axis rounds up to a multiple of 8
+    — trailing pad bits are always zero, so AND/popcount arithmetic over
+    whole bytes never sees phantom members. Packed blocks are immutable
+    (frozen): mutation paths unpack, edit, repack.
+    """
+
+    bits: np.ndarray           # (rows, ceil(width/8)) uint8
+    width: int                 # original (unpacked) column count
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes — the packed payload (1 bit per entry)."""
+        return int(self.bits.nbytes)
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (rows, width) of the unpacked block."""
+        return (int(self.bits.shape[0]), int(self.width))
+
+
+def pack_membership(block: np.ndarray) -> PackedBlock:
+    """Pack a 0/1 int8 membership block to 1 bit per entry (8× vs int8).
+
+    Any width is accepted — widths that are not a multiple of 8 pad the
+    final byte with zero bits (``unpack_membership`` trims them back via
+    ``count=width``), so the ``align_chunk`` 8-column invariant is a kernel
+    concern, not a packing requirement.
+    """
+    block = np.ascontiguousarray(block)
+    if block.ndim != 2:
+        raise ValueError(f"pack_membership: need a 2-D block, got {block.shape}")
+    return PackedBlock(bits=np.packbits(block != 0, axis=1),
+                       width=int(block.shape[1]))
+
+
+def unpack_membership(packed: PackedBlock, dtype=np.int8) -> np.ndarray:
+    """Inverse of ``pack_membership`` — bit-exact for 0/1 input blocks."""
+    return np.unpackbits(packed.bits, axis=1,
+                         count=packed.width).astype(dtype)
+
+
+def packed_count_matmul(a: PackedBlock, b: Optional[PackedBlock] = None,
+                        dtype=np.float32, row_block: int = 256) -> np.ndarray:
+    """``counts[i, j] = Σ_e a[i, e] · b[j, e]`` straight off the packed bits.
+
+    Byte-wise AND + popcount — every partial sum is an exact small integer,
+    so the result is bit-equal to the int8 matmul in ``dtype`` (float32
+    holds integers < 2²⁴ exactly, same argument as ``cooccurrence``).
+    ``b=None`` means ``a @ a.T``. ``row_block`` bounds the (rows_a ·
+    rows_b · bytes) AND temporary.
+    """
+    other = a if b is None else b
+    if b is not None and a.width != b.width:
+        raise ValueError(
+            f"packed_count_matmul: width mismatch {a.width} vs {b.width}")
+    n, m = a.bits.shape[0], other.bits.shape[0]
+    out = np.zeros((n, m), dtype)
+    for i0 in range(0, n, max(int(row_block), 1)):
+        blk = a.bits[i0: i0 + row_block]
+        anded = blk[:, None, :] & other.bits[None, :, :]
+        out[i0: i0 + row_block] = _POPCOUNT[anded].sum(axis=2).astype(dtype)
+    return out
+
+
 @dataclass
 class StoreSnapshot:
     """Rollback point for one ``CorpusStore`` (refs captured by ``snapshot``)."""
@@ -696,5 +774,6 @@ class StoreSnapshot:
             c[self.n_rows:] = 0
 
 
-__all__ = ["CorpusStore", "ChunkView", "StoreSnapshot",
-           "DEFAULT_CHUNK_ENTRIES", "STORE_LAYOUT_VERSION", "align_chunk"]
+__all__ = ["CorpusStore", "ChunkView", "PackedBlock", "StoreSnapshot",
+           "DEFAULT_CHUNK_ENTRIES", "STORE_LAYOUT_VERSION", "align_chunk",
+           "pack_membership", "packed_count_matmul", "unpack_membership"]

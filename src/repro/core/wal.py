@@ -57,6 +57,7 @@ MANIFEST_VERSION = 1
 
 _REC_MAGIC = b"CDWR"            # per-record magic, commit log
 _SNAP_MAGIC = b"CDSN"           # snapshot file magic
+SPILL_MAGIC = b"CDSP"           # spilled-chunk file magic (core/shardplan.py)
 #: Record header: magic, version u16, record type u16, payload bytes u32,
 #: CRC32 of the payload u32 — 16 bytes, little-endian.
 _REC_HEADER = struct.Struct("<4sHHII")
@@ -359,6 +360,59 @@ class CommitLog:
 
 
 # ---------------------------------------------------------------------------
+# Framed containers (snapshots + spilled shard chunks share one format)
+# ---------------------------------------------------------------------------
+
+def write_framed(path: str, arrays: dict, magic: bytes = _SNAP_MAGIC,
+                 version: int = SNAPSHOT_VERSION, fsync: bool = True) -> str:
+    """Atomically write a checksummed framed npz container at ``path``.
+
+    One header (magic, version, payload length, CRC32) followed by the npz
+    payload — the same frame snapshots use, parameterized on ``magic`` so
+    other single-blob files (``core/shardplan.py``'s spilled chunks) reuse
+    the torn-write/bit-rot detection instead of inventing a format. The
+    write goes through a temp file + ``os.replace`` so a crash mid-write
+    never leaves a half-written file under the canonical name. Returns
+    ``path``.
+    """
+    payload = _encode_arrays(arrays)
+    header = _SNAP_HEADER.pack(magic, version, 0,
+                               len(payload), zlib.crc32(payload))
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(header)
+        f.write(payload)
+        f.flush()
+        if fsync:
+            os.fsync(f.fileno())
+    os.replace(tmp, path)
+    return path
+
+
+def load_framed(path: str, magic: bytes = _SNAP_MAGIC,
+                version: int = SNAPSHOT_VERSION) -> dict:
+    """Load one framed container; raises ``WalError`` when the frame is
+    invalid (bad magic, newer version, truncation, CRC mismatch)."""
+    with open(path, "rb") as f:
+        header = f.read(_SNAP_HEADER.size)
+        if len(header) < _SNAP_HEADER.size:
+            raise WalError(f"{path}: truncated frame header")
+        got_magic, got_version, _, length, crc = _SNAP_HEADER.unpack(header)
+        if got_magic != magic:
+            raise WalError(f"{path}: bad frame magic {got_magic!r}")
+        if got_version > version:
+            raise WalError(
+                f"{path}: frame version {got_version} is newer than this "
+                f"reader ({version})")
+        payload = f.read(length)
+    if len(payload) < length:
+        raise WalError(f"{path}: truncated frame payload")
+    if zlib.crc32(payload) != crc:
+        raise WalError(f"{path}: frame checksum mismatch")
+    return _decode_arrays(payload)
+
+
+# ---------------------------------------------------------------------------
 # Snapshots
 # ---------------------------------------------------------------------------
 
@@ -371,23 +425,11 @@ def write_snapshot(state_dir: str, epoch: int, arrays: dict,
                    retention: int = 0) -> str:
     """Serialize ``arrays`` as the epoch's snapshot file, atomically.
 
-    The payload is framed with ``SNAPSHOT_VERSION`` and a CRC32 so loads can
-    reject truncated or bit-rotted files; the write goes through a temp file
-    + ``os.replace`` so a crash mid-write never leaves a half-written file
-    under the canonical name. ``retention > 0`` prunes older snapshots down
+    A ``write_framed`` container (``SNAPSHOT_VERSION`` + CRC32) under the
+    canonical epoch filename; ``retention > 0`` prunes older snapshots down
     to that many afterwards. Returns the written path.
     """
-    payload = _encode_arrays(arrays)
-    header = _SNAP_HEADER.pack(_SNAP_MAGIC, SNAPSHOT_VERSION, 0,
-                               len(payload), zlib.crc32(payload))
-    path = snapshot_path(state_dir, epoch)
-    tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(header)
-        f.write(payload)
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(tmp, path)
+    path = write_framed(snapshot_path(state_dir, epoch), arrays)
     if retention > 0:
         for _, old in list_snapshots(state_dir)[:-retention]:
             try:
@@ -400,23 +442,7 @@ def write_snapshot(state_dir: str, epoch: int, arrays: dict,
 def load_snapshot(path: str) -> dict:
     """Load one snapshot file; raises ``WalError`` when the frame is invalid
     (bad magic, newer version, truncation, CRC mismatch)."""
-    with open(path, "rb") as f:
-        header = f.read(_SNAP_HEADER.size)
-        if len(header) < _SNAP_HEADER.size:
-            raise WalError(f"{path}: truncated snapshot header")
-        magic, version, _, length, crc = _SNAP_HEADER.unpack(header)
-        if magic != _SNAP_MAGIC:
-            raise WalError(f"{path}: bad snapshot magic {magic!r}")
-        if version > SNAPSHOT_VERSION:
-            raise WalError(
-                f"{path}: snapshot version {version} is newer than this "
-                f"reader ({SNAPSHOT_VERSION})")
-        payload = f.read(length)
-    if len(payload) < length:
-        raise WalError(f"{path}: truncated snapshot payload")
-    if zlib.crc32(payload) != crc:
-        raise WalError(f"{path}: snapshot checksum mismatch")
-    return _decode_arrays(payload)
+    return load_framed(path)
 
 
 def list_snapshots(state_dir: str) -> list:
@@ -481,7 +507,8 @@ __all__ = [
     "CommitLog", "CommitRecord", "DurabilityOptions", "NoValidSnapshotError",
     "RecoveryInfo", "ReplayDivergenceError", "RestoreInfo", "RetractRecord",
     "WalError", "LOG_NAME", "MANIFEST_NAME", "MANIFEST_VERSION",
-    "SNAPSHOT_VERSION", "WAL_VERSION", "latest_valid_snapshot",
-    "list_snapshots", "load_snapshot", "read_manifest", "snapshot_path",
+    "SNAPSHOT_VERSION", "SPILL_MAGIC", "WAL_VERSION",
+    "latest_valid_snapshot", "list_snapshots", "load_framed",
+    "load_snapshot", "read_manifest", "snapshot_path", "write_framed",
     "write_manifest", "write_snapshot",
 ]

@@ -128,6 +128,16 @@ def serve_detect(args):
         max_batch_requests=args.batch_requests,
         max_pending_rows=args.max_pending_rows,
         tile=args.tile, devices=args.devices)
+    if args.shards and args.shards > 1:
+        # row-range-sharded corpus plane (DESIGN.md §10): each detection
+        # pass scans per shard and merges; spill/bitpack bound residency
+        service_kw.update(
+            n_shards=args.shards, shard_pack=args.shard_pack,
+            shard_spill_bytes=args.shard_spill_bytes,
+            shard_spill_dir=args.shard_spill_dir)
+    if args.mesh_shape:
+        d, pod = (int(x) for x in args.mesh_shape.split("x"))
+        service_kw["mesh_shape"] = (d, pod)
     if args.state_dir:
         service_kw["durability"] = DurabilityOptions(
             state_dir=args.state_dir, snapshot_every=args.snapshot_every)
@@ -214,6 +224,12 @@ def serve_detect(args):
         print(f"[serve] latency p50={np.percentile(lat, 50) * 1e3:.0f} ms "
               f"p99={np.percentile(lat, 99) * 1e3:.0f} ms; "
               f"planted copiers detected {hits}/{planted}")
+    if args.shards and args.shards > 1:
+        es = _services(svc)[0].engine.last_stats
+        print(f"[serve] shard plane: {es.get('n_shards')} shards "
+              f"{es.get('shard_plan')}, peak resident/shard "
+              f"{es.get('shard_peak_resident_bytes')} bytes, "
+              f"mesh={es.get('mesh_shape') or '1-D'}")
     if args.deadline_s is not None:
         st = svc.stats
         limits = [s._batch_limit for s in _services(svc)]
@@ -308,6 +324,22 @@ def main():
                     help="backpressure bound on queued query rows")
     ap.add_argument("--tile", type=int, default=256)
     ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=None,
+                    help="row-range shards of the corpus data plane "
+                         "(DESIGN.md §10); each detection pass scans per "
+                         "shard and merges bit-equal to unsharded")
+    ap.add_argument("--shard-pack", action="store_true",
+                    help="bitpack shard chunk blocks to 1 bit/entry "
+                         "during scans (8x over int8)")
+    ap.add_argument("--shard-spill-bytes", type=int, default=None,
+                    help="per-shard resident byte cap; cold blocks spill "
+                         "to checksummed frames (LRU)")
+    ap.add_argument("--shard-spill-dir", default=None,
+                    help="spill directory (default: a temp dir when a "
+                         "byte cap is set)")
+    ap.add_argument("--mesh-shape", default=None,
+                    help="2-D tile mesh DATAxPOD (e.g. 4x2): tiles over "
+                         "data, entry chunks over pod")
     ap.add_argument("--commit-accepted", action="store_true",
                     help="after the first wave, commit every served "
                          "request's rows into the live corpus (delta-chunk "

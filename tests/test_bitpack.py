@@ -1,0 +1,87 @@
+"""Bitpacked membership (1 bit/entry): identity + exact-count properties.
+
+``pack_membership`` / ``unpack_membership`` must be a lossless pair for
+every block shape — widths that are NOT multiples of 8 included (the
+packed byte axis rounds up; the 8-column ``align_chunk`` invariant is a
+kernel concern, not a packing requirement) — and ``packed_count_matmul``
+must be bit-equal to the int8 matmul: byte-AND + popcount partial sums
+are exact small integers, the same argument ``cooccurrence`` relies on.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PackedBlock,
+    pack_membership,
+    packed_count_matmul,
+    unpack_membership,
+)
+
+ODD_WIDTHS = [1, 3, 7, 8, 9, 13, 16, 27, 64, 100]
+
+
+@pytest.mark.parametrize("width", ODD_WIDTHS)
+def test_pack_unpack_identity_any_width(width):
+    rng = np.random.default_rng(width)
+    block = (rng.random((17, width)) < 0.4).astype(np.int8)
+    packed = pack_membership(block)
+    assert packed.width == width
+    assert packed.bits.shape == (17, -(-width // 8))
+    assert np.array_equal(unpack_membership(packed), block)
+    # trailing pad bits of the final byte must be zero (phantom members
+    # would corrupt whole-byte AND/popcount arithmetic)
+    full = np.unpackbits(packed.bits, axis=1)
+    assert not full[:, width:].any()
+
+
+@pytest.mark.parametrize("fill", [0, 1])
+def test_pack_unpack_all_zero_all_one(fill):
+    for width in (5, 8, 21):
+        block = np.full((9, width), fill, np.int8)
+        out = unpack_membership(pack_membership(block))
+        assert np.array_equal(out, block)
+
+
+def test_pack_rejects_non_2d():
+    with pytest.raises(ValueError):
+        pack_membership(np.zeros(8, np.int8))
+
+
+def test_packed_matmul_rejects_width_mismatch():
+    a = pack_membership(np.zeros((2, 8), np.int8))
+    b = pack_membership(np.zeros((2, 9), np.int8))
+    with pytest.raises(ValueError):
+        packed_count_matmul(a, b)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), rows=st.integers(1, 40),
+       width=st.integers(1, 70), density=st.floats(0.0, 1.0))
+def test_pack_unpack_identity_property(seed, rows, width, density):
+    rng = np.random.default_rng(seed)
+    block = (rng.random((rows, width)) < density).astype(np.int8)
+    assert np.array_equal(unpack_membership(pack_membership(block)), block)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n=st.integers(1, 30),
+       m=st.integers(1, 30), width=st.integers(1, 60))
+def test_packed_count_matmul_equals_int8(seed, n, m, width):
+    rng = np.random.default_rng(seed)
+    a = (rng.random((n, width)) < 0.4).astype(np.int8)
+    b = (rng.random((m, width)) < 0.4).astype(np.int8)
+    pa, pb = pack_membership(a), pack_membership(b)
+    ref = (a.astype(np.float32) @ b.T.astype(np.float32))
+    assert np.array_equal(packed_count_matmul(pa, pb), ref)
+    self_ref = (a.astype(np.float32) @ a.T.astype(np.float32))
+    assert np.array_equal(packed_count_matmul(pa), self_ref)
+    # small row_block forces the blocked path through several strips
+    assert np.array_equal(packed_count_matmul(pa, pb, row_block=3), ref)
+
+
+def test_packed_block_is_immutable():
+    packed = pack_membership(np.ones((2, 8), np.int8))
+    with pytest.raises(Exception):
+        packed.width = 16
+    assert isinstance(packed, PackedBlock)

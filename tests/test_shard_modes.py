@@ -1,0 +1,142 @@
+"""ISSUE 8 acceptance: row-range-sharded decisions are bit-equal to the
+unsharded engine — every engine mode, S ∈ {64, 512} × {1, 2, 4} shards ×
+{1, 8} devices — and stay bit-equal after a commit → retract → commit
+schedule replayed through the WAL on each shard count.
+
+Mirrors tests/test_store_modes.py: one subprocess with 8 virtual devices;
+device counts run via the engine's ``devices`` option inside one process.
+Host-side indexed modes (exact, bound family, incremental) never touch the
+mesh, so they run at 1 device; the tiled modes (bucketed, sampled,
+sample_verify) run under both mesh sizes. Exactness-preserving modes are
+additionally pinned to ``index_detect_exact`` — the unsharded reference
+the ISSUE names.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import shutil
+    import tempfile
+    import numpy as np
+    from repro.core import (CopyConfig, DetectionEngine, DurabilityOptions,
+                            ShardedCorpusStore)
+    from repro.core.bucketed import index_detect_exact
+    from repro.core.serving import DetectionService
+    from repro.data.claims import (
+        SyntheticSpec, oracle_claim_probs, synthetic_claims,
+        synthetic_query_rows)
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+    TILED = ("bucketed", "sampled", "sample_verify")
+    # modes the suite pins to INDEX decisions (the bound family prunes
+    # with early decisions, so it is only reference-equal to itself)
+    EXACTNESS = ("exact", "bucketed")
+
+    def decisions(mode, sc, p, n_shards, devices):
+        kw = {"n_shards": n_shards} if n_shards > 1 else {}
+        eng = DetectionEngine(cfg, mode=mode, tile=64, devices=devices,
+                              sample_rate=0.2, sample_seed=1, **kw)
+        out = [eng.detect(sc.dataset, p).copying]
+        if mode == "incremental":
+            # round 2 exercises the delta path over the (sharded) store
+            rng = np.random.default_rng(7)
+            p2 = np.clip(p + np.where(p > 0, rng.normal(0, 0.004, p.shape), 0),
+                         1e-3, 0.999).astype(np.float32)
+            out.append(eng.detect(sc.dataset, p2).copying)
+        return out
+
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        exact_ref = index_detect_exact(sc.dataset, p, cfg).copying
+        for mode in ("pairwise", "exact", "bound", "bound+", "hybrid",
+                     "incremental", "sampled", "sample_verify", "bucketed"):
+            dev_counts = (1, 8) if mode in TILED else (1,)
+            for n_dev in dev_counts:
+                ref = decisions(mode, sc, p, 1, n_dev)
+                for n_shards in (1, 2, 4):
+                    got = decisions(mode, sc, p, n_shards, n_dev)
+                    eq = all(np.array_equal(a, b) for a, b in zip(ref, got))
+                    if mode in EXACTNESS:
+                        eq = eq and np.array_equal(got[0], exact_ref)
+                    out[f"S{S}/{mode}/dev{n_dev}/shards{n_shards}"] = {
+                        "equal": bool(eq),
+                        "copying_bits": int(sum(x.sum() for x in got))}
+
+    # commit -> retract -> commit, replayed through the WAL per shard count
+    S, spec = 64, specs[64]
+    sc = synthetic_claims(spec)
+    p = oracle_claim_probs(sc)
+    vals, acc, pq, _ = synthetic_query_rows(sc, 12, seed=3)
+    wal_ref = None
+    for n_shards in (1, 2, 4):
+        kw = {"n_shards": n_shards} if n_shards > 1 else {}
+        state_dir = tempfile.mkdtemp(prefix=f"shard{n_shards}-")
+        try:
+            live = DetectionService(
+                sc.dataset, p, cfg, mode="bucketed", tile=64,
+                durability=DurabilityOptions(state_dir=state_dir,
+                                             snapshot_every=2), **kw)
+            live.commit(vals[:6], acc[:6], pq[:6])
+            live.retract([S + 1, S + 3, S + 4])
+            live.commit(vals[6:12], acc[6:12], pq[6:12])
+            restored = DetectionService.restore(state_dir)
+
+            dense_live = live._index.store.to_dense()
+            dense_rest = restored._index.store.to_dense()
+            if wal_ref is None:
+                wal_ref = dense_live          # unsharded schedule outcome
+            rest_store = restored._index.store
+            out[f"wal/shards{n_shards}"] = {
+                "live_equal_unsharded": bool(
+                    np.array_equal(dense_live, wal_ref)),
+                "restored_equal_live": bool(
+                    np.array_equal(dense_rest, dense_live)),
+                "epoch_equal": restored.epoch == live.epoch,
+                "replayed": int(restored.restore_info.replayed_commits),
+                "sharded_restore": (n_shards == 1) or (
+                    isinstance(rest_store, ShardedCorpusStore)
+                    and rest_store.n_shards == n_shards),
+            }
+        finally:
+            shutil.rmtree(state_dir, ignore_errors=True)
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_all_modes_sharded_vs_unsharded_identical():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=1800,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    matrix = {k: v for k, v in out.items() if not k.startswith("wal/")}
+    # per S: 6 host-mode combos + 3 tiled modes × 2 devices = 12 mode/dev
+    # cells, each at 3 shard counts → 36; × 2 corpus sizes = 72
+    assert len(matrix) == 72, sorted(matrix)
+    for combo, r in matrix.items():
+        assert r["equal"], f"{combo}: sharded decisions diverged"
+    assert any(r["copying_bits"] > 0 for r in matrix.values())
+
+    wal = {k: v for k, v in out.items() if k.startswith("wal/")}
+    assert len(wal) == 3, sorted(wal)
+    for combo, r in wal.items():
+        assert r["live_equal_unsharded"], f"{combo}: schedule diverged"
+        assert r["restored_equal_live"], f"{combo}: WAL replay diverged"
+        assert r["epoch_equal"], f"{combo}: epoch diverged after restore"
+        assert r["sharded_restore"], f"{combo}: restore lost the shard plan"
+        assert r["replayed"] >= 1, f"{combo}: nothing replayed from the WAL"

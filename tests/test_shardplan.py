@@ -1,0 +1,154 @@
+"""Property tests (hypothesis) on the row-range-sharded corpus data plane.
+
+Random row-range plans — uneven, empty, and single-row shards included —
+must be invisible to every consumer: gather / co-occurrence / slice /
+column reads off the ``ShardedCorpusStore`` facade are bit-exact against
+the dense ``CorpusStore``, partial-grid merging matches the single-host
+reduction (sum for counts, MAX for the p̂-error channel), and a
+spill → reload → gather roundtrip is bit-exact under random eviction
+orders. Runs under the deterministic fallback shim when hypothesis is not
+installed (tests/conftest.py).
+"""
+import tempfile
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    CorpusStore,
+    ShardPlan,
+    make_shard_plan,
+    merge_shard_partials,
+    rebalance_plan,
+    shard_store,
+)
+
+CE = 16  # chunk width (multiple of 8) — small, so stores are multi-chunk
+
+
+def _random_store(rng, n_rows, n_entries):
+    """A CorpusStore with random sparse incidence + random metadata."""
+    dense = (rng.random((n_rows, n_entries)) < 0.3).astype(np.int8)
+    chunks = [np.ascontiguousarray(dense[:, i: i + CE])
+              for i in range(0, n_entries, CE)]
+    return dense, CorpusStore(
+        chunks=chunks,
+        entry_item=rng.integers(0, 40, n_entries).astype(np.int32),
+        entry_value=rng.integers(0, 5, n_entries).astype(np.int32),
+        entry_p=rng.random(n_entries).astype(np.float32),
+        entry_score=rng.random(n_entries).astype(np.float32),
+        chunk_entries=CE, n_rows=n_rows, capacity=n_rows)
+
+
+def _random_plan(rng, n_rows, n_shards):
+    """Row-range plan with random cuts: uneven, empty, single-row shards."""
+    cuts = np.sort(rng.integers(0, n_rows + 1, n_shards - 1))
+    return ShardPlan(bounds=np.concatenate(([0], cuts, [n_rows])))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n_rows=st.integers(1, 96),
+       n_shards=st.integers(1, 6))
+def test_random_plan_reads_bit_exact(seed, n_rows, n_shards):
+    rng = np.random.default_rng(seed)
+    n_entries = int(rng.integers(1, 4)) * CE - int(rng.integers(0, 8))
+    dense, store = _random_store(rng, n_rows, n_entries)
+    sh = shard_store(store, _random_plan(rng, n_rows, n_shards))
+
+    assert np.array_equal(sh.to_dense(), dense)
+    e = int(rng.integers(0, n_entries))
+    assert np.array_equal(sh.column(e), dense[:, e])
+    assert np.array_equal(sh.providers(e), np.nonzero(dense[:, e])[0])
+    e0 = int(rng.integers(0, n_entries))
+    e1 = int(rng.integers(e0, n_entries)) + 1
+    assert np.array_equal(sh.slice_entries(e0, e1),
+                          store.slice_entries(e0, e1))
+    assert np.array_equal(sh.cooccurrence(), store.cooccurrence())
+    mask = rng.random(n_entries) < 0.5
+    assert np.array_equal(sh.cooccurrence(mask=mask),
+                          store.cooccurrence(mask=mask))
+    # gather (with -1 inert padding markers) preserves the plan + the bits
+    order = rng.integers(-1, n_entries, int(rng.integers(1, 2 * CE)))
+    g_sh, g_ref = sh.gather_entries(order), store.gather_entries(order)
+    assert np.array_equal(g_sh.to_dense(), g_ref.to_dense())
+    assert np.array_equal(g_sh.entry_item, g_ref.entry_item)
+    assert g_sh.n_shards == sh.n_shards
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n_shards=st.integers(1, 5),
+       s_pad=st.integers(1, 24))
+def test_merge_partials_matches_single_host(seed, n_shards, s_pad):
+    rng = np.random.default_rng(seed)
+    # integer-valued count grids (sums exact in any order) + float err grid
+    partials = [tuple(
+        [rng.integers(0, 99, (s_pad, s_pad)).astype(np.float32)
+         for _ in range(3)]
+        + [rng.random((s_pad, s_pad)).astype(np.float32)])
+        for _ in range(n_shards)]
+    c_same, count, outside, err = merge_shard_partials(partials)
+    stacked = [np.stack([p[k] for p in partials]) for k in range(4)]
+    assert np.array_equal(c_same, stacked[0].sum(axis=0))
+    assert np.array_equal(count, stacked[1].sum(axis=0))
+    assert np.array_equal(outside, stacked[2].sum(axis=0))
+    # the p̂-error channel merges by MAX: a bound must stay a bound
+    assert np.array_equal(err, stacked[3].max(axis=0))
+    empty = merge_shard_partials([], shape=(s_pad, s_pad))
+    assert all(np.array_equal(g, np.zeros((s_pad, s_pad), np.float32))
+               for g in empty)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n_rows=st.integers(1, 80),
+       n_shards=st.integers(1, 5), pack=st.booleans())
+def test_spill_reload_gather_roundtrip(seed, n_rows, n_shards, pack):
+    rng = np.random.default_rng(seed)
+    n_entries = 3 * CE - int(rng.integers(0, 8))
+    dense, store = _random_store(rng, n_rows, n_entries)
+    sh = shard_store(store, _random_plan(rng, n_rows, n_shards))
+    with tempfile.TemporaryDirectory() as spill:
+        sh.seal(pack=pack, spill_dir=spill)
+        # evict every (shard, chunk) block in a random order, twice —
+        # reloads must heal and re-evictions must stay bit-stable
+        cells = [(s, c) for s in range(sh.n_shards)
+                 for c in range(sh.n_chunks)]
+        for _ in range(2):
+            for i in rng.permutation(len(cells)):
+                sh.evict_block(*cells[i])
+            assert np.array_equal(sh.to_dense(), dense)
+        order = rng.integers(-1, n_entries, 2 * CE)
+        got = sh.gather_entries(order).to_dense()
+    ref = store.gather_entries(order).to_dense()
+    assert np.array_equal(got, ref)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_rows=st.integers(0, 500), n_shards=st.integers(1, 9))
+def test_make_shard_plan_partitions_rows(n_rows, n_shards):
+    plan = make_shard_plan(n_rows, n_shards)
+    assert plan.n_shards == n_shards
+    assert plan.n_rows == n_rows
+    assert sum(plan.sizes()) == n_rows
+    assert max(plan.sizes(), default=0) - min(plan.sizes(), default=0) <= 1
+    for r in range(n_rows):
+        s = plan.owner_of_row(r)
+        r0, r1 = plan.range_of(s)
+        assert r0 <= r < r1
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n_rows=st.integers(2, 300),
+       n_shards=st.integers(2, 6))
+def test_rebalance_plan_restores_balance(seed, n_rows, n_shards):
+    rng = np.random.default_rng(seed)
+    plan = _random_plan(rng, n_rows, n_shards)
+    out = rebalance_plan(plan, n_rows)
+    assert out.n_rows == n_rows and out.n_shards == n_shards
+    assert sum(out.sizes()) == n_rows
+    # either the skew was within tolerance (plan kept) or it was re-split
+    # from scratch into a balanced plan (sizes differ by at most one)
+    sizes = out.sizes()
+    assert out.imbalance() <= 1.25 or sizes.max() - sizes.min() <= 1
+    balanced = make_shard_plan(n_rows, n_shards)
+    assert np.array_equal(rebalance_plan(balanced, n_rows).bounds,
+                          balanced.bounds)
