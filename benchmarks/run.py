@@ -36,6 +36,11 @@ CI and future PRs can diff the perf trajectory.
           --sharded adds the S=16384 row-range-sharded storage
           tier (bitpack + spill, per-shard peak-resident bytes
           asserted < 1/n_shards of the unsharded footprint)
+  pipeline  async double-buffered chunk staging vs sync       (DESIGN §11)
+          (decisions == exact asserted, stage-wait < sync
+          staging time at S=2048), commit→detect zero
+          full-chunk regathers + O(touched) mask-cell updates,
+          (tile × chunk_group) autotune cached for `scaling`
   kernel  copyscore tile path: legacy two-orientation vs fused (engine)
           triangular dual-direction, f32/bf16 vs int8 incidence
   lm      token-throughput smoke of the training substrate
@@ -281,17 +286,25 @@ def scaling():
     """
     import jax
     from repro.data.claims import oracle_claim_probs, synthetic_claims
+    from repro.runtime.platform import load_autotune
 
     n_all = len(jax.devices())
+    tuned = load_autotune()     # winner of `pipeline`'s sweep, if it ran
+    if tuned is not None:
+        emit("scaling/autotuned", 1,
+             f"tile={tuned['tile']} chunk_group={tuned['chunk_group']} "
+             f"backend={tuned['backend']}")
     for n_sources, spec in SCALING_SPECS.items():
         sc = synthetic_claims(spec)
         p = oracle_claim_probs(sc)
         idx = build_index(sc.dataset, p, CFG)
         exact = (_engine("exact").detect(sc.dataset, p, index=idx)
                  if n_sources <= 512 else None)
+        kw = (dict(tile=tuned["tile"], chunk_group=tuned["chunk_group"])
+              if tuned is not None
+              else dict(tile=min(256, max(64, n_sources // 4))))
         for n_dev in sorted({1, n_all}):
-            eng = _engine("bucketed", devices=n_dev,
-                          tile=min(256, max(64, n_sources // 4)))
+            eng = _engine("bucketed", devices=n_dev, **kw)
             eng.detect(sc.dataset, p, index=idx)      # warm-up (JIT compile)
             res = eng.detect(sc.dataset, p, index=idx)
             st = eng.last_stats
@@ -374,6 +387,142 @@ def scaling_sharded():
         emit(f"scaling/S{S}/shards{n_shards}/shard_resident_ok", int(ok))
         assert ok, (f"shard residency: peak {peak} >= {bound} "
                     f"(unsharded {unsharded} / {n_shards} shards)")
+
+
+def pipeline():
+    """Async chunk pipeline + delta-aware mask cache (DESIGN §11).
+
+    Four legs: (1) decisions == exact INDEX with the prefetcher on;
+    (2) S=2048 sync (prefetch_depth=0) vs double-buffered staging —
+    prefetch wall must not regress and the consumer's stage-wait must
+    undercut the synchronous path's total staging time; (3) commit→detect
+    through a DetectionService does ZERO full-chunk regathers (counted by
+    monkeypatching ``tilecache.chunk_block_inc``) and O(touched) mask-cell
+    updates; (4) a small (tile × chunk_group) autotune sweep whose winner
+    is cached for later ``scaling`` runs.
+    """
+    import jax
+    from repro.core import tilecache
+    from repro.core.serving import DetectRequest, DetectionService
+    from repro.data.claims import (
+        oracle_claim_probs,
+        synthetic_claims,
+        synthetic_query_rows,
+    )
+    from repro.runtime.platform import autotune
+
+    n_dev = len(jax.devices())
+
+    # ---- 1. bit-exactness with the prefetcher on (S=512) ------------------
+    sc5 = synthetic_claims(SCALING_SPECS[512])
+    p5 = oracle_claim_probs(sc5)
+    idx5 = build_index(sc5.dataset, p5, CFG)
+    exact = _engine("exact").detect(sc5.dataset, p5, index=idx5)
+    for depth in (0, 2):
+        eng = _engine("bucketed", tile=128, chunk_group=2,
+                      prefetch_depth=depth)
+        eng.detect(sc5.dataset, p5, index=idx5)       # warm-up (JIT compile)
+        res = eng.detect(sc5.dataset, p5, index=idx5)
+        match = bool(np.array_equal(res.copying, exact.copying))
+        emit(f"pipeline/S512/dev{n_dev}/depth{depth}/decisions_match_exact",
+             int(match), f"wall={res.wall_time_s:.3f}s")
+        assert match, f"prefetch_depth={depth} diverged from exact"
+
+    # ---- 2. S=2048: synchronous vs double-buffered staging ----------------
+    sc = synthetic_claims(SCALING_SPECS[2048])
+    p = oracle_claim_probs(sc)
+    idx = build_index(sc.dataset, p, CFG)
+
+    def best_of(depth, n=3):
+        eng = _engine("bucketed", tile=256, chunk_group=2,
+                      prefetch_depth=depth)
+        eng.detect(sc.dataset, p, index=idx)          # warm-up (JIT compile)
+        walls, stats = [], None
+        for _ in range(n):
+            r = eng.detect(sc.dataset, p, index=idx)
+            walls.append(r.wall_time_s)
+            if stats is None or r.wall_time_s == min(walls):
+                stats = dict(eng.last_stats)
+        return min(walls), stats
+
+    wall_sync, st_sync = best_of(0)
+    wall_pre, st_pre = best_of(2)
+    emit(f"pipeline/S2048/dev{n_dev}/sync_seconds", round(wall_sync, 3),
+         f"staging_s={st_sync['staging_s']} stage_wait_s="
+         f"{st_sync['stage_wait_s']}")
+    emit(f"pipeline/S2048/dev{n_dev}/prefetch_seconds", round(wall_pre, 3),
+         f"staging_s={st_pre['staging_s']} stage_wait_s="
+         f"{st_pre['stage_wait_s']} depth={st_pre['prefetch_depth']}")
+    emit(f"pipeline/S2048/dev{n_dev}/prefetch_speedup",
+         round(wall_sync / max(wall_pre, 1e-9), 3))
+    # 5% slack absorbs scheduler jitter; the real overlap win is the
+    # stage-wait assertion below (wait < the sync path's total staging)
+    assert wall_pre <= wall_sync * 1.05, \
+        f"prefetch regressed: {wall_pre:.3f}s vs sync {wall_sync:.3f}s"
+    stall_ok = st_pre["stage_wait_s"] < st_sync["staging_s"]
+    emit(f"pipeline/S2048/dev{n_dev}/stage_wait_lt_sync_staging",
+         int(stall_ok),
+         f"{st_pre['stage_wait_s']} < {st_sync['staging_s']}")
+    assert stall_ok, (
+        f"no staging overlap: prefetch stage_wait {st_pre['stage_wait_s']}s "
+        f">= sync staging {st_sync['staging_s']}s")
+
+    # ---- 3. commit→detect: zero regathers, O(touched) mask work -----------
+    vals, acc, pq, _ = synthetic_query_rows(sc5, 8, seed=1)
+    reqs = [DetectRequest(rid=i, values=vals[i * 2:(i + 1) * 2],
+                          accuracy=acc[i * 2:(i + 1) * 2],
+                          p_claim=pq[i * 2:(i + 1) * 2]) for i in range(4)]
+    svc = DetectionService(sc5.dataset, p5, CFG, mode="bucketed", tile=64,
+                           max_batch_requests=8, result_cache=False)
+
+    def flush_all(rs):
+        futs = [svc.submit(r) for r in rs]
+        svc.flush()
+        return [f.result() for f in futs]
+
+    flush_all(reqs)                      # builds the cache (one full gather)
+    builds0 = svc.engine.last_stats["mask_full_builds"]
+    cvals, cacc, cpq, _ = synthetic_query_rows(sc5, 4, seed=9)
+    svc.commit(cvals, cacc, cpq)
+
+    calls = {"n": 0}
+    real = tilecache.chunk_block_inc
+
+    def counted(*a, **kw):
+        calls["n"] += 1
+        return real(*a, **kw)
+
+    tilecache.chunk_block_inc = counted
+    try:
+        served = flush_all(reqs[:2])
+    finally:
+        tilecache.chunk_block_inc = real
+    st = svc.engine.last_stats
+    cache = svc.engine._mask_cache
+    full_cells = cache.block_inc.size
+    updated = st["mask_blocks_updated"]
+    emit(f"pipeline/S512/dev{n_dev}/commit_detect_regathers", calls["n"],
+         f"mask_source={st['mask_source']}")
+    emit(f"pipeline/S512/dev{n_dev}/commit_detect_mask_cells", updated,
+         f"full_rebuild_cells={full_cells}")
+    assert calls["n"] == 0, \
+        f"commit→detect regathered {calls['n']} full chunks"
+    assert st["mask_source"] == "cache" and st["mask_full_builds"] == builds0
+    assert 0 < updated < full_cells, \
+        f"mask work {updated} not O(touched) vs full {full_cells}"
+    assert all(r.copying.shape[0] == 2 for r in served)
+
+    # ---- 4. (tile × chunk_group) autotune, cached for `scaling` -----------
+    def timed(tile, group):
+        eng = _engine("bucketed", tile=tile, chunk_group=group)
+        eng.detect(sc5.dataset, p5, index=idx5)       # warm-up (JIT compile)
+        return min(eng.detect(sc5.dataset, p5, index=idx5).wall_time_s
+                   for _ in range(2))
+
+    won = autotune(timed, tiles=(128, 256), groups=(1, 2), force=True)
+    emit(f"pipeline/autotune/{won['backend']}/tile", won["tile"],
+         f"chunk_group={won['chunk_group']} wall={won['wall_s']}s "
+         f"sweep={len(won['sweep'])}pts")
 
 
 def kernel():
@@ -1252,7 +1401,8 @@ def lm():
 TABLES = {
     "lm": lm, "fig2": fig2, "fig3": fig3, "store": store, "mutate": mutate,
     "durability": durability, "serve": serve, "overload": overload,
-    "scaling": scaling, "kernel": kernel, "table8": table8, "table9": table9,
+    "scaling": scaling, "pipeline": pipeline, "kernel": kernel,
+    "table8": table8, "table9": table9,
     "table10": table10, "table6": table6, "table7": table7,
 }
 

@@ -109,6 +109,7 @@ def sharded_tile_scores(
     impl: str = "auto",
     block_i: int = 128,
     block_j: int = 128,
+    donate: bool = False,
 ):
     """Shard surviving pair tiles over a 1-D mesh; returns stacked tiles.
 
@@ -121,6 +122,10 @@ def sharded_tile_scores(
     (lax.cond) instead of recomputing a real tile. Output: five
     (n_tiles_padded, T, T) arrays (C_same→, C_same←, count, count outside
     Ē, error bound).
+
+    ``donate=True`` donates the v-slab buffer to the call (the prefetched
+    double-buffered stream never reuses a group's slab, so XLA may recycle
+    it in place). Keep it off on CPU — unusable-donation warnings.
     """
     axis = mesh.axis_names[0]
     n_dev = mesh.shape[axis]
@@ -134,7 +139,8 @@ def sharded_tile_scores(
         coords = np.concatenate([coords,
                                  np.full((pad, 2), -1, coords.dtype)])
 
-    fn = _sharded_tile_fn(mesh, tile, cfg.s, cfg.n, impl, block_i, block_j)
+    fn = _sharded_tile_fn(mesh, tile, cfg.s, cfg.n, impl, block_i, block_j,
+                          donate)
     return fn(jnp.asarray(v_skw), jnp.asarray(acc, jnp.float32),
               jnp.asarray(p_hat, jnp.float32),
               jnp.asarray(delta, jnp.float32),
@@ -144,12 +150,13 @@ def sharded_tile_scores(
 
 @functools.lru_cache(maxsize=64)
 def _sharded_tile_fn(mesh: Mesh, tile: int, s: float, n: float, impl: str,
-                     block_i: int, block_j: int):
+                     block_i: int, block_j: int, donate: bool = False):
     """Cached jitted shard_map for the tile scan.
 
     The engine streams chunk groups through this in a host loop, so the
     compiled executable MUST be reused across calls — a fresh
     ``jax.jit(shard_map(...))`` per group would retrace every time.
+    ``donate`` releases the v-slab argument's buffer to XLA (argument 0).
     """
     axis = mesh.axis_names[0]
     local = partial(_local_tile_scores, tile=tile, s=s, n=n,
@@ -158,7 +165,7 @@ def _sharded_tile_fn(mesh: Mesh, tile: int, s: float, n: float, impl: str,
         local, mesh=mesh,
         in_specs=(P(), P(), P(), P(), P(), P(axis)),
         out_specs=(P(axis),) * 5,
-    ))
+    ), donate_argnums=(0,) if donate else ())
 
 
 # ---------------------------------------------------------------------------

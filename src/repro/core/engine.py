@@ -59,9 +59,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core import tilecache
 from repro.core.bound import bound_detect
 from repro.core.bucketed import index_detect_exact
 from repro.core.distributed import sharded_tile_scores, sharded_tile_scores_2d
+from repro.core.pipeline import ChunkPrefetcher, PipelineStageError
 from repro.core.incremental import (
     incremental_detect,
     make_incremental_state,
@@ -181,6 +183,13 @@ class EngineOptions:
     # `data`, entry chunks over `pod`, one psum combines (DESIGN.md §10).
     # None → the 1-D tile mesh.
     mesh_shape: Optional[tuple] = None
+    # chunk groups staged host→device AHEAD of the running kernel by the
+    # async pipeline (DESIGN.md §11): a producer thread assembles and
+    # transfers group G+1's v-slab while group G computes, double-buffered
+    # at depth 2. 0 → fully synchronous staging (the pre-pipeline path);
+    # stall telemetry (stage_wait_s / compute_wait_s) lands in last_stats
+    # either way.
+    prefetch_depth: int = 2
 
 
 class DetectionEngine:
@@ -201,6 +210,15 @@ class DetectionEngine:
         self._mesh2: Optional[Mesh] = None
         self._inc_state = None
         self._last_considered: Optional[np.ndarray] = None
+        # incremental block-OR mask cache (DESIGN.md §11): per-entry tile-
+        # block incidence over the LAST persistent index this engine
+        # detected against, delta-updated at commit/retract time
+        self._mask_cache = None
+        self._mask_cache_hits = 0
+        self._mask_full_builds = 0
+        # pipeline-stall telemetry accumulated across the current pass
+        self._pipe = {"stage_wait_s": 0.0, "compute_wait_s": 0.0,
+                      "staging_s": 0.0}
 
     # -- lifecycle ----------------------------------------------------------
 
@@ -232,6 +250,66 @@ class DetectionEngine:
             self._mesh2 = Mesh(np.array(devs[: d * p]).reshape(d, p),
                                ("data", "pod"))
         return self._mesh2
+
+    # -- incremental tile-prune mask cache (DESIGN.md §11) ------------------
+
+    def apply_mask_delta(self, delta):
+        """Propagate a commit/retract ``MutationDelta`` into the mask cache.
+
+        Called by the serving layer right after ``commit_rows`` /
+        ``retract_rows`` so the next ``detect(..., index=...)`` reuses the
+        cached block incidence (updated in O(touched cells)) instead of
+        regathering all K chunk reductions. Returns an opaque undo token
+        for commits — pair it with ``undo_mask_delta`` around a transient
+        commit→detect→rollback — and None otherwise. Safe no-op when no
+        cache exists yet; a delta that doesn't chain (wrong ``from_mseq``,
+        compaction) just marks the cache stale for a fresh rebuild.
+        """
+        cache = self._mask_cache
+        if cache is None or delta is None:
+            return None
+        inner = cache.apply(delta)
+        return None if inner is None else (cache, inner)
+
+    def undo_mask_delta(self, token) -> None:
+        """Reverse ``apply_mask_delta`` after the index store rolled back.
+
+        Re-adopts the cache object the token came from (a detect between
+        apply and undo may have swapped ``_mask_cache``), so the restored
+        incidence — bit-exact to the pre-commit state — serves the next
+        pass. ``None`` tokens are no-ops.
+        """
+        if token is None:
+            return
+        cache, inner = token
+        cache.undo(inner)
+        self._mask_cache = cache
+
+    def rebase_mask_cache(self, delta) -> None:
+        """Re-anchor a cache adopted DURING a transient commit onto the base.
+
+        The serving layer calls this (instead of ``undo_mask_delta``) when
+        ``apply_mask_delta`` returned no token — i.e. no cache existed
+        before the transient commit, so whatever the detect pass adopted is
+        anchored on the mid-transient store state and would die with the
+        rollback. ``BlockOrCache.rebase`` shrinks it back onto the restored
+        base store so the NEXT batch chains off it incrementally.
+        """
+        cache = self._mask_cache
+        if cache is None:
+            return
+        if delta is None:
+            self.invalidate_mask_cache()
+            return
+        cache.rebase(delta)
+        if cache.stale:
+            self._mask_cache = None
+
+    def invalidate_mask_cache(self) -> None:
+        """Drop the mask cache (the next indexed detect rebuilds it fresh)."""
+        if self._mask_cache is not None:
+            self._mask_cache.stale = True
+        self._mask_cache = None
 
     # -- dispatch -----------------------------------------------------------
 
@@ -445,7 +523,7 @@ class DetectionEngine:
                                    slack=self.DELTA_SLACK)
 
     def _tile_kernel(self, v_dev, acc_vec, p_g, coords_g, T, d_g, o_g,
-                     block):
+                     block, donate=False):
         """One group pass: 1-D tile mesh, or data×pod when mesh_shape is set."""
         opt = self.options
         if opt.mesh_shape is not None:
@@ -456,7 +534,29 @@ class DetectionEngine:
         return sharded_tile_scores(
             self.mesh(), v_dev, acc_vec, p_g, coords_g, self.cfg, tile=T,
             delta=d_g, nout=o_g, impl=opt.kernel_impl,
-            block_i=block, block_j=block)
+            block_i=block, block_j=block, donate=donate)
+
+    def _stage_v(self, v_np, dtype):
+        """Host→device conversion of one group's v-slab.
+
+        Runs on the prefetch thread when ``prefetch_depth`` ≥ 1, so the
+        transfer of group G+1 hides behind group G's kernel. The 2-D
+        (``mesh_shape``) path pod-pads the chunk axis host-side inside
+        ``sharded_tile_scores_2d`` — v stays host-resident there and only
+        the (dominant) host assembly is overlapped.
+        """
+        if self.options.mesh_shape is not None:
+            return (v_np if dtype == jnp.int8
+                    else jnp.asarray(v_np, dtype=dtype))
+        return jnp.asarray(v_np, dtype=dtype)
+
+    def _donate_ok(self) -> bool:
+        """Donate staged v-slabs to the kernel? Only when the pipeline is
+        double-buffering fresh per-group device arrays on the 1-D mesh —
+        and never on CPU, where XLA can't use the donation and warns."""
+        return (self.options.prefetch_depth > 0
+                and self.options.mesh_shape is None
+                and jax.default_backend() != "cpu")
 
     @staticmethod
     def _scatter_tiles(grids, coords, stacks, n_blocks, T):
@@ -513,15 +613,26 @@ class DetectionEngine:
                         ech, coords[mine], tile_keep[:, mine], acc_pad, T,
                         n_blocks, Gc, delta, block, dtype, grids)
                 except Exception as e:
+                    # surface the ROOT fault as the cause: a staging
+                    # failure arrives wrapped in PipelineStageError, but
+                    # callers triage on the underlying I/O error
+                    root = e.__cause__ if isinstance(
+                        e, PipelineStageError) and e.__cause__ else e
                     raise ShardScanError(
                         s, f"tile scan failed: "
-                           f"{type(e).__name__}: {e}") from e
+                           f"{type(e).__name__}: {e}") from root
             partials.append(tuple(grids))
         return partials, run_total
 
     def _scan_one_shard(self, ech, coords_s, tile_keep_s, acc_pad, T,
                         n_blocks, Gc, delta, block, dtype, grids):
-        """Stream chunk groups for ONE shard's tiles over its compact slab."""
+        """Stream chunk groups for ONE shard's tiles over its compact slab.
+
+        Group descriptors are enumerated up front on the caller's thread;
+        slab assembly (the shard reads) + device staging run on the
+        prefetcher's stage thread, ``prefetch_depth`` groups ahead of the
+        kernel.
+        """
         store = ech.store
         K = ech.n_chunks
         b = ech.width
@@ -534,12 +645,17 @@ class DetectionEngine:
             acc_pad.reshape(n_blocks, T)[blocks_needed]).reshape(slab_rows)
         stacks = None
         run = 0
+        groups = []
         for g0 in range(0, K, Gc):
-            ks = range(g0, min(g0 + Gc, K))
+            ks = list(range(g0, min(g0 + Gc, K)))
             gmask = tile_keep_s[ks].any(axis=0)
             if not gmask.any():
                 continue
             run += int(gmask.sum()) * len(ks)
+            groups.append((ks, gmask))
+
+        def _stage(desc):
+            ks, gmask = desc
             coords_g = np.where(gmask[:, None], coords_c, -1).astype(np.int32)
             p_g = np.full(Gc, 0.5, np.float32)
             d_g = np.zeros(Gc, np.float32)
@@ -552,12 +668,21 @@ class DetectionEngine:
                 p_g[i] = ech.p_hat[k]
                 d_g[i] = delta[k]
                 o_g[i] = ech.nout[k]
-            v_dev = (v_np if dtype == jnp.int8
-                     else jnp.asarray(v_np, dtype=dtype))
-            outs = self._tile_kernel(v_dev, acc_slab, p_g, coords_g, T,
-                                     d_g, o_g, block)
-            stacks = (list(outs) if stacks is None
-                      else [st + o for st, o in zip(stacks, outs)])
+            return self._stage_v(v_np, dtype), p_g, d_g, o_g, coords_g
+
+        donate = self._donate_ok()
+        pf = ChunkPrefetcher(groups, _stage,
+                             depth=self.options.prefetch_depth)
+        try:
+            for v_dev, p_g, d_g, o_g, coords_g in pf:
+                outs = self._tile_kernel(v_dev, acc_slab, p_g, coords_g, T,
+                                         d_g, o_g, block, donate=donate)
+                stacks = (list(outs) if stacks is None
+                          else [st + o for st, o in zip(stacks, outs)])
+        finally:
+            pf.close()
+            for key in self._pipe:
+                self._pipe[key] += getattr(pf, key)
         if stacks is not None:
             self._scatter_tiles(grids, coords_s, stacks, n_blocks, T)
         return run
@@ -575,6 +700,8 @@ class DetectionEngine:
         T = self._tile_edge(S)
         n_blocks = -(-S // T)
         S_pad = n_blocks * T
+        self._pipe = {"stage_wait_s": 0.0, "compute_wait_s": 0.0,
+                      "staging_s": 0.0}
         base_idx = index if index is not None else self._build_index(ds, p_claim)
         # Incidence element type, resolved first: the chunk width depends on
         # its itemsize. 0/1 incidence makes int8 (the default) lossless —
@@ -624,16 +751,50 @@ class DetectionEngine:
         # is symmetric, so only unordered (r ≤ c) tiles are scheduled.
         keep = np.zeros((n_blocks, n_blocks), bool)
         chunk_keep = np.zeros((K, n_blocks, n_blocks), bool)
-        for k in range(K):
-            if sharded:
-                # per-shard per-tile OR — no host assembles the full chunk
-                g_k = ech.store.block_or(k, T, n_blocks).astype(np.int32)
-            else:
-                g_k = (ech.store.chunks[k]
-                       .reshape(n_blocks, T, b).any(axis=1).astype(np.int32))
-            chunk_keep[k] = (g_k @ g_k.T) > 0
-            if k < ech.ebar_chunk:
-                keep |= chunk_keep[k]
+        base_store = base_idx.store
+        cache = self._mask_cache if index is not None else None
+        mask_source = "fresh"
+        if (cache is not None and cache.matches(base_store, T)
+                and cache.block_inc.shape == (n_blocks,
+                                              base_store.n_entries)):
+            # delta-maintained cache hit (DESIGN.md §11): derive each
+            # GATHERED chunk's mask by permuting cached base columns
+            # through the gather order — bit-equal to a fresh reduction
+            # of the gathered chunk, with zero full-chunk regathers
+            mask_source = "cache"
+            self._mask_cache_hits += 1
+            for k in range(K):
+                g_k = cache.chunk_mask(
+                    ech.order[k * b:(k + 1) * b]).astype(np.int32)
+                chunk_keep[k] = (g_k @ g_k.T) > 0
+                if k < ech.ebar_chunk:
+                    keep |= chunk_keep[k]
+        else:
+            # fresh full reduction (sharded stores reduce shard by shard —
+            # no host assembles the full chunk). When detecting against a
+            # persistent index, adopt the result as the new mask cache at
+            # zero extra reduction cost: scatter each gathered chunk's
+            # columns back to base entry order.
+            base_inc = None
+            base_mseq = -1
+            if index is not None:
+                base_inc = np.zeros((n_blocks, base_store.n_entries), bool)
+                base_mseq = getattr(base_store, "mseq", -1)
+            for k in range(K):
+                g_bool = tilecache.chunk_block_inc(ech.store, k, T, n_blocks)
+                if base_inc is not None:
+                    sel = ech.order[k * b: k * b + g_bool.shape[1]]
+                    live = sel >= 0
+                    if live.any():
+                        base_inc[:, sel[live]] = g_bool[:, live]
+                g_k = g_bool.astype(np.int32)
+                chunk_keep[k] = (g_k @ g_k.T) > 0
+                if k < ech.ebar_chunk:
+                    keep |= chunk_keep[k]
+            if base_inc is not None:
+                self._mask_cache = tilecache.BlockOrCache(
+                    base_store, T, base_mseq, base_inc)
+                self._mask_full_builds += 1
         coords = np.argwhere(np.triu(keep)).astype(np.int32)  # r ≤ c tiles
         tiles_total = n_blocks * (n_blocks + 1) // 2
         n_tiles = len(coords)
@@ -643,9 +804,18 @@ class DetectionEngine:
                          constant_values=0.5)
 
         block = 128 if T % 128 == 0 else T
-        chunk_nbytes = S_pad * b * itemsize
-        # the byte budget clamps every group (floored at one chunk)
-        budget_chunks = max(1, opt.chunk_group_bytes // max(chunk_nbytes, 1))
+        chunk_nbytes = S_pad * b * itemsize   # shipped (unpacked) slab bytes
+        # the byte budget clamps every group (floored at one chunk) against
+        # TRUE resident bytes: a sealed bitpacked shard plane holds 1
+        # bit/entry, so packed stores stream 8× larger groups under the
+        # same budget (each group's shipped slab is still unpacked per
+        # assembly — peak_group_bytes reports that separately)
+        if sharded and opt.shard_pack and ech.store.sealed:
+            resident_nbytes = S_pad * (-(-b // 8))
+        else:
+            resident_nbytes = chunk_nbytes
+        budget_chunks = max(
+            1, opt.chunk_group_bytes // max(resident_nbytes, 1))
         if opt.chunk_group is not None:
             Gc = min(max(1, int(opt.chunk_group)), budget_chunks)
         else:
@@ -674,8 +844,9 @@ class DetectionEngine:
             # incidence = one group: S_pad · Gc · b elements.
             stacks = None
             tile_keep = chunk_keep[:, coords[:, 0], coords[:, 1]]  # (K, n_tiles)
+            groups = []
             for g0 in range(0, K, Gc):
-                ks = range(g0, min(g0 + Gc, K))
+                ks = list(range(g0, min(g0 + Gc, K)))
                 gmask = tile_keep[ks].any(axis=0)
                 if not gmask.any():
                     continue
@@ -684,15 +855,20 @@ class DetectionEngine:
                 # so grouped streaming realizes less chunk pruning than the
                 # per-chunk masks would allow — count what really runs
                 chunk_tiles_run += int(gmask.sum()) * len(ks)
+                groups.append((ks, gmask))
+
+            def _stage(desc):
+                ks, gmask = desc
                 # chunk-pruned tiles short-circuit via the (-1,-1) marker
-                coords_g = np.where(gmask[:, None], coords, -1).astype(np.int32)
+                coords_g = np.where(gmask[:, None], coords,
+                                    -1).astype(np.int32)
                 p_g = np.full(Gc, 0.5, np.float32)
                 d_g = np.zeros(Gc, np.float32)
                 o_g = np.zeros(Gc, np.float32)
                 if Gc == 1:
                     # store chunks are already contiguous (S_pad, b) — ship
                     # a zero-copy view instead of re-copying the incidence
-                    v_np = ech.store.chunks[g0].reshape(S_pad, 1, b)
+                    v_np = ech.store.chunks[ks[0]].reshape(S_pad, 1, b)
                 else:
                     v_np = np.zeros((S_pad, Gc, b), np.int8)
                 for i, k in enumerate(ks):
@@ -701,12 +877,21 @@ class DetectionEngine:
                     p_g[i] = ech.p_hat[k]
                     d_g[i] = delta[k]
                     o_g[i] = ech.nout[k]
-                v_dev = (v_np if dtype == jnp.int8
-                         else jnp.asarray(v_np, dtype=dtype))
-                outs = self._tile_kernel(v_dev, acc_pad, p_g, coords_g, T,
-                                         d_g, o_g, block)
-                stacks = (list(outs) if stacks is None
-                          else [s + o for s, o in zip(stacks, outs)])
+                return self._stage_v(v_np, dtype), p_g, d_g, o_g, coords_g
+
+            donate = self._donate_ok()
+            pf = ChunkPrefetcher(groups, _stage, depth=opt.prefetch_depth)
+            try:
+                for v_dev, p_g, d_g, o_g, coords_g in pf:
+                    outs = self._tile_kernel(v_dev, acc_pad, p_g, coords_g,
+                                             T, d_g, o_g, block,
+                                             donate=donate)
+                    stacks = (list(outs) if stacks is None
+                              else [s + o for s, o in zip(stacks, outs)])
+            finally:
+                pf.close()
+                for key in self._pipe:
+                    self._pipe[key] += getattr(pf, key)
             if stacks is None:
                 stacks = [jnp.zeros((n_tiles, T, T), jnp.float32)] * 5
             self._scatter_tiles([c_same, n_cnt, n_out, err], coords, stacks,
@@ -769,6 +954,18 @@ class DetectionEngine:
             "chunk_tiles_total": K * n_tiles,
             "chunk_tiles_run": chunk_tiles_run,
             "peak_group_bytes": int(Gc * chunk_nbytes),
+            "resident_chunk_bytes": int(resident_nbytes),
+            # async staging pipeline (DESIGN.md §11)
+            "prefetch_depth": int(opt.prefetch_depth),
+            "stage_wait_s": round(self._pipe["stage_wait_s"], 6),
+            "compute_wait_s": round(self._pipe["compute_wait_s"], 6),
+            "staging_s": round(self._pipe["staging_s"], 6),
+            # incremental tile-prune mask cache (DESIGN.md §11)
+            "mask_source": mask_source,
+            "mask_cache_hits": self._mask_cache_hits,
+            "mask_full_builds": self._mask_full_builds,
+            "mask_blocks_updated": (self._mask_cache.blocks_updated
+                                    if self._mask_cache is not None else 0),
         }
         if sharded:
             # shard-plane telemetry (DESIGN.md §10): what each host actually

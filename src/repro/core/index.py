@@ -382,6 +382,41 @@ def build_index(
 # ---------------------------------------------------------------------------
 
 @dataclass
+class MutationDelta:
+    """The (chunk, row-block) change set of one commit/retraction (§11).
+
+    Attached to ``CommitInfo``/``RetractInfo`` so the engine's incremental
+    block-OR cache (``core.tilecache.BlockOrCache``) can update exactly the
+    cells whose membership changed instead of regathering every chunk:
+
+      * a COMMIT appends rows ``[from_rows, to_rows)`` and sets bits only
+        in those rows of ``touched`` existing entries (monotone — no bit is
+        ever cleared), plus brand-new entry columns from
+        ``new_entry_start`` on (those carry bits on OLD rows too — provider
+        sets span the whole corpus);
+      * a RETRACTION compacts rows ≥ ``row_start`` upward and zeroes the
+        ``gc_entries`` columns, so only row-blocks ≥ ``row_start // tile``
+        can change.
+
+    ``from_mseq``/``to_mseq`` are the store's membership-state identities
+    before/after (``store.mseq``); a cache applies the delta only when its
+    own mseq equals ``from_mseq``. ``full=True`` (compaction ran) means the
+    delta cannot describe the change — the cache must rebuild.
+    """
+
+    kind: str                      # "commit" | "retract"
+    from_mseq: int                 # store.mseq before the mutation
+    to_mseq: int                   # store.mseq after the mutation
+    from_rows: int                 # live rows before
+    to_rows: int                   # live rows after
+    row_start: int                 # first row whose blocks can change
+    touched: np.ndarray            # existing entry ids whose bits changed
+    new_entry_start: int = -1      # first appended column (commit; -1 none)
+    gc_entries: np.ndarray = None  # deactivated entry ids (retract)
+    full: bool = False             # compaction ran — delta insufficient
+
+
+@dataclass
 class CommitInfo:
     """Receipt of one ``commit_rows`` call (stats + the rollback snapshot).
 
@@ -401,6 +436,7 @@ class CommitInfo:
     epoch: int                     # store epoch after the commit
     touched_keys: np.ndarray       # sorted int64 claim keys of the new rows
     wall_s: float                  # host time spent committing
+    delta: Optional[MutationDelta] = None   # changed-cell set (§11)
     _snap: StoreSnapshot = field(repr=False, default=None)
     _ebar_start: int = field(repr=False, default=0)
     _ebar_mask: Optional[np.ndarray] = field(repr=False, default=None)
@@ -505,6 +541,7 @@ def commit_rows(
             f"commit_rows: index covers {store.n_rows} rows, union has "
             f"{S} with {q} new — expected {S0}")
     snap = store.snapshot()
+    from_mseq = store.mseq
     info = CommitInfo(
         rows=q, bits_set=0, new_entries=0, touched_entries=0,
         delta_chunks_added=0, compacted=False, epoch=store.epoch,
@@ -538,6 +575,10 @@ def commit_rows(
         e_p.append(float(p_claim[provs[0], d]))
         e_provs.append(provs)
     n_newe = len(e_item)
+    # first appended column id: captured BEFORE append_entries so the pad
+    # columns _pad_last_chunk_full adds count as "new" (zero incidence —
+    # the cache assigns them all-zero block masks, which is exact)
+    new_entry_start = store.n_entries if n_newe else -1
     if n_newe:
         acc = ds.accuracy.astype(np.float64)
         a_min, a_second, a_max = _extremes_of(acc, e_provs)
@@ -599,6 +640,11 @@ def commit_rows(
     info.bits_set = bits
     info.epoch = index.store.epoch
     info.touched_keys = new_keys
+    info.delta = MutationDelta(
+        kind="commit", from_mseq=from_mseq, to_mseq=index.store.mseq,
+        from_rows=S0, to_rows=index.store.n_rows, row_start=S0,
+        touched=touched, new_entry_start=new_entry_start,
+        gc_entries=np.zeros(0, np.int64), full=info.compacted)
     info.wall_s = time.perf_counter() - t0
     return info
 
@@ -619,6 +665,7 @@ class RetractInfo:
     rescored_entries: int          # surviving touched entries re-scored
     epoch: int                     # store epoch after the retraction
     wall_s: float                  # host time spent retracting
+    delta: Optional[MutationDelta] = None   # changed-cell set (§11)
     _snap: StoreSnapshot = field(repr=False, default=None)
     _ebar_start: int = field(repr=False, default=0)
     _ebar_mask: Optional[np.ndarray] = field(repr=False, default=None)
@@ -669,6 +716,7 @@ def retract_rows(
             f"retract_rows: index covers {S0} rows, {k} retracted — "
             f"ds_after must have {S0 - k} rows, got {ds_after.n_sources}")
     snap = store.snapshot()
+    from_mseq = store.mseq
     info = RetractInfo(
         rows=k, touched_entries=0, gc_entries=0, rescored_entries=0,
         epoch=store.epoch, wall_s=0.0,
@@ -692,6 +740,7 @@ def retract_rows(
     store.retract_rows(row_ids)
 
     # -- 3. GC entries that stopped being shared ----------------------------
+    gc_ids = np.zeros(0, np.int64)
     if len(touched):
         counts = np.array([int(store.column(e).sum()) for e in touched])
         gc_ids = touched[counts < 2]
@@ -721,6 +770,10 @@ def retract_rows(
     index.ebar_mask = _derive_ebar_mask(store, cfg.theta_ind)
 
     info.epoch = store.epoch
+    info.delta = MutationDelta(
+        kind="retract", from_mseq=from_mseq, to_mseq=store.mseq,
+        from_rows=S0, to_rows=store.n_rows, row_start=int(row_ids[0]),
+        touched=touched, new_entry_start=-1, gc_entries=gc_ids, full=False)
     info.wall_s = time.perf_counter() - t0
     return info
 
@@ -963,6 +1016,7 @@ class EngineChunks:
     nout: np.ndarray          # (K,) float32 — 1.0 ⇔ chunk before Ē boundary
     ebar_chunk: int           # chunks [ebar_chunk:] lie fully inside Ē
     n_live: int               # E — real (non-padding) entries
+    order: np.ndarray = None  # gathered column j = base column order[j] (−1 pad)
 
     @property
     def n_chunks(self) -> int:
@@ -1006,7 +1060,8 @@ def engine_chunks(
         empty = index.store.gather_entries(np.zeros(0, np.int64), capacity=cap)
         z = np.zeros(0, np.float32)
         return EngineChunks(store=empty, p_hat=z, p_lo=z, p_hi=z, nout=z,
-                            ebar_chunk=0, n_live=0)
+                            ebar_chunk=0, n_live=0,
+                            order=np.zeros(0, np.int64))
 
     b = align_chunk(-(-n_live // max(int(n_buckets), 1)))
     if max_width is not None:
@@ -1028,4 +1083,5 @@ def engine_chunks(
         store.entry_p, store.entry_item >= 0, np.arange(K + 1) * b)
     nout = (np.arange(K) < ebar_chunk).astype(np.float32)
     return EngineChunks(store=store, p_hat=p_hat, p_lo=p_lo, p_hi=p_hi,
-                        nout=nout, ebar_chunk=ebar_chunk, n_live=n_live)
+                        nout=nout, ebar_chunk=ebar_chunk, n_live=n_live,
+                        order=order)

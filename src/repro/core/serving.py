@@ -430,12 +430,23 @@ def serve_batch(
         index.store.ensure_row_capacity(union.n_sources)
         info = commit_rows(index, union, p, engine.cfg,
                            union.n_sources - S0, compact=False)
+        # carry the transient commit's delta into the engine's block-OR
+        # mask cache so the batch detect updates O(touched) cells instead
+        # of regathering all K chunk reductions (DESIGN.md §11)
+        token = engine.apply_mask_delta(info.delta)
         try:
             res = engine.detect(union, p, index=index)
         finally:
             # bit-exact unwind — a mid-batch engine failure must never leave
             # the batch's transient rows/deltas in the committed index
             rollback_commit(index, info)
+            if token is not None:
+                engine.undo_mask_delta(token)
+            else:
+                # no cache existed before this transient commit — whatever
+                # the detect pass adopted is anchored mid-transient; shrink
+                # it back onto the restored base so the next batch chains
+                engine.rebase_mask_cache(info.delta)
     else:
         res = engine.detect(union, p)
 
@@ -1163,6 +1174,10 @@ class DetectionService:
             self.stats.reindexed_entries += info.touched_entries
             self.stats.delta_chunks += info.delta_chunks_added
             self.stats.compactions += int(info.compacted)
+            # permanent commit: fold the changed cells into the engine's
+            # block-OR mask cache so the next detect skips the full
+            # regather (router broadcasts run this per replica)
+            self.engine.apply_mask_delta(info.delta)
         self.epoch += 1
         if self.cache is not None:
             self._touched_log.append((self.epoch, touched))
@@ -1214,6 +1229,9 @@ class DetectionService:
             info = last["info"]
             if info is not None:
                 rollback_commit(self._index, info)
+                # the mask cache's delta chain is broken by the unwind —
+                # drop it; the next indexed detect rebuilds it fresh
+                self.engine.invalidate_mask_cache()
                 self.stats.new_entries -= info.new_entries
                 self.stats.reindexed_entries -= info.touched_entries
                 self.stats.delta_chunks -= info.delta_chunks_added
@@ -1291,6 +1309,9 @@ class DetectionService:
             info = index_retract_rows(self._index, self.base,
                                       self.engine.cfg, row_ids)
             self.stats.gc_entries += info.gc_entries
+            # incremental mask-cache maintenance: recompute only the block
+            # rows the compaction shifted, zero the GC'd columns
+            self.engine.apply_mask_delta(info.delta)
         self.epoch += 1
         if self.cache is not None:
             # eager reconciliation, NOT a touched-log entry: the retraction
@@ -1339,6 +1360,9 @@ class DetectionService:
             info = last["info"]
             if info is not None:
                 rollback_commit(self._index, info)
+                # retraction applies are not invertible cell-by-cell —
+                # drop the cache and let the next detect rebuild it
+                self.engine.invalidate_mask_cache()
                 self.stats.gc_entries -= info.gc_entries
             self.resident.unretract(last["row_ids"], last["values"],
                                     last["accuracy"], last["p_claim"])

@@ -49,6 +49,7 @@ from repro.core.store import (
     CorpusStore,
     PackedBlock,
     align_chunk,
+    next_mseq,
     pack_membership,
     packed_count_matmul,
     unpack_membership,
@@ -455,6 +456,9 @@ class ShardedCorpusStore:
         self.capacity = int(capacity)
         self.delta_start = delta_start
         self.epoch = int(epoch)
+        # membership-state identity (block-OR cache validity); same
+        # always-fresh discipline as CorpusStore.mseq
+        self.mseq = next_mseq()
         self._regather = None            # (source store, gather order)
         for sl in self._slices:
             sl._owner = self
@@ -870,6 +874,7 @@ class ShardedCorpusStore:
             if collect_touched:
                 touched.append(s0 + np.nonzero(hit.any(axis=0))[0])
         self.n_rows += q
+        self.mseq = next_mseq()
         if collect_touched:
             return bits, (np.concatenate(touched) if touched
                           else np.zeros(0, np.int64))
@@ -892,6 +897,7 @@ class ShardedCorpusStore:
         for blk in last.blocks:
             blk[lo:hi] = 0
         self.n_rows = n_rows
+        self.mseq = next_mseq()
 
     def retract_rows(self, row_ids: np.ndarray) -> None:
         """Physically remove arbitrary live rows (source retraction).
@@ -932,6 +938,7 @@ class ShardedCorpusStore:
         self.capacity = int(new_starts[-1]) + self._slices[-1].cap_rows
         self.n_rows = offset
         self.epoch += 1
+        self.mseq = next_mseq()
 
     def deactivate_entries(self, entry_ids: np.ndarray) -> None:
         """Turn entry columns into inert padding (retraction GC).
@@ -962,6 +969,7 @@ class ShardedCorpusStore:
         self.entry_item, self.entry_value = item, value
         self.entry_p, self.entry_score = p, score
         self.epoch += 1
+        self.mseq = next_mseq()
 
     # -- entry mutation ---------------------------------------------------------
 
@@ -1034,6 +1042,7 @@ class ShardedCorpusStore:
         self.entry_score = np.concatenate(
             [self.entry_score, np.asarray(score, np.float32)])
         self.epoch += 1
+        self.mseq = next_mseq()
         return added
 
     def ensure_row_capacity(self, n: int) -> None:
@@ -1052,6 +1061,8 @@ class ShardedCorpusStore:
         last.cap_rows = new_local
         self.capacity = new_cap
         self.epoch += 1
+        # no mseq bump — capacity growth is membership-preserving (see
+        # CorpusStore.ensure_row_capacity)
 
     # -- rebalance ---------------------------------------------------------------
 
@@ -1087,6 +1098,7 @@ class ShardedCorpusStore:
         self._slices = slices
         self._starts = starts
         self.epoch += 1
+        self.mseq = next_mseq()
         return True
 
     # -- snapshot / serialization --------------------------------------------
@@ -1185,6 +1197,8 @@ class ShardedStoreSnapshot:
         st.epoch = self.epoch
         st.n_rows = self.n_rows
         st.capacity = self.capacity
+        # fresh mseq on restore (never re-issue an observed membership key)
+        st.mseq = next_mseq()
         for s, sl in enumerate(st._slices):
             cov0, cov1 = st._coverage(s)
             lv = max(min(cov1, st.n_rows) - cov0, 0)

@@ -37,6 +37,7 @@ are memoized per ``(epoch, n_rows)`` so hot loops stop rebuilding them.
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass, field
 from typing import Iterator, Optional
 
@@ -55,6 +56,20 @@ STORE_LAYOUT_VERSION = 1
 def align_chunk(width: int) -> int:
     """Round a requested chunk width up to the kernel tile-edge multiple (8)."""
     return max(8, -(-int(width) // 8) * 8)
+
+
+#: Global monotonic mutation-sequence source. Every store mutation — and,
+#: crucially, every snapshot RESTORE — draws a fresh value, so
+#: ``(store identity, mseq)`` names one membership state forever: no
+#: rollback can ever reproduce a previously seen mseq with different bits.
+#: (A per-store counter could: restore would rewind it, and two different
+#: transient commit→rollback unions would collide on the same key.)
+_MSEQ = itertools.count(1)
+
+
+def next_mseq() -> int:
+    """Draw the next globally unique mutation-sequence number."""
+    return next(_MSEQ)
 
 
 @dataclass
@@ -111,6 +126,9 @@ class CorpusStore:
         # engine's per-group hot loop must not rebuild metadata views)
         self._views: dict = {}
         self._views_key = None
+        # membership-state identity for the engine's block-OR cache; NOT a
+        # dataclass field and NOT serialized — identity is per process
+        self.mseq = next_mseq()
 
     # -- geometry -----------------------------------------------------------
 
@@ -358,6 +376,7 @@ class CorpusStore:
             if collect_touched:
                 touched.append(s0 + np.nonzero(hit.any(axis=0))[0])
         self.n_rows += q
+        self.mseq = next_mseq()
         if collect_touched:
             return bits, (np.concatenate(touched) if touched
                           else np.zeros(0, np.int64))
@@ -371,6 +390,7 @@ class CorpusStore:
         for c in self.chunks:
             c[n_rows: self.n_rows] = 0
         self.n_rows = n_rows
+        self.mseq = next_mseq()
 
     def retract_rows(self, row_ids: np.ndarray) -> None:
         """Physically remove ARBITRARY live rows (source retraction, §7).
@@ -399,6 +419,7 @@ class CorpusStore:
             self.chunks[c] = blk
         self.n_rows = n_keep
         self.epoch += 1
+        self.mseq = next_mseq()
 
     def deactivate_entries(self, entry_ids: np.ndarray) -> None:
         """Turn entry columns into inert padding (retraction GC, §7).
@@ -431,6 +452,7 @@ class CorpusStore:
         self.entry_item, self.entry_value = item, value
         self.entry_p, self.entry_score = p, score
         self.epoch += 1
+        self.mseq = next_mseq()
 
     # -- entry mutation (delta chunks, DESIGN.md §7) -------------------------
 
@@ -499,6 +521,7 @@ class CorpusStore:
         self.entry_score = np.concatenate(
             [self.entry_score, np.asarray(score, np.float32)])
         self.epoch += 1
+        self.mseq = next_mseq()
         return added
 
     def ensure_row_capacity(self, n: int) -> None:
@@ -517,6 +540,10 @@ class CorpusStore:
             self.chunks[c] = blk
         self.capacity = new_cap
         self.epoch += 1
+        # deliberately NOT an mseq bump: capacity growth is membership-
+        # preserving (rows ≥ n_rows read zero before and after), and the
+        # serving layer grows capacity between a detect and its commit —
+        # bumping here would break every commit's delta chain
 
     def snapshot(self) -> "StoreSnapshot":
         """Capture a rollback point (array REFS, not copies — O(chunks)).
@@ -768,6 +795,10 @@ class StoreSnapshot:
         st.delta_start = self.delta_start
         st.epoch = self.epoch
         st.n_rows = self.n_rows
+        # FRESH mseq, deliberately not the captured one: a restored state
+        # must never alias a previously observed (store, mseq) pair, or a
+        # stale block-OR cache could validate against different bits
+        st.mseq = next_mseq()
         st._views = {}
         st._views_key = None
         for c in st.chunks:
@@ -776,4 +807,5 @@ class StoreSnapshot:
 
 __all__ = ["CorpusStore", "ChunkView", "PackedBlock", "StoreSnapshot",
            "DEFAULT_CHUNK_ENTRIES", "STORE_LAYOUT_VERSION", "align_chunk",
-           "pack_membership", "packed_count_matmul", "unpack_membership"]
+           "next_mseq", "pack_membership", "packed_count_matmul",
+           "unpack_membership"]

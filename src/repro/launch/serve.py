@@ -127,7 +127,8 @@ def serve_detect(args):
         mode=args.mode,
         max_batch_requests=args.batch_requests,
         max_pending_rows=args.max_pending_rows,
-        tile=args.tile, devices=args.devices)
+        tile=args.tile, devices=args.devices,
+        prefetch_depth=args.prefetch_depth)
     if args.shards and args.shards > 1:
         # row-range-sharded corpus plane (DESIGN.md §10): each detection
         # pass scans per shard and merges; spill/bitpack bound residency
@@ -324,6 +325,15 @@ def main():
                     help="backpressure bound on queued query rows")
     ap.add_argument("--tile", type=int, default=256)
     ap.add_argument("--devices", type=int, default=None)
+    ap.add_argument("--prefetch-depth", type=int, default=2,
+                    help="chunk groups the async pipeline stages ahead of "
+                         "the tile kernel (DESIGN.md §11); 0 = synchronous")
+    ap.add_argument("--platform", default=None,
+                    help="JAX platform (cpu/gpu/tpu); on gpu also enables "
+                         "the latency-hiding scheduler XLA flags")
+    ap.add_argument("--host-devices", type=int, default=None,
+                    help="virtual host CPU devices "
+                         "(--xla_force_host_platform_device_count)")
     ap.add_argument("--shards", type=int, default=None,
                     help="row-range shards of the corpus data plane "
                          "(DESIGN.md §10); each detection pass scans per "
@@ -369,6 +379,15 @@ def main():
                     help="write a full snapshot every N commits "
                          "(0 = only the initial snapshot)")
     args = ap.parse_args()
+    # platform/flag setup must precede the first JAX call (the task
+    # functions import jax lazily, so this is early enough)
+    if args.platform or args.host_devices:
+        from repro.runtime.platform import (set_host_device_count,
+                                            set_platform)
+        if args.platform:
+            set_platform(args.platform)
+        if args.host_devices:
+            set_host_device_count(args.host_devices)
     if args.task == "detect":
         serve_detect(args)
     else:

@@ -1,0 +1,125 @@
+"""Platform setup + pipeline autotuning for launch and benchmarks.
+
+Two concerns the tiled engine's async pipeline (DESIGN.md §11) pushes to
+process startup:
+
+* **XLA platform/flag setup** — ``set_platform`` selects the backend and,
+  on GPU, turns on the latency-hiding scheduler + async collectives so the
+  prefetcher's host→device copies overlap the running tile kernel at the
+  XLA level too. Must run before the first JAX call (flags are read at
+  backend init).
+* **Per-backend pipeline autotuning** — the best (tile edge, chunk_group)
+  point depends on the backend (CPU wants cache-sized groups, accelerators
+  want dispatch-amortizing ones), so ``autotune`` sweeps a caller-provided
+  timing function over a small grid once and caches the winner in
+  ``<cache_dir>/<backend>.json``; ``load_autotune`` lets later runs (e.g.
+  ``benchmarks.run scaling``) adopt it without re-sweeping.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Callable, Iterable, Optional
+
+import jax
+
+#: Default location of the per-backend autotune cache (relative to cwd).
+AUTOTUNE_DIR = ".autotune"
+
+
+def set_platform(platform: str = "cpu") -> None:
+    """Select the JAX backend; on GPU, enable the latency-hiding flags.
+
+    Only takes effect at the beginning of the program (XLA reads
+    ``XLA_FLAGS`` when the backend initializes). The GPU flag set follows
+    the upstream gpu_performance_tips guidance: async collectives and the
+    latency-hiding scheduler let compiled collectives and host transfers
+    overlap compute — the device-side complement of the engine's
+    ``ChunkPrefetcher``.
+    """
+    jax.config.update("jax_platform_name", platform)
+    if platform == "gpu":
+        os.environ["XLA_FLAGS"] = (
+            "--xla_gpu_enable_triton_softmax_fusion=true "
+            "--xla_gpu_triton_gemm_any=True "
+            "--xla_gpu_enable_async_collectives=true "
+            "--xla_gpu_enable_latency_hiding_scheduler=true "
+            "--xla_gpu_enable_highest_priority_async_stream=true "
+        )
+
+
+def set_host_device_count(n: int) -> None:
+    """Expose ``n`` virtual devices on the host CPU platform.
+
+    Appends (rather than overwrites) ``--xla_force_host_platform_device_
+    count`` so it composes with ``set_platform``'s flag block. Only
+    effective before the first JAX call.
+    """
+    flags = os.environ.get("XLA_FLAGS", "")
+    flags = " ".join(f for f in flags.split()
+                     if not f.startswith(
+                         "--xla_force_host_platform_device_count"))
+    os.environ["XLA_FLAGS"] = (
+        f"{flags} --xla_force_host_platform_device_count={int(n)}".strip())
+
+
+def _cache_path(cache_dir: str) -> str:
+    """Per-backend cache file — CPU and accelerator winners never collide."""
+    return os.path.join(cache_dir, f"{jax.default_backend()}.json")
+
+
+def load_autotune(cache_dir: str = AUTOTUNE_DIR) -> Optional[dict]:
+    """Return the cached winner for the current backend, or None.
+
+    The dict carries ``tile``, ``chunk_group``, ``wall_s`` and the full
+    ``sweep`` it won (see ``autotune``). Corrupt/partial cache files read
+    as None — the caller just falls back to defaults.
+    """
+    try:
+        with open(_cache_path(cache_dir)) as f:
+            out = json.load(f)
+        if "tile" in out and "chunk_group" in out:
+            return out
+    except (OSError, ValueError):
+        pass
+    return None
+
+
+def autotune(
+    run_fn: Callable[[int, int], float],
+    tiles: Iterable[int] = (128, 256),
+    groups: Iterable[int] = (1, 2),
+    cache_dir: str = AUTOTUNE_DIR,
+    force: bool = False,
+) -> dict:
+    """Sweep ``run_fn(tile, chunk_group) → wall seconds``; cache the winner.
+
+    A deliberately small grid — the knobs interact with backend memory
+    hierarchy, not with correctness (every point produces bit-identical
+    decisions), so a handful of timed points per backend suffices. Returns
+    ``{"backend", "tile", "chunk_group", "wall_s", "sweep": [...]}`` and
+    persists it at ``<cache_dir>/<backend>.json`` unless an existing cache
+    already answers (``force=True`` re-sweeps).
+    """
+    if not force:
+        cached = load_autotune(cache_dir)
+        if cached is not None:
+            return cached
+    sweep = []
+    for tile in tiles:
+        for group in groups:
+            wall = float(run_fn(int(tile), int(group)))
+            sweep.append({"tile": int(tile), "chunk_group": int(group),
+                          "wall_s": round(wall, 4)})
+    best = min(sweep, key=lambda r: r["wall_s"])
+    out = {"backend": jax.default_backend(), "tile": best["tile"],
+           "chunk_group": best["chunk_group"], "wall_s": best["wall_s"],
+           "sweep": sweep}
+    os.makedirs(cache_dir, exist_ok=True)
+    with open(_cache_path(cache_dir), "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+__all__ = ["AUTOTUNE_DIR", "autotune", "load_autotune",
+           "set_host_device_count", "set_platform"]

@@ -1,0 +1,231 @@
+"""Delta-aware incremental block-OR cache (DESIGN.md §11).
+
+The load-bearing property: under ANY schedule of commits, retractions and
+compactions, a ``BlockOrCache`` that followed the deltas (rebuilding when a
+delta declares itself un-followable) is bit-equal to a fresh full build of
+the store it tracks — so the engine's tile∘chunk pruning masks, and hence
+its decisions, are identical whether they came from the cache or from a
+from-scratch regather.
+"""
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    CopyConfig,
+    DetectionEngine,
+    build_index,
+    commit_rows,
+    rollback_commit,
+)
+from repro.core.index import retract_rows
+from repro.core.shardplan import shard_store
+from repro.core.tilecache import BlockOrCache, chunk_block_inc, cols_block_inc
+from repro.core.types import ClaimsDataset
+
+CFG = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+TILE = 16
+
+
+def _world(seed=0, n_src=24, n_items=96):
+    rng = np.random.default_rng(seed)
+    values = np.where(rng.random((n_src, n_items)) < 0.4,
+                      rng.integers(0, 4, (n_src, n_items)),
+                      -1).astype(np.int32)
+    ds = ClaimsDataset(values=values,
+                       accuracy=rng.uniform(0.3, 0.95,
+                                            n_src).astype(np.float32))
+    p = np.where(values == 0, 0.9, 0.05).astype(np.float32)
+    return ds, p
+
+
+def _rows(rng, q, n_items):
+    vals = np.where(rng.random((q, n_items)) < 0.3,
+                    rng.integers(0, 4, (q, n_items)), -1).astype(np.int32)
+    acc = rng.uniform(0.3, 0.95, q).astype(np.float32)
+    pq = np.where(vals == 0, 0.9,
+                  np.where(vals >= 0, 0.05, 0.0)).astype(np.float32)
+    return vals, acc, pq
+
+
+def _ds_of(values, acc, p):
+    return ClaimsDataset(values=values, accuracy=acc), p
+
+
+def _assert_cache_fresh(cache, store):
+    fresh = BlockOrCache.build(store, TILE)
+    assert cache.mseq == store.mseq
+    assert cache.block_inc.shape == fresh.block_inc.shape
+    np.testing.assert_array_equal(cache.block_inc, fresh.block_inc)
+
+
+# ---------------------------------------------------------------------------
+# property: any commit/retract/compact schedule, cache == fresh build
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       chunk_entries=st.sampled_from([8, 16, 32]),
+       n_shards=st.sampled_from([1, 4]),
+       n_ops=st.integers(2, 6))
+def test_cache_tracks_any_mutation_schedule(seed, chunk_entries, n_shards,
+                                            n_ops):
+    """Random commit/retract/compact schedules over varying chunk widths:
+    the delta-following cache stays bit-equal to a fresh full build, and the
+    sharded fresh build agrees with the dense one at every shard count."""
+    rng = np.random.default_rng(seed)
+    ds, p = _world(seed)
+    idx = build_index(ds, p, CFG, chunk_entries=chunk_entries,
+                      row_capacity=96)
+    values, acc = ds.values, ds.accuracy
+    cache = BlockOrCache.build(idx.store, TILE)
+    for _ in range(n_ops):
+        op = rng.choice(["commit", "commit", "retract", "compact"])
+        if op == "retract" and values.shape[0] <= 6:
+            op = "commit"
+        if op == "commit" or op == "compact":
+            q = int(rng.integers(1, 5))
+            vals, a, pq = _rows(rng, q, ds.n_items)
+            values = np.concatenate([values, vals])
+            acc = np.concatenate([acc, a])
+            p = np.concatenate([p, pq])
+            union, union_p = _ds_of(values, acc, p)
+            idx.store.ensure_row_capacity(values.shape[0])
+            info = commit_rows(idx, union, union_p, CFG, q,
+                               compact=(op == "compact"),
+                               compact_threshold=0.0)
+        else:
+            n_out = int(rng.integers(1, 3))
+            row_ids = rng.choice(values.shape[0], n_out, replace=False)
+            keep = np.setdiff1d(np.arange(values.shape[0]), row_ids)
+            values, acc, p = values[keep], acc[keep], p[keep]
+            after, after_p = _ds_of(values, acc, p)
+            info = retract_rows(idx, after, CFG, row_ids)
+        cache.apply(info.delta)
+        if cache.stale:
+            cache = BlockOrCache.build(idx.store, TILE)
+        _assert_cache_fresh(cache, idx.store)
+    if n_shards > 1 and idx.store.n_rows >= n_shards:
+        sh = shard_store(idx.store, n_shards)
+        dense = BlockOrCache.build(idx.store, TILE)
+        np.testing.assert_array_equal(
+            BlockOrCache.build(sh, TILE).block_inc, dense.block_inc)
+
+
+# ---------------------------------------------------------------------------
+# deterministic corners: undo, GC zeroing, column-restricted reductions
+# ---------------------------------------------------------------------------
+
+def test_commit_apply_undo_is_bit_exact():
+    """apply(commit delta) → rollback_commit → undo lands back bit-equal to
+    the pre-commit incidence, re-anchored on the fresh post-rollback mseq."""
+    ds, p = _world(5)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=64)
+    cache = BlockOrCache.build(idx.store, TILE)
+    before = cache.block_inc.copy()
+    rng = np.random.default_rng(6)
+    vals, a, pq = _rows(rng, 4, ds.n_items)
+    union, union_p = _ds_of(np.concatenate([ds.values, vals]),
+                            np.concatenate([ds.accuracy, a]),
+                            np.concatenate([p, pq]))
+    idx.store.ensure_row_capacity(union.n_sources)
+    info = commit_rows(idx, union, union_p, CFG, 4, compact=False)
+    token = cache.apply(info.delta)
+    assert token is not None and cache.mseq == idx.store.mseq
+    _assert_cache_fresh(cache, idx.store)
+    rollback_commit(idx, info)
+    cache.undo(token)
+    np.testing.assert_array_equal(cache.block_inc, before)
+    assert cache.matches(idx.store, TILE)
+    # and the chain continues: the same commit re-applies cleanly
+    idx.store.ensure_row_capacity(union.n_sources)
+    info2 = commit_rows(idx, union, union_p, CFG, 4, compact=False)
+    assert cache.apply(info2.delta) is not None
+    _assert_cache_fresh(cache, idx.store)
+
+
+def test_retract_apply_zeroes_gc_columns_everywhere():
+    """A retraction that GCs entries zeroes those columns in ALL block rows,
+    including rows the tail recompute never touched."""
+    ds, p = _world(7, n_src=40)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=48)
+    cache = BlockOrCache.build(idx.store, TILE)
+    # retract rows near the END so leading block rows are tail-untouched
+    row_ids = np.array([38, 39])
+    keep = np.setdiff1d(np.arange(40), row_ids)
+    after, after_p = _ds_of(ds.values[keep], ds.accuracy[keep], p[keep])
+    info = retract_rows(idx, after, CFG, row_ids)
+    assert cache.apply(info.delta) is None
+    _assert_cache_fresh(cache, idx.store)
+    gc = info.delta.gc_entries
+    if gc is not None and len(gc):
+        assert not cache.block_inc[:, np.asarray(gc)].any()
+
+
+def test_cols_block_inc_matches_full_reduction():
+    """The column-restricted reduction (commit apply's new-column fill)
+    equals slicing the full-chunk reduction, dense and sharded."""
+    ds, p = _world(11, n_src=33)
+    idx = build_index(ds, p, CFG, chunk_entries=16)
+    store = idx.store
+    nb = -(-store.n_rows // TILE)
+    for s in (store, shard_store(store, 3)):
+        for c in range(store.n_chunks):
+            full = chunk_block_inc(s, c, TILE, nb)
+            cols = np.array([0, full.shape[1] - 1, full.shape[1] // 2])
+            np.testing.assert_array_equal(
+                cols_block_inc(s, c, cols, TILE, nb), full[:, cols])
+
+
+# ---------------------------------------------------------------------------
+# engine: decisions bit-equal to exact across a mutation schedule
+# ---------------------------------------------------------------------------
+
+def test_engine_decisions_exact_across_commit_retract_commit():
+    """bucketed + prefetch + mask cache == exact INDEX after each step of a
+    commit → retract → commit schedule (fixed tile so the cache persists)."""
+    ds, p = _world(13, n_src=40, n_items=160)
+    idx = build_index(ds, p, CFG, chunk_entries=16, row_capacity=64)
+    eng = DetectionEngine(CFG, mode="bucketed", tile=32, prefetch_depth=2)
+    rng = np.random.default_rng(14)
+    values, acc = ds.values, ds.accuracy
+
+    def check(cur, cur_p):
+        got = eng.detect(cur, cur_p, index=idx)
+        ref = DetectionEngine(CFG, mode="exact").detect(
+            cur, cur_p, index=build_index(cur, cur_p, CFG))
+        np.testing.assert_array_equal(got.copying, ref.copying)
+
+    check(*_ds_of(values, acc, p))
+    assert eng.last_stats["mask_full_builds"] == 1
+    # commit
+    vals, a, pq = _rows(rng, 5, ds.n_items)
+    values = np.concatenate([values, vals])
+    acc = np.concatenate([acc, a])
+    p = np.concatenate([p, pq])
+    union, union_p = _ds_of(values, acc, p)
+    idx.store.ensure_row_capacity(values.shape[0])
+    eng.apply_mask_delta(commit_rows(idx, union, union_p, CFG, 5,
+                                     compact=False).delta)
+    check(union, union_p)
+    assert eng.last_stats["mask_source"] == "cache"
+    # retract
+    row_ids = np.array([3, 17])
+    keep = np.setdiff1d(np.arange(values.shape[0]), row_ids)
+    values, acc, p = values[keep], acc[keep], p[keep]
+    after, after_p = _ds_of(values, acc, p)
+    eng.apply_mask_delta(retract_rows(idx, after, CFG, row_ids).delta)
+    check(after, after_p)
+    assert eng.last_stats["mask_source"] == "cache"
+    # commit again — the chain survives the retraction
+    vals, a, pq = _rows(rng, 3, ds.n_items)
+    values = np.concatenate([values, vals])
+    acc = np.concatenate([acc, a])
+    p = np.concatenate([p, pq])
+    union, union_p = _ds_of(values, acc, p)
+    idx.store.ensure_row_capacity(values.shape[0])
+    eng.apply_mask_delta(commit_rows(idx, union, union_p, CFG, 3,
+                                     compact=False).delta)
+    check(union, union_p)
+    assert eng.last_stats["mask_source"] == "cache"
+    assert eng.last_stats["mask_full_builds"] == 1   # never rebuilt
