@@ -72,10 +72,13 @@ from repro.core.incremental import (
 from repro.core.index import InvertedIndex, build_index, engine_chunks
 from repro.core.sampling import sample_by_cell, sample_by_item, scale_sample
 from repro.core.shardplan import (
+    OwnerPartial,
     ShardScanError,
     ShardedCorpusStore,
     make_shard_plan,
+    merge_owner_partials,
     merge_shard_partials,
+    scatter_tile_stacks,
     shard_store,
 )
 from repro.core.scoring import (
@@ -190,6 +193,47 @@ class EngineOptions:
     # stall telemetry (stage_wait_s / compute_wait_s) lands in last_stats
     # either way.
     prefetch_depth: int = 2
+
+
+@dataclass
+class TileScanContext:
+    """The deterministic prologue of one tiled pass, reified (DESIGN.md §12).
+
+    Everything the tile scans and the finalize step consume — resolved
+    index, engine chunk store, bucket deltas, the tile∘chunk keep masks,
+    the surviving unordered tile coords, group sizing — computed ONCE.
+    ``_detect_tiled`` builds and consumes it inline; the shard-owner
+    fan-out builds it once on the router's engine and hands the SAME
+    context to every owner's ``detect_owner_partial``, so the per-owner
+    scans see identical kernel operands and the merged decisions stay
+    bit-equal to the single-host pass. For sampled modes ``ds``/``p_claim``
+    are the item-subset views the scan runs over and ``items`` records the
+    deterministic sample (``sample_seed``) for the verify stage.
+    """
+
+    t0: float
+    ds: ClaimsDataset
+    p_claim: np.ndarray
+    base_idx: InvertedIndex
+    ech: object                    # EngineChunks — p-ordered scan store
+    delta: np.ndarray              # per-chunk p̂-error bound δ_k
+    sharded: bool
+    S: int
+    T: int
+    n_blocks: int
+    S_pad: int
+    acc_pad: np.ndarray
+    block: int
+    dtype: object                  # jnp incidence dtype
+    chunk_keep: np.ndarray         # (K, n_blocks, n_blocks) bool
+    coords: np.ndarray             # (n_tiles, 2) int32 — surviving r ≤ c tiles
+    tiles_total: int
+    n_tiles: int
+    Gc: int                        # chunks per device pass
+    chunk_nbytes: int
+    resident_nbytes: int
+    mask_source: str
+    items: Optional[np.ndarray] = None   # sampled/sample_verify item subset
 
 
 class DetectionEngine:
@@ -403,17 +447,28 @@ class DetectionEngine:
         decision on a discovered pair.
         """
         t0 = time.perf_counter()
-        cfg = self.cfg
-        opt = self.options
-        S = ds.n_sources
         if items is None:
             items = self._sample_items(ds)
 
         # -- 1. cheap discovery: the tiled path on the sampled columns ------
         sub = ds.subset_items(items)
         sampled = self._detect_tiled(sub, p_claim[:, items])
-        sampled_stats = self.last_stats
-        considered_s = self._last_considered
+        return self._sample_verify_finalize(
+            ds, p_claim, items, sampled, self.last_stats,
+            self._last_considered, t0)
+
+    def _sample_verify_finalize(self, ds, p_claim, items, sampled,
+                                sampled_stats, considered_s, t0):
+        """Steps 2+3 of sample_verify: slack sweep + exact candidate rescore.
+
+        Split from ``_detect_sample_verify`` so the shard-owner fan-out can
+        run the sampled discovery pass as per-owner partials and still
+        finish with the identical verification sweep
+        (``finalize_owner_partials``).
+        """
+        cfg = self.cfg
+        opt = self.options
+        S = ds.n_sources
 
         # -- 2. recall-slack sweep: widen the candidate net -----------------
         # z < 0 ⇔ independent; sampling noise can push a true copying pair
@@ -481,22 +536,37 @@ class DetectionEngine:
 
     # -- the tiled + sharded production path --------------------------------
 
-    def _build_index(self, ds: ClaimsDataset,
-                     p_claim: np.ndarray) -> InvertedIndex:
+    def _build_index(self, ds: ClaimsDataset, p_claim: np.ndarray,
+                     streaming: bool = False) -> InvertedIndex:
         """Build an index honoring this engine's store-chunking options.
 
         With ``n_shards`` set, the index's store is wrapped in a
         ``ShardedCorpusStore`` under a balanced row-range plan — every
         consumer (exact, bound, tiled, incremental) then reads rows through
         the shard facade, and the tiled path scans shard by shard.
+
+        ``streaming=True`` (the one-shot tiled path) additionally streams
+        the seal through the wrap when pack/spill options are set: blocks
+        bitpack and spill under the LRU cap AS they are sliced, and source
+        chunks release behind the slicing, so no host's peak-resident bytes
+        exceed its slice budget even DURING the build (DESIGN.md §12). The
+        mutating consumers (services, incremental state) keep the dense
+        wrap — a sealed store refuses commits.
         """
         opt = self.options
         idx = build_index(ds, p_claim, self.cfg,
                           chunk_entries=opt.store_chunk_entries,
                           chunk_bytes=opt.store_chunk_bytes)
         if opt.n_shards and opt.n_shards > 1:
-            idx.store = shard_store(
-                idx.store, make_shard_plan(idx.store.n_rows, opt.n_shards))
+            plan = make_shard_plan(idx.store.n_rows, opt.n_shards)
+            if streaming and (opt.shard_pack
+                              or opt.shard_spill_bytes is not None):
+                idx.store = shard_store(
+                    idx.store, plan, pack=opt.shard_pack,
+                    spill_dir=opt.shard_spill_dir,
+                    resident_bytes=opt.shard_spill_bytes, consume=True)
+            else:
+                idx.store = shard_store(idx.store, plan)
         return idx
 
     def _tile_edge(self, s_sources: int) -> int:
@@ -558,29 +628,9 @@ class DetectionEngine:
                 and self.options.mesh_shape is None
                 and jax.default_backend() != "cpu")
 
-    @staticmethod
-    def _scatter_tiles(grids, coords, stacks, n_blocks, T):
-        """Scatter both orientations of every unordered tile into the grids.
-
-        The blocked transpose is a writable view, so fancy assignment on
-        tile coordinates lands each (T, T) block in place. The (c, r)
-        mirror of tile (r, c) is C_same←ᵀ for the score and the plain
-        transpose for the symmetric-role channels; diagonal tiles write
-        identical values twice. ``grids`` = [c_same, n_cnt, n_out, err].
-        """
-        n = len(coords)
-        rr, cc = coords[:, 0], coords[:, 1]
-        cf_t, cb_t, n_t, o_t, e_t = (np.asarray(s, np.float32)[:n]
-                                     for s in stacks)
-        for grid, fwd, bwd in (
-            (grids[0], cf_t, cb_t.transpose(0, 2, 1)),
-            (grids[1], n_t, None),
-            (grids[2], o_t, None),
-            (grids[3], e_t, None),
-        ):
-            g4 = grid.reshape(n_blocks, T, n_blocks, T).transpose(0, 2, 1, 3)
-            g4[rr, cc] = fwd
-            g4[cc, rr] = fwd.transpose(0, 2, 1) if bwd is None else bwd
+    # scatter lives in shardplan (shared with OwnerPartial.to_grids); the
+    # staticmethod survives for callers that patched/tuned it per engine
+    _scatter_tiles = staticmethod(scatter_tile_stacks)
 
     def _scan_shards(self, ech, coords, chunk_keep, acc_pad, T, n_blocks,
                      Gc, delta, block, dtype):
@@ -609,9 +659,9 @@ class DetectionEngine:
             mine = owner[coords[:, 0]] == s
             if mine.any():
                 try:
-                    run_total += self._scan_one_shard(
+                    stacks, run = self._scan_one_shard(
                         ech, coords[mine], tile_keep[:, mine], acc_pad, T,
-                        n_blocks, Gc, delta, block, dtype, grids)
+                        n_blocks, Gc, delta, block, dtype)
                 except Exception as e:
                     # surface the ROOT fault as the cause: a staging
                     # failure arrives wrapped in PipelineStageError, but
@@ -621,17 +671,24 @@ class DetectionEngine:
                     raise ShardScanError(
                         s, f"tile scan failed: "
                            f"{type(e).__name__}: {e}") from root
+                run_total += run
+                if stacks is not None:
+                    self._scatter_tiles(grids, coords[mine], stacks,
+                                        n_blocks, T)
             partials.append(tuple(grids))
         return partials, run_total
 
     def _scan_one_shard(self, ech, coords_s, tile_keep_s, acc_pad, T,
-                        n_blocks, Gc, delta, block, dtype, grids):
+                        n_blocks, Gc, delta, block, dtype):
         """Stream chunk groups for ONE shard's tiles over its compact slab.
 
         Group descriptors are enumerated up front on the caller's thread;
         slab assembly (the shard reads) + device staging run on the
         prefetcher's stage thread, ``prefetch_depth`` groups ahead of the
-        kernel.
+        kernel. Returns ``(stacks, chunk_tiles_run)`` — the five per-tile
+        kernel channels as host float32 ``(len(coords_s), T, T)`` arrays
+        (None when every group was pruned), which is exactly the
+        ``OwnerPartial`` transport payload of the shard-owner fan-out.
         """
         store = ech.store
         K = ech.n_chunks
@@ -684,8 +741,9 @@ class DetectionEngine:
             for key in self._pipe:
                 self._pipe[key] += getattr(pf, key)
         if stacks is not None:
-            self._scatter_tiles(grids, coords_s, stacks, n_blocks, T)
-        return run
+            stacks = [np.asarray(s, np.float32)[: len(coords_s)]
+                      for s in stacks]
+        return stacks, run
 
     def _detect_tiled(
         self,
@@ -693,8 +751,18 @@ class DetectionEngine:
         p_claim: np.ndarray,
         index: InvertedIndex | None = None,
     ) -> DetectionResult:
+        ctx = self._tiled_prologue(ds, p_claim, index)
+        grids, chunk_tiles_run = self._run_tiled_scan(ctx)
+        return self._tiled_finalize(ctx, grids, chunk_tiles_run)
+
+    def _tiled_prologue(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        index: InvertedIndex | None = None,
+    ) -> TileScanContext:
+        """Steps 1–2 of the tiled pass: index, chunking, pruning, sizing."""
         t0 = time.perf_counter()
-        cfg = self.cfg
         opt = self.options
         S = ds.n_sources
         T = self._tile_edge(S)
@@ -702,7 +770,8 @@ class DetectionEngine:
         S_pad = n_blocks * T
         self._pipe = {"stage_wait_s": 0.0, "compute_wait_s": 0.0,
                       "staging_s": 0.0}
-        base_idx = index if index is not None else self._build_index(ds, p_claim)
+        base_idx = (index if index is not None
+                    else self._build_index(ds, p_claim, streaming=True))
         # Incidence element type, resolved first: the chunk width depends on
         # its itemsize. 0/1 incidence makes int8 (the default) lossless —
         # the kernel accumulates it exactly in int32 on the MXU at half the
@@ -823,12 +892,28 @@ class DetectionEngine:
             # pass when the store is chunked — the full incidence is never
             # resident in a single allocation
             Gc = min(budget_chunks, max(1, K - 1))
+        return TileScanContext(
+            t0=t0, ds=ds, p_claim=p_claim, base_idx=base_idx, ech=ech,
+            delta=delta, sharded=sharded, S=S, T=T, n_blocks=n_blocks,
+            S_pad=S_pad, acc_pad=acc_pad, block=block, dtype=dtype,
+            chunk_keep=chunk_keep, coords=coords, tiles_total=tiles_total,
+            n_tiles=n_tiles, Gc=Gc, chunk_nbytes=chunk_nbytes,
+            resident_nbytes=resident_nbytes, mask_source=mask_source)
+
+    def _run_tiled_scan(self, ctx: TileScanContext):
+        """Step 3: the tile∘chunk scan — the four pair grids + run count."""
+        opt = self.options
+        ech, coords, delta = ctx.ech, ctx.coords, ctx.delta
+        K, b = ech.n_chunks, ech.width
+        T, n_blocks, S_pad, Gc = ctx.T, ctx.n_blocks, ctx.S_pad, ctx.Gc
+        acc_pad, block, dtype = ctx.acc_pad, ctx.block, ctx.dtype
+        n_tiles, chunk_keep = ctx.n_tiles, ctx.chunk_keep
         c_same = np.zeros((S_pad, S_pad), np.float32)
         n_cnt = np.zeros((S_pad, S_pad), np.float32)
         n_out = np.zeros((S_pad, S_pad), np.float32)
         err = np.zeros((S_pad, S_pad), np.float32)
         chunk_tiles_run = 0
-        if n_tiles and K and sharded:
+        if n_tiles and K and ctx.sharded:
             # per-shard scans over compact row-block slabs; the merge takes
             # the MAX of the error channel (and the sum of the others —
             # placement is disjoint, so both are exact)
@@ -896,6 +981,22 @@ class DetectionEngine:
                 stacks = [jnp.zeros((n_tiles, T, T), jnp.float32)] * 5
             self._scatter_tiles([c_same, n_cnt, n_out, err], coords, stacks,
                                 n_blocks, T)
+        return (c_same, n_cnt, n_out, err), chunk_tiles_run
+
+    def _tiled_finalize(self, ctx: TileScanContext, grids,
+                        chunk_tiles_run: int) -> DetectionResult:
+        """Step 4: INDEX step 3 + error-bounded exact rescore + decide."""
+        cfg = self.cfg
+        opt = self.options
+        ds, p_claim = ctx.ds, ctx.p_claim
+        ech, base_idx, S = ctx.ech, ctx.base_idx, ctx.S
+        K, b = ech.n_chunks, ech.width
+        T, Gc = ctx.T, ctx.Gc
+        tiles_total, n_tiles = ctx.tiles_total, ctx.n_tiles
+        dtype, sharded, mask_source = ctx.dtype, ctx.sharded, ctx.mask_source
+        chunk_nbytes, resident_nbytes = ctx.chunk_nbytes, ctx.resident_nbytes
+        t0 = ctx.t0
+        c_same, n_cnt, n_out, err = grids
         c_same = c_same[:S, :S]
         n_cnt = n_cnt[:S, :S]
         err = err[:S, :S]
@@ -983,5 +1084,131 @@ class DetectionEngine:
                                copying=copying, counter=counter,
                                wall_time_s=time.perf_counter() - t0)
 
+    # -- shard-owner fan-out (DESIGN.md §12) --------------------------------
 
-__all__ = ["DetectionEngine", "EngineOptions", "MODES"]
+    #: engine modes the router fans out as per-owner partial tile scans;
+    #: the remaining (host) modes read through the shard facade on one
+    #: replica instead — both routes are bit-equal to single-host.
+    OWNER_FANOUT_MODES = ("bucketed", "sampled", "sample_verify")
+
+    def owner_scan_context(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        index: InvertedIndex | None = None,
+    ) -> TileScanContext:
+        """The shared fan-out prologue, computed once for all owners.
+
+        Deterministic given (ds, p_claim, index, options): the router
+        builds it on ONE engine and hands it to every owner's
+        ``detect_owner_partial``, so index build, engine chunking, bucket
+        deltas, and tile∘chunk pruning never rerun per owner. Sampled
+        modes resolve their deterministic item subset here (the scan then
+        runs over the subset views; ``items`` rides on the context for the
+        sample_verify finalize). Requires a tiled fan-out mode and a
+        row-range-sharded engine store.
+        """
+        if self.mode not in self.OWNER_FANOUT_MODES:
+            raise ValueError(
+                f"owner fan-out supports modes {self.OWNER_FANOUT_MODES}, "
+                f"engine mode is {self.mode!r}")
+        items = None
+        if self.mode in ("sampled", "sample_verify"):
+            items = self._sample_items(ds)
+            sub = ds.subset_items(items)
+            ctx = self._tiled_prologue(sub, p_claim[:, items])
+        else:
+            ctx = self._tiled_prologue(ds, p_claim, index)
+        ctx.items = items
+        if not ctx.sharded:
+            raise ValueError(
+                "owner fan-out requires a row-range-sharded engine store "
+                "(build the index with n_shards > 1)")
+        return ctx
+
+    def detect_owner_partial(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        owner: int,
+        index: InvertedIndex | None = None,
+        ctx: TileScanContext | None = None,
+    ) -> OwnerPartial:
+        """ONE owner's share of the tiled pass (DESIGN.md §12).
+
+        Scans only the surviving tiles whose ROW block falls in ``owner``'s
+        row range — assembling just the row blocks those tiles touch, never
+        the full incidence — and returns the per-tile kernel outputs as an
+        ``OwnerPartial`` transport payload. Kernel operands are identical
+        to the single-host scan, so per-tile outputs are bit-identical; a
+        failure surfaces as one typed ``ShardScanError`` carrying the owner
+        id (the router merges nothing for a failed wave).
+        """
+        if ctx is None:
+            ctx = self.owner_scan_context(ds, p_claim, index=index)
+        ech = ctx.ech
+        store = ech.store
+        owner = int(owner)
+        if not 0 <= owner < store.n_shards:
+            raise ValueError(
+                f"owner {owner} out of range for {store.n_shards} owners")
+        plan = store.plan
+        T, n_blocks = ctx.T, ctx.n_blocks
+        last_row = max(plan.n_rows - 1, 0)
+        owners = np.array([plan.owner_of_row(min(r * T, last_row))
+                           for r in range(n_blocks)], np.int64)
+        mine = owners[ctx.coords[:, 0]] == owner
+        coords_s = ctx.coords[mine]
+        stacks = None
+        run = 0
+        if len(coords_s) and ech.n_chunks:
+            tile_keep = ctx.chunk_keep[:, ctx.coords[:, 0], ctx.coords[:, 1]]
+            try:
+                stacks, run = self._scan_one_shard(
+                    ech, coords_s, tile_keep[:, mine], ctx.acc_pad, T,
+                    n_blocks, ctx.Gc, ctx.delta, ctx.block, ctx.dtype)
+            except Exception as e:
+                root = e.__cause__ if isinstance(
+                    e, PipelineStageError) and e.__cause__ else e
+                raise ShardScanError(
+                    owner, f"owner tile scan failed: "
+                           f"{type(e).__name__}: {e}") from root
+        return OwnerPartial(owner=owner, n_blocks=n_blocks, tile=T,
+                            coords=coords_s, stacks=stacks,
+                            chunk_tiles_run=run)
+
+    def finalize_owner_partials(
+        self,
+        ds: ClaimsDataset,
+        p_claim: np.ndarray,
+        ctx: TileScanContext,
+        partials: list,
+    ) -> DetectionResult:
+        """Merge per-owner partials and finish the pass (router-side).
+
+        Refuses to merge unless EVERY owner contributed exactly one partial
+        — after an owner failure nothing merges, per the fault contract.
+        Counts sum, the p̂-error bound maxes (``merge_owner_partials``), and
+        the standard finalize (INDEX step 3, error-bounded exact rescore,
+        decide) runs on the merged grids; for sample_verify the sampled
+        merge then feeds the identical recall-slack sweep + exact candidate
+        rescore over the FULL dataset. Decisions are bit-equal to the
+        single-host engine by the §3.4 rescore argument.
+        """
+        store = ctx.ech.store
+        got = sorted(int(p.owner) for p in partials)
+        if got != list(range(store.n_shards)):
+            raise ValueError(
+                f"finalize_owner_partials: partials cover owners {got}, "
+                f"need each of 0..{store.n_shards - 1} exactly once")
+        grids = merge_owner_partials(list(partials), ctx.n_blocks, ctx.T)
+        run = sum(int(p.chunk_tiles_run) for p in partials)
+        result = self._tiled_finalize(ctx, grids, run)
+        if self.mode == "sample_verify":
+            return self._sample_verify_finalize(
+                ds, p_claim, ctx.items, result, self.last_stats,
+                self._last_considered, ctx.t0)
+        return result
+
+
+__all__ = ["DetectionEngine", "EngineOptions", "MODES", "TileScanContext"]

@@ -84,7 +84,12 @@ from repro.core.index import (
     rollback_commit,
 )
 from repro.core.index import retract_rows as index_retract_rows
-from repro.core.shardplan import make_shard_plan, shard_store
+from repro.core.shardplan import (
+    ShardScanError,
+    ShardedCorpusStore,
+    make_shard_plan,
+    shard_store,
+)
 from repro.core.types import ClaimsDataset, CopyConfig, claim_value_keys
 from repro.core.wal import (
     LOG_NAME,
@@ -795,6 +800,7 @@ class DetectionService:
         compact_threshold: float = 0.25,
         durability: Optional[DurabilityOptions] = None,
         _index_state: Optional[dict] = None,
+        _shared_index: Optional[InvertedIndex] = None,
         **engine_options,
     ):
         """Build the service around a fresh engine.
@@ -813,6 +819,12 @@ class DetectionService:
         _index_state: restore-path internal — a serialized committed index
           (``InvertedIndex.state_dict``) loaded instead of ``build_index``,
           which is the dominant cost restore exists to skip.
+        _shared_index: shard-owner internal (DESIGN.md §12) — adopt another
+          service's committed index instead of building one. This replica
+          NEVER mutates the shared object (the primary's commit path does);
+          its own commits apply the claims state and log owner-range-tagged
+          WAL records only, so its ``replica-<i>/`` dir restores
+          independently.
         engine_options: forwarded to ``EngineOptions`` (tile, devices, ...).
         """
         if mode == "incremental":
@@ -836,7 +848,10 @@ class DetectionService:
         # transient commit/rollback in serve_batch — no per-batch rebuild
         opt = self.engine.options
         self._index: Optional[InvertedIndex] = None
-        if mode in INDEXED_MODES:
+        self._index_shared = _shared_index is not None
+        if _shared_index is not None:
+            self._index = _shared_index
+        elif mode in INDEXED_MODES:
             row_cap = self.resident.n_corpus + self.max_pending_rows
             if _index_state is not None:
                 self._index = InvertedIndex.from_state_dict(
@@ -1115,7 +1130,8 @@ class DetectionService:
     # -- corpus mutation (DESIGN.md §7) --------------------------------------
 
     def commit(self, values: np.ndarray, accuracy: np.ndarray,
-               p_claim: np.ndarray, *, compact: bool = True):
+               p_claim: np.ndarray, *, compact: bool = True,
+               _owner_range=None):
         """Fold accepted query rows into the corpus, permanently.
 
         Appends the rows to the resident buffers, advances the committed
@@ -1135,11 +1151,12 @@ class DetectionService:
         """
         with self._corpus_lock:
             return self._commit_locked(values, accuracy, p_claim,
-                                       compact=compact)
+                                       compact=compact,
+                                       owner_range=_owner_range)
 
     def _commit_locked(self, values: np.ndarray, accuracy: np.ndarray,
                        p_claim: np.ndarray, *, compact: bool = True,
-                       log: bool = True):
+                       log: bool = True, owner_range=None):
         """Apply one commit; caller holds ``_corpus_lock``.
 
         ``log=False`` is the replay path (``restore``): the commit being
@@ -1147,6 +1164,11 @@ class DetectionService:
         it. Everything else — index mutation, epoch, touched-key log, stats
         — is identical, which is what makes replay reproduce the live
         commit bit-for-bit (DESIGN.md §8.2).
+
+        On a shared-index replica (``_shared_index``) the committed index
+        belongs to the primary and is mutated exactly once — there; this
+        replica applies the claims state, bumps its epoch, and logs the
+        record (tagged with ``owner_range`` when the router routed it).
         """
         values = np.asarray(values, np.int32)
         accuracy = np.asarray(accuracy, np.float32)
@@ -1163,7 +1185,7 @@ class DetectionService:
         self.base = self.resident.corpus_view()
         self.base_p = self.resident.p_claim[: self.resident.n_corpus]
         info = None
-        if self._index is not None:
+        if self._index is not None and not self._index_shared:
             self._index.store.ensure_row_capacity(
                 self.resident.n_corpus + self.max_pending_rows)
             info = commit_rows(
@@ -1191,10 +1213,12 @@ class DetectionService:
         self.stats.committed_rows += q
         snap_path = None
         if self._log is not None and log:
+            lo, hi = owner_range if owner_range is not None else (-1, -1)
             self._log.append(CommitRecord(
                 epoch=self.epoch, values=values, accuracy=accuracy,
                 p_claim=p_claim, touched_keys=touched, compact=compact,
-                compacted=bool(info.compacted) if info is not None else False))
+                compacted=bool(info.compacted) if info is not None else False,
+                owner_lo=int(lo), owner_hi=int(hi)))
             every = self.durability.snapshot_every
             if every and self.epoch % every == 0:
                 snap_path = self._write_snapshot_locked()
@@ -1259,7 +1283,7 @@ class DetectionService:
 
     # -- source retraction (DESIGN.md §9) ------------------------------------
 
-    def retract(self, row_ids):
+    def retract(self, row_ids, *, _owner_range=None):
         """Remove committed corpus sources, permanently (DESIGN.md §9).
 
         ``row_ids`` index the CURRENT corpus rows to drop (a takedown, a
@@ -1278,9 +1302,11 @@ class DetectionService:
         Returns the ``RetractInfo`` receipt (None for index-less modes).
         """
         with self._corpus_lock:
-            return self._retract_locked(row_ids, log=True)
+            return self._retract_locked(row_ids, log=True,
+                                        owner_range=_owner_range)
 
-    def _retract_locked(self, row_ids, *, log: bool = True):
+    def _retract_locked(self, row_ids, *, log: bool = True,
+                        owner_range=None):
         """Apply one retraction; caller holds ``_corpus_lock``.
 
         ``log=False`` is the replay path (``restore``), mirroring
@@ -1305,7 +1331,7 @@ class DetectionService:
         self.base = self.resident.corpus_view()
         self.base_p = self.resident.p_claim[: self.resident.n_corpus]
         info = None
-        if self._index is not None:
+        if self._index is not None and not self._index_shared:
             info = index_retract_rows(self._index, self.base,
                                       self.engine.cfg, row_ids)
             self.stats.gc_entries += info.gc_entries
@@ -1323,9 +1349,10 @@ class DetectionService:
         self.stats.retracted_rows += int(row_ids.size)
         snap_path = None
         if self._log is not None and log:
+            lo, hi = owner_range if owner_range is not None else (-1, -1)
             self._log.append(RetractRecord(
                 epoch=self.epoch, row_ids=row_ids, touched_keys=touched,
-                n_before=n_before))
+                n_before=n_before, owner_lo=int(lo), owner_hi=int(hi)))
             every = self.durability.snapshot_every
             if every and self.epoch % every == 0:
                 snap_path = self._write_snapshot_locked()
@@ -1434,9 +1461,12 @@ class DetectionService:
         touched-key log, and the result-cache entries. Returns the path.
         """
         n = self.resident.n_corpus
+        # a shared index belongs to the primary replica — it snapshots it;
+        # this replica's snapshot carries only the claims state
+        own_index = self._index is not None and not self._index_shared
         arrays = {
             "service/meta": np.array(
-                [self.epoch, n, int(self._index is not None),
+                [self.epoch, n, int(own_index),
                  int(self.cache is not None)], np.int64),
             "service/values": self.resident.values[:n],
             "service/accuracy": self.resident.accuracy[:n],
@@ -1452,7 +1482,7 @@ class DetectionService:
                 np.concatenate([k for _, k in self._touched_log])
                 if self._touched_log else np.zeros(0, np.int64)),
         }
-        if self._index is not None:
+        if own_index:
             arrays.update(self._index.state_dict())
         if self.cache is not None:
             arrays.update(self.cache.state_dict())
@@ -1739,6 +1769,8 @@ class ReplicaRouter:
     def __init__(self, base: ClaimsDataset, base_p: np.ndarray,
                  cfg: CopyConfig, *, n_replicas: int = 2,
                  breaker_threshold: int = 5, breaker_cooldown_s: float = 5.0,
+                 shard_owners: Optional[int] = None,
+                 breaker_clock=time.monotonic,
                  **service_kw):
         """Build ``n_replicas`` identical services over one corpus.
 
@@ -1747,8 +1779,31 @@ class ReplicaRouter:
         replicas must never interleave records in one commit log.
         ``breaker_threshold`` consecutive write failures eject a replica
         (circuit opens); ``breaker_cooldown_s`` later it is probed for
-        recovery.
+        recovery. ``breaker_clock`` is the breakers' time source (fault
+        tests inject a fake one to drive the cooldown deterministically).
+
+        ``shard_owners=n`` switches the fleet to SHARD-OWNER mode
+        (DESIGN.md §12): replica count becomes ``n`` and each replica owns
+        one row range of a single shared row-range-sharded index instead of
+        a full corpus copy. Replica 0 (the primary) builds the index with
+        ``n_shards=n``; replicas 1.. adopt it (``_shared_index``) and hold
+        only the claims state + their own WAL. Reads in a tiled fan-out
+        mode (``DetectionEngine.OWNER_FANOUT_MODES``) scatter per-owner
+        tile scans gated by each owner's breaker and merge the partial
+        grids with the exact rule; commits/retractions stamp the owning
+        row range into every replica's WAL records.
         """
+        self.shard_owners = (int(shard_owners)
+                             if shard_owners is not None else None)
+        if self.shard_owners is not None:
+            if self.shard_owners < 1:
+                raise ValueError(
+                    f"shard_owners must be ≥ 1, got {shard_owners}")
+            n_replicas = self.shard_owners
+            if self.shard_owners > 1:
+                # the shared index's store IS the placement: one slice per
+                # owner replica, under a balanced row-range ShardPlan
+                service_kw["n_shards"] = self.shard_owners
         if n_replicas < 1:
             raise ValueError(f"n_replicas must be ≥ 1, got {n_replicas}")
         dur = service_kw.pop("durability", None)
@@ -1758,9 +1813,13 @@ class ReplicaRouter:
             if dur is not None:
                 kw["durability"] = dataclasses.replace(
                     dur, state_dir=os.path.join(dur.state_dir, f"replica-{i}"))
+            if (self.shard_owners and i > 0
+                    and self.replicas[0]._index is not None):
+                kw["_shared_index"] = self.replicas[0]._index
             self.replicas.append(DetectionService(base, base_p, cfg, **kw))
         self.breakers = [
-            CircuitBreaker(breaker_threshold, breaker_cooldown_s)
+            CircuitBreaker(breaker_threshold, breaker_cooldown_s,
+                           clock=breaker_clock)
             for _ in range(n_replicas)]
         self._backlogs = [deque() for _ in range(n_replicas)]
         self._rr = 0
@@ -1815,7 +1874,18 @@ class ReplicaRouter:
         reads from it would answer with a stale corpus, so reads route
         around open breakers until catch-up rejoins the replica. Raises
         ``ServiceOverloaded`` when every replica is circuit-open.
+
+        In shard-owner mode there is no full-copy replica to round-robin
+        over: a tiled fan-out mode scatters the scan across ALL owner
+        replicas (``_submit_owner_fanout``); any other mode reads through
+        the primary, whose shard facade assembles rows from every owner's
+        slice.
         """
+        if self.shard_owners and self.shard_owners > 1:
+            if (self.replicas[0].engine.mode
+                    in DetectionEngine.OWNER_FANOUT_MODES):
+                return self._submit_owner_fanout(request)
+            return self.replicas[0].submit(request, timeout=timeout)
         with self._route_lock:
             sync = self._in_sync()
             if not sync:
@@ -1825,6 +1895,187 @@ class ReplicaRouter:
             svc = self.replicas[sync[self._rr]]
             self._rr = (self._rr + 1) % len(sync)
         return svc.submit(request, timeout=timeout)
+
+    # -- shard-owner mode (DESIGN.md §12) ------------------------------------
+
+    def _owner_plan(self):
+        """The fleet's row-range placement (owner i ↔ shard slice i)."""
+        idx = self.replicas[0]._index
+        if idx is not None and isinstance(idx.store, ShardedCorpusStore):
+            return idx.store.plan
+        # index-less modes carry no persistent store — derive the balanced
+        # plan the engine's one-shot build will use at the current size
+        return make_shard_plan(self.replicas[0].resident.n_corpus,
+                               self.shard_owners or 1)
+
+    def owner_of_row(self, r: int) -> int:
+        """Which owner replica's slice holds corpus row ``r``."""
+        return int(self._owner_plan().owner_of_row(int(r)))
+
+    def _submit_owner_fanout(self, request: DetectRequest) -> Future:
+        """Serve one request by fanning the tile scan across owner replicas.
+
+        Synchronous (the caller's thread runs the pass): stage the request
+        on the primary's resident buffers, build ONE owner scan context,
+        collect each owner's partial tile stacks — gated by that owner's
+        circuit breaker, so a dead owner surfaces ONE typed
+        ``ShardScanError`` carrying its id and NO partial grids are merged
+        — then merge with the exact rule (counts summed, p̂-error bounds
+        maxed) and finalize into decisions bit-equal to a single-host pass.
+        The returned future is already resolved (result or exception).
+        """
+        fut: Future = Future()
+        fut.set_running_or_notify_cancel()
+        svc = self.replicas[0]
+        t0 = time.perf_counter()
+        try:
+            # writes never interleave with a fan-out pass: the router's
+            # write lock orders it in the broadcast history, the primary's
+            # corpus lock fences its own worker/commits
+            with self._write_lock, svc._corpus_lock:
+                resp = self._owner_pass_locked(svc, request)
+            resp.latency_s = time.perf_counter() - t0
+            svc.stats.requests += 1
+            svc.stats.batches += 1
+            svc.stats.rows += request.n_rows
+            fut.set_result(resp)
+        except BaseException as exc:  # noqa: BLE001 — future carries it
+            svc.stats.failed_batches += 1
+            svc.stats.failed_requests += 1
+            fut.set_exception(exc)
+        return fut
+
+    def _owner_pass_locked(self, svc: DetectionService,
+                           request: DetectRequest) -> DetectResponse:
+        """One owner-fan-out engine pass; caller holds the locks.
+
+        Mirrors ``serve_batch``'s transient-commit protocol around the
+        primary's committed index, but replaces the monolithic
+        ``engine.detect`` with owner_scan_context → per-owner
+        ``detect_owner_partial`` (breaker-gated) → ``finalize_owner_partials``.
+        """
+        eng = svc.engine
+        S0 = svc.base.n_sources
+        if request.values.shape[1] != svc.base.n_items:
+            raise ValueError(
+                f"request {request.rid}: {request.values.shape[1]} items, "
+                f"corpus has {svc.base.n_items}")
+        union, p, copied = svc.resident.stage([request])
+        idx = svc._index
+        info = token = None
+        if idx is not None and eng.mode in INDEXED_MODES:
+            idx.store.ensure_row_capacity(union.n_sources)
+            info = commit_rows(idx, union, p, eng.cfg,
+                               union.n_sources - S0, compact=False)
+            token = eng.apply_mask_delta(info.delta)
+        try:
+            ctx = eng.owner_scan_context(union, p, index=idx)
+            partials = []
+            for i in range(len(self.replicas)):
+                br = self.breakers[i]
+                if not br.allow():
+                    raise ShardScanError(
+                        i, "owner replica is circuit-open (ejected); "
+                           "refusing the scan before any partial merge")
+                try:
+                    part = eng.detect_owner_partial(union, p, i, ctx=ctx)
+                except ShardScanError:
+                    br.record_failure()
+                    raise          # already typed with the owner id;
+                                   # partials are discarded, never merged
+                except Exception as exc:
+                    br.record_failure()
+                    raise ShardScanError(
+                        i, f"owner scan failed: "
+                           f"{type(exc).__name__}: {exc}") from exc
+                br.record_success()
+                partials.append(part)
+            res = eng.finalize_owner_partials(union, p, ctx, partials)
+        finally:
+            if info is not None:
+                rollback_commit(idx, info)
+                if token is not None:
+                    eng.undo_mask_delta(token)
+                else:
+                    eng.rebase_mask_cache(info.delta)
+        rows = slice(S0, S0 + request.n_rows)
+        svc.stats.host_copy_bytes += copied
+        return DetectResponse(
+            rid=request.rid,
+            copying=res.copying[rows, :S0].copy(),
+            pr_independent=res.pr_independent[rows, :S0].copy(),
+            c_fwd=res.c_fwd[rows, :S0].copy(),
+            intra_copying=res.copying[rows, rows].copy(),
+            batch_requests=1,
+            batch_rows=request.n_rows,
+            engine_wall_s=res.wall_time_s,
+            host_copy_bytes=copied,
+        )
+
+    def catch_up(self) -> list:
+        """Replay backlogged writes into replicas whose cooldown elapsed.
+
+        The read-side rejoin hook (``_broadcast`` does the same inline on
+        the next write): for each replica with a backlog whose breaker
+        admits a probe, replay its missed writes in order — success closes
+        the breaker and rejoins the replica at the fleet epoch, a failure
+        re-opens it with exactly the still-missing suffix queued. Returns
+        per-replica counts of writes replayed.
+        """
+        replayed = [0] * len(self.replicas)
+        with self._write_lock:
+            for i, svc in enumerate(self.replicas):
+                br = self.breakers[i]
+                if not self._backlogs[i] or not br.allow():
+                    continue
+                try:
+                    while self._backlogs[i]:
+                        b_op, b_args, b_kw = self._backlogs[i][0]
+                        getattr(svc, b_op)(*b_args, **b_kw)
+                        self._backlogs[i].popleft()
+                        replayed[i] += 1
+                except Exception:  # noqa: BLE001 — breaker records it
+                    br.record_failure()
+                    continue
+                br.record_success()
+            if self._in_sync():
+                self._epoch_locked()
+        return replayed
+
+    def rebalance(self, tolerance: float = 0.25) -> bool:
+        """Unseal → rebalance → reseal the shared sharded store.
+
+        The operator drill OPERATIONS.md §10 describes: when commit/retract
+        growth skews the row-range placement past ``1 + tolerance``, re-split
+        the rows evenly — unsealing first when the store is packed/spilled,
+        and resealing with the engine's shard options afterward so the
+        per-owner byte budgets re-apply under the NEW plan. Decisions are
+        placement-independent (the merge rule is exact), so no cache entry
+        is invalidated; the engine's block-OR mask caches are dropped
+        because the store's membership sequence restarts. Returns True when
+        rows moved.
+        """
+        svc = self.replicas[0]
+        idx = svc._index
+        if idx is None or not isinstance(idx.store, ShardedCorpusStore):
+            raise RuntimeError(
+                "rebalance needs a row-range-sharded committed index "
+                "(shard_owners=n or n_shards>1 on an indexed mode)")
+        opt = svc.engine.options
+        with self._write_lock, svc._corpus_lock:
+            store = idx.store
+            was_sealed = store.sealed
+            if was_sealed:
+                store.unseal()
+            moved = store.rebalance(tolerance)
+            if was_sealed:
+                store.seal(pack=opt.shard_pack,
+                           spill_dir=opt.shard_spill_dir,
+                           resident_bytes=opt.shard_spill_bytes)
+            if moved:
+                for r in self.replicas:
+                    r.engine.invalidate_mask_cache()
+        return moved
 
     def _broadcast(self, op: str, args: tuple, kw: dict) -> list:
         """Apply one write op to the fleet; caller holds ``_write_lock``.
@@ -1897,10 +2148,21 @@ class ReplicaRouter:
         ``_broadcast``). The post-broadcast epoch check turns any remaining
         divergence among in-sync replicas (a replica that saw a different
         write order) into a hard error instead of silent split-brain.
+
+        In shard-owner mode the commit additionally ROUTES: the appended
+        rows land in ``owner_of_row(n_before)``'s slice (appends go to the
+        plan's tail range; the shard facade places the bytes), and every
+        replica's WAL record is stamped with the owning row range so each
+        ``replica-<i>/`` dir restores independently (DESIGN.md §12).
         """
         with self._write_lock:
+            kw: dict = {"compact": compact}
+            if self.shard_owners:
+                n_before = self.replicas[0].resident.n_corpus
+                q = int(np.asarray(values).shape[0])
+                kw["_owner_range"] = (n_before, n_before + q)
             return self._broadcast(
-                "commit", (values, accuracy, p_claim), {"compact": compact})
+                "commit", (values, accuracy, p_claim), kw)
 
     def retract(self, row_ids) -> list:
         """Broadcast one source retraction to every replica, serialized.
@@ -1910,9 +2172,16 @@ class ReplicaRouter:
         so retractions interleave with commits in one total write order,
         which is what keeps every replica's (and the WAL's) mutation
         history identical. Returns per-replica ``RetractInfo`` receipts.
+        In shard-owner mode the WAL records carry the [lo, hi) row span
+        covering the retracted ids (see ``commit``).
         """
         with self._write_lock:
-            return self._broadcast("retract", (row_ids,), {})
+            kw = {}
+            if self.shard_owners:
+                ids = np.asarray(row_ids, np.int64).ravel()
+                if ids.size:
+                    kw["_owner_range"] = (int(ids.min()), int(ids.max()) + 1)
+            return self._broadcast("retract", (row_ids,), kw)
 
     def flush(self) -> int:
         """Drain every replica synchronously; returns requests served."""

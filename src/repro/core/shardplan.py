@@ -205,6 +205,92 @@ def merge_shard_partials(partials: list, shape: Optional[tuple] = None):
     return c_same, n_cnt, n_out, err
 
 
+def scatter_tile_stacks(grids, coords, stacks, n_blocks: int,
+                        tile: int) -> None:
+    """Scatter both orientations of every unordered tile into full grids.
+
+    The blocked transpose is a writable view, so fancy assignment on tile
+    coordinates lands each (T, T) block in place. The (c, r) mirror of tile
+    (r, c) is C_same←ᵀ for the score and the plain transpose for the
+    symmetric-role channels; diagonal tiles write identical values twice.
+    ``grids`` = [c_same, n_cnt, n_out, err]; ``stacks`` holds the five
+    kernel channels (C→, C←, shared count, non-Ē count, error bound) as
+    ``(≥ len(coords), T, T)`` arrays (device or host — mesh padding rows
+    past ``len(coords)`` are ignored).
+    """
+    n = len(coords)
+    rr, cc = coords[:, 0], coords[:, 1]
+    cf_t, cb_t, n_t, o_t, e_t = (np.asarray(s, np.float32)[:n]
+                                 for s in stacks)
+    for grid, fwd, bwd in (
+        (grids[0], cf_t, cb_t.transpose(0, 2, 1)),
+        (grids[1], n_t, None),
+        (grids[2], o_t, None),
+        (grids[3], e_t, None),
+    ):
+        g4 = grid.reshape(n_blocks, tile, n_blocks, tile).transpose(0, 2, 1, 3)
+        g4[rr, cc] = fwd
+        g4[cc, rr] = fwd.transpose(0, 2, 1) if bwd is None else bwd
+
+
+@dataclass
+class OwnerPartial:
+    """One shard-owner's share of a tiled detection pass (transport form).
+
+    The shard-owner fan-out (DESIGN.md §12): each owner replica scans only
+    the unordered pair tiles whose ROW block falls in its row range and
+    ships the per-tile kernel outputs — not full ``(S_pad, S_pad)`` grids —
+    back to the router. ``stacks`` holds the five kernel channels (C→, C←,
+    shared count, non-Ē count, error bound) as ``(k, T, T)`` float32 host
+    arrays aligned with ``coords``; ``to_grids`` scatters them into the
+    full-size zero grids ``merge_shard_partials`` consumes. Tile ownership
+    partitions the pair space, so scattering each owner's tiles and merging
+    (sum / sum / sum / max) reproduces the single-host grids bit-exactly —
+    the §3.4 rescore argument then carries decisions unchanged.
+    """
+
+    owner: int                 # shard-owner id under the placement plan
+    n_blocks: int              # tile-grid edge (blocks per side)
+    tile: int                  # tile edge T
+    coords: np.ndarray         # (k, 2) int32 — this owner's surviving tiles
+    stacks: Optional[list]     # 5 × (k, T, T) float32, or None (no work)
+    chunk_tiles_run: int = 0   # chunk∘tile pairs this owner actually scanned
+
+    @property
+    def nbytes(self) -> int:
+        """Transport payload size (what a real fan-out would ship)."""
+        n = self.coords.nbytes
+        if self.stacks is not None:
+            n += sum(int(np.asarray(s).nbytes) for s in self.stacks)
+        return n
+
+    def to_grids(self) -> tuple:
+        """This owner's partial grids, full-size with unowned tiles zero."""
+        s_pad = self.n_blocks * self.tile
+        grids = [np.zeros((s_pad, s_pad), np.float32) for _ in range(4)]
+        if self.stacks is not None and len(self.coords):
+            scatter_tile_stacks(grids, self.coords, self.stacks,
+                                self.n_blocks, self.tile)
+        return tuple(grids)
+
+
+def merge_owner_partials(partials: list, n_blocks: int, tile: int):
+    """Router-side merge of per-owner partials (DESIGN.md §12).
+
+    Requires every owner exactly once — a missing or duplicate owner would
+    silently drop or double its tiles' counts, so the merge refuses rather
+    than produce a plausible-but-wrong decision grid (the fault-handling
+    contract: no partial grids are ever merged after an owner failure).
+    """
+    owners = sorted(p.owner for p in partials)
+    if owners != list(range(len(owners))):
+        raise ValueError(
+            f"owner partials must cover each owner exactly once, got "
+            f"owners {owners}")
+    return merge_shard_partials([p.to_grids() for p in partials],
+                                shape=(n_blocks * tile, n_blocks * tile))
+
+
 # ---------------------------------------------------------------------------
 # Per-shard row slice
 # ---------------------------------------------------------------------------
@@ -1207,19 +1293,39 @@ class ShardedStoreSnapshot:
                     blk[lv:] = 0
 
 
-def shard_store(store: CorpusStore, plan) -> ShardedCorpusStore:
+def shard_store(store: CorpusStore, plan, *, pack: bool = False,
+                spill_dir: Optional[str] = None,
+                resident_bytes: Optional[int] = None,
+                consume: bool = False) -> ShardedCorpusStore:
     """Slice a ``CorpusStore`` into a ``ShardedCorpusStore`` under ``plan``.
 
     ``plan`` is a ``ShardPlan`` or a shard count. Incidence rows are COPIED
-    into per-shard blocks (the source store is not mutated); entry metadata
-    arrays are shared (both sides follow copy-on-write). Row slack beyond
-    the committed rows lands in the last shard.
+    into per-shard blocks (the source store is not mutated unless
+    ``consume``); entry metadata arrays are shared (both sides follow
+    copy-on-write). Row slack beyond the committed rows lands in the last
+    shard.
+
+    ``pack`` / ``spill_dir`` / ``resident_bytes`` stream the SEAL through
+    the build (DESIGN.md §12): each per-shard block is bitpacked as it is
+    sliced and evicted under the LRU byte cap the moment the shard's
+    resident set exceeds it — the returned store is already sealed, and no
+    shard's peak-resident bytes ever exceed the cap DURING the build,
+    where the old slice-everything-then-``seal()`` path transiently held
+    every shard's full dense slice. ``consume=True`` additionally releases
+    each source chunk once all shards sliced it
+    (``CorpusStore.release_chunk``), bounding a from-scratch S=1M build to
+    one source chunk plus the capped shard residents.
     """
     if isinstance(plan, int):
         plan = make_shard_plan(store.n_rows, plan)
     if plan.n_rows != store.n_rows:
         raise ValueError(
             f"plan covers {plan.n_rows} rows, store has {store.n_rows}")
+    streaming = pack or spill_dir is not None or resident_bytes is not None
+    if resident_bytes is not None and spill_dir is None:
+        spill_dir = tempfile.mkdtemp(prefix="cd-spill-")
+    if spill_dir is not None:
+        os.makedirs(spill_dir, exist_ok=True)
     starts = plan.bounds[:-1].copy()
     n_shards = plan.n_shards
     slices = []
@@ -1228,14 +1334,34 @@ def shard_store(store: CorpusStore, plan) -> ShardedCorpusStore:
         cov0 = int(starts[s])
         cov1 = int(starts[s + 1]) if s + 1 < n_shards else store.capacity
         sl = _ShardSlice(s, cov0, max(cov1 - cov0, 0))
-        for c in range(store.n_chunks):
-            blk = np.zeros((sl.cap_rows, widths[c]), np.int8)
-            lv = max(min(cov1, store.n_rows) - cov0, 0)
-            if lv:
-                blk[:lv] = store.chunks[c][cov0: cov0 + lv]
-            sl.blocks.append(blk)
-        sl._note_peak()
+        if streaming:
+            sl.sealed = True
+            sl.spill_dir = spill_dir
+            sl.budget = (None if resident_bytes is None
+                         else int(resident_bytes))
         slices.append(sl)
+    # chunk-major fill: every shard takes its rows of chunk c before chunk
+    # c+1 is touched, so a streaming build can seal (pack + budget-evict)
+    # each block immediately and release the source chunk behind it
+    for c in range(store.n_chunks):
+        src = store.chunks[c]
+        for s, sl in enumerate(slices):
+            cov1 = int(starts[s + 1]) if s + 1 < n_shards else store.capacity
+            blk = np.zeros((sl.cap_rows, widths[c]), np.int8)
+            lv = max(min(cov1, store.n_rows) - sl.start, 0)
+            if lv:
+                blk[:lv] = src[sl.start: sl.start + lv]
+            if streaming and pack:
+                blk = pack_membership(blk)
+            sl.blocks.append(blk)
+            if streaming:
+                sl._touch(c)
+                sl._note_peak()
+                sl._enforce_budget()
+        if consume:
+            store.release_chunk(c)
+    for sl in slices:
+        sl._note_peak()
     return ShardedCorpusStore(
         slices=slices, starts=starts, widths=widths,
         entry_item=store.entry_item, entry_value=store.entry_value,
@@ -1246,9 +1372,10 @@ def shard_store(store: CorpusStore, plan) -> ShardedCorpusStore:
 
 
 __all__ = [
-    "SHARD_LAYOUT_VERSION", "SealedShardError", "ShardPlan", "ShardScanError",
-    "ShardedCorpusStore", "ShardedStoreSnapshot", "SpillCorruptionError",
-    "make_shard_plan", "merge_shard_partials", "rebalance_plan",
+    "OwnerPartial", "SHARD_LAYOUT_VERSION", "SealedShardError", "ShardPlan",
+    "ShardScanError", "ShardedCorpusStore", "ShardedStoreSnapshot",
+    "SpillCorruptionError", "make_shard_plan", "merge_owner_partials",
+    "merge_shard_partials", "rebalance_plan", "scatter_tile_stacks",
     "shard_store",
 ]
 

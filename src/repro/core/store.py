@@ -145,7 +145,22 @@ class CorpusStore:
     @property
     def max_chunk_nbytes(self) -> int:
         """Largest single incidence allocation held by this store."""
-        return max((c.nbytes for c in self.chunks), default=0)
+        return max((c.nbytes for c in self.chunks if c is not None),
+                   default=0)
+
+    def release_chunk(self, c: int) -> None:
+        """Free chunk ``c``'s incidence block, irreversibly.
+
+        The streaming shard build (``shardplan.shard_store(consume=True)``)
+        calls this after all shards sliced their rows of chunk ``c``, so a
+        from-scratch sharded build never holds more than one source chunk
+        alongside the capped shard residents. The store is consumed: any
+        later read of a released chunk fails loud instead of returning
+        stale or zero incidence.
+        """
+        self.chunks[int(c)] = None
+        self._views = {}
+        self._views_key = None
 
     @property
     def n_live_entries(self) -> int:
@@ -186,6 +201,10 @@ class CorpusStore:
             self._views_key = key
         view = self._views.get(c)
         if view is None:
+            if self.chunks[c] is None:
+                raise RuntimeError(
+                    f"chunk {c} was released (release_chunk) — this store "
+                    f"was consumed by a streaming shard build")
             s0 = self.chunk_start(c)
             s1 = s0 + self.chunks[c].shape[1]
             view = ChunkView(

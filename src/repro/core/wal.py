@@ -172,6 +172,12 @@ class CommitRecord:
     touched_keys: np.ndarray      # sorted int64 claim keys of the rows
     compact: bool                 # the compact= flag the commit ran with
     compacted: bool               # compaction marker: did deltas fold back?
+    # Shard-owner routing (DESIGN.md §12): the corpus row range [lo, hi)
+    # these rows landed in, so a restoring owner replica knows whether the
+    # record mutates ITS index slice or only the shared claims state.
+    # -1/-1 = unscoped (single-host service or pre-§12 log).
+    owner_lo: int = -1
+    owner_hi: int = -1
 
     def payload(self) -> bytes:
         """Encode this record's fields to the framed npz payload."""
@@ -181,7 +187,8 @@ class CommitRecord:
             "p_claim": np.asarray(self.p_claim, np.float32),
             "touched_keys": np.asarray(self.touched_keys, np.int64),
             "meta": np.array([self.epoch, int(self.compact),
-                              int(self.compacted)], np.int64),
+                              int(self.compacted), self.owner_lo,
+                              self.owner_hi], np.int64),
         })
 
     @classmethod
@@ -189,10 +196,12 @@ class CommitRecord:
         """Decode a framed npz payload back into a record."""
         d = _decode_arrays(payload)
         meta = d["meta"]
+        # Older logs carry a 3-int meta (no owner range) — decode as -1/-1.
+        lo, hi = (int(meta[3]), int(meta[4])) if len(meta) >= 5 else (-1, -1)
         return cls(epoch=int(meta[0]), values=d["values"],
                    accuracy=d["accuracy"], p_claim=d["p_claim"],
                    touched_keys=d["touched_keys"], compact=bool(meta[1]),
-                   compacted=bool(meta[2]))
+                   compacted=bool(meta[2]), owner_lo=lo, owner_hi=hi)
 
 
 @dataclass
@@ -212,13 +221,18 @@ class RetractRecord:
     row_ids: np.ndarray           # (k,) int64 — retracted corpus rows
     touched_keys: np.ndarray      # sorted int64 claim keys of those rows
     n_before: int                 # corpus rows BEFORE the retraction
+    # Shard-owner routing (DESIGN.md §12): the [lo, hi) row span covering
+    # the retracted ids; -1/-1 = unscoped (see CommitRecord).
+    owner_lo: int = -1
+    owner_hi: int = -1
 
     def payload(self) -> bytes:
         """Encode this record's fields to the framed npz payload."""
         return _encode_arrays({
             "row_ids": np.asarray(self.row_ids, np.int64),
             "touched_keys": np.asarray(self.touched_keys, np.int64),
-            "meta": np.array([self.epoch, self.n_before], np.int64),
+            "meta": np.array([self.epoch, self.n_before, self.owner_lo,
+                              self.owner_hi], np.int64),
         })
 
     @classmethod
@@ -226,8 +240,10 @@ class RetractRecord:
         """Decode a framed npz payload back into a record."""
         d = _decode_arrays(payload)
         meta = d["meta"]
+        lo, hi = (int(meta[2]), int(meta[3])) if len(meta) >= 4 else (-1, -1)
         return cls(epoch=int(meta[0]), row_ids=d["row_ids"],
-                   touched_keys=d["touched_keys"], n_before=int(meta[1]))
+                   touched_keys=d["touched_keys"], n_before=int(meta[1]),
+                   owner_lo=lo, owner_hi=hi)
 
 
 class CommitLog:

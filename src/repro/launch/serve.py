@@ -142,8 +142,9 @@ def serve_detect(args):
     if args.state_dir:
         service_kw["durability"] = DurabilityOptions(
             state_dir=args.state_dir, snapshot_every=args.snapshot_every)
-    restorable = args.state_dir and args.replicas <= 1 and os.path.exists(
-        os.path.join(args.state_dir, "manifest.json"))
+    restorable = (args.state_dir and args.replicas <= 1
+                  and not args.shard_owners and os.path.exists(
+                      os.path.join(args.state_dir, "manifest.json")))
     if restorable:
         svc = DetectionService.restore(args.state_dir,
                                        devices=args.devices)
@@ -153,6 +154,23 @@ def serve_detect(args):
               f"commits in {ri.wall_s:.2f}s "
               f"({ri.discarded_bytes} torn-tail bytes discarded); "
               f"corpus {svc.resident.n_corpus} sources at epoch {svc.epoch}")
+    elif args.shard_owners:
+        # shard-owner fleet (DESIGN.md §12): each replica OWNS one row
+        # range of a single shared sharded index; tiled fan-out modes
+        # scatter the scan per owner and merge on the router
+        svc = ReplicaRouter(sc.dataset, p, cfg,
+                            shard_owners=args.shard_owners,
+                            breaker_threshold=args.breaker_threshold,
+                            breaker_cooldown_s=args.breaker_cooldown_s,
+                            shard_pack=args.shard_pack,
+                            shard_spill_bytes=args.shard_spill_bytes,
+                            shard_spill_dir=args.shard_spill_dir,
+                            **{k: v for k, v in service_kw.items()
+                               if k not in ("n_shards", "shard_pack",
+                                            "shard_spill_bytes",
+                                            "shard_spill_dir")})
+        print(f"[serve] shard-owner fleet: {args.shard_owners} owners, "
+              f"placement {svc._owner_plan().bounds.tolist()}")
     elif args.replicas > 1:
         svc = ReplicaRouter(sc.dataset, p, cfg, n_replicas=args.replicas,
                             breaker_threshold=args.breaker_threshold,
@@ -365,6 +383,12 @@ def main():
     ap.add_argument("--replicas", type=int, default=1,
                     help="serve through a ReplicaRouter with this many "
                          "DetectionService replicas (commits broadcast)")
+    ap.add_argument("--shard-owners", type=int, default=None,
+                    help="shard-owner fleet (DESIGN.md §12): this many "
+                         "replicas, each OWNING one row range of a shared "
+                         "sharded index; tiled fan-out modes scatter the "
+                         "scan per owner and the router merges partial "
+                         "grids bit-equal to a single host")
     ap.add_argument("--breaker-threshold", type=int, default=5,
                     help="consecutive commit failures before a replica's "
                          "circuit breaker opens and it is ejected from "

@@ -1,0 +1,117 @@
+"""ISSUE 10 acceptance: shard-owner router decisions are bit-equal to a
+single-host service — every servable engine mode × {2, 4} owners at
+S ∈ {64, 512} under 8 virtual devices. The ninth mode (incremental) cannot
+be served (its bookkeeping assumes a fixed source axis) and is pinned at
+the engine level instead: owner-count row-range placement equals unsharded.
+
+Mirrors tests/test_shard_modes.py: one subprocess with 8 virtual devices.
+Tiled fan-out modes (bucketed, sampled, sample_verify) go through the
+router's owner scatter/merge path (``_submit_owner_fanout``); host modes
+read through the primary's shard facade — both must reproduce the
+single-host responses bit-for-bit, before AND after a routed commit.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import numpy as np
+    from repro.core import CopyConfig, DetectionEngine
+    from repro.core.serving import DetectRequest, DetectionService, ReplicaRouter
+    from repro.data.claims import (
+        SyntheticSpec, oracle_claim_probs, synthetic_claims,
+        synthetic_query_rows)
+
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+    specs = {
+        64: SyntheticSpec(n_sources=64, n_items=384, coverage="book",
+                          n_cliques=4, clique_size=3, clique_items=12, seed=0),
+        512: SyntheticSpec(n_sources=512, n_items=1536, coverage="book",
+                           n_cliques=14, clique_size=3, clique_items=12, seed=0),
+    }
+    SERVABLE = ("pairwise", "exact", "bound", "bound+", "hybrid",
+                "sampled", "sample_verify", "bucketed")
+    ENGINE_KW = dict(tile=64, devices=8, sample_rate=0.2, sample_seed=1)
+
+    def one_response(svc, req):
+        fut = svc.submit(req)
+        svc.flush()
+        return fut.result()
+
+    def resp_equal(a, b):
+        return (np.array_equal(a.copying, b.copying)
+                and np.array_equal(a.intra_copying, b.intra_copying)
+                and np.array_equal(a.c_fwd, b.c_fwd)
+                and np.array_equal(a.pr_independent, b.pr_independent))
+
+    out = {}
+    for S, spec in specs.items():
+        sc = synthetic_claims(spec)
+        p = oracle_claim_probs(sc)
+        vals, acc, pq, _ = synthetic_query_rows(sc, 8, seed=3)
+        req = DetectRequest(rid=1, values=vals[:4], accuracy=acc[:4],
+                            p_claim=pq[:4])
+        req2 = DetectRequest(rid=2, values=vals[4:8], accuracy=acc[4:8],
+                             p_claim=pq[4:8])
+        for mode in SERVABLE:
+            single = DetectionService(sc.dataset, p, cfg, mode=mode,
+                                      **ENGINE_KW)
+            ref = one_response(single, req)
+            single.commit(vals[4:6], acc[4:6], pq[4:6])
+            ref2 = one_response(single, req2)
+            for owners in (2, 4):
+                router = ReplicaRouter(sc.dataset, p, cfg,
+                                       shard_owners=owners, mode=mode,
+                                       **ENGINE_KW)
+                got = one_response(router, req)
+                router.commit(vals[4:6], acc[4:6], pq[4:6])
+                got2 = one_response(router, req2)
+                fanout = mode in DetectionEngine.OWNER_FANOUT_MODES
+                out[f"S{S}/{mode}/owners{owners}"] = {
+                    "equal": bool(resp_equal(ref, got)),
+                    "equal_after_commit": bool(resp_equal(ref2, got2)),
+                    "epoch": int(router.epoch),
+                    "fanout": bool(fanout),
+                    "copying_bits": int(got.copying.sum()
+                                        + got2.copying.sum()),
+                }
+        # ninth mode: incremental is engine-only — owner-count placement
+        # over the sharded facade must stay bit-equal to unsharded
+        eng_ref = DetectionEngine(cfg, mode="incremental", **ENGINE_KW)
+        inc_ref = eng_ref.detect(sc.dataset, p).copying
+        for owners in (2, 4):
+            eng = DetectionEngine(cfg, mode="incremental", n_shards=owners,
+                                  **ENGINE_KW)
+            got = eng.detect(sc.dataset, p).copying
+            out[f"S{S}/incremental/owners{owners}"] = {
+                "equal": bool(np.array_equal(inc_ref, got)),
+                "equal_after_commit": True, "epoch": 0, "fanout": False,
+                "copying_bits": int(got.sum())}
+    print("RESULT" + json.dumps(out))
+""")
+
+
+def test_owner_router_bit_equal_all_modes():
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, timeout=1800,
+                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                               "JAX_PLATFORMS": "cpu"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [ln for ln in proc.stdout.splitlines() if ln.startswith("RESULT")][0]
+    out = json.loads(line[len("RESULT"):])
+    # 9 modes × 2 owner counts × 2 corpus sizes
+    assert len(out) == 36, sorted(out)
+    for combo, r in out.items():
+        assert r["equal"], f"{combo}: owner-router decisions diverged"
+        assert r["equal_after_commit"], (
+            f"{combo}: decisions diverged after a routed commit")
+    # the tiled modes went through the fan-out path, and something detected
+    assert sum(1 for r in out.values() if r["fanout"]) == 12
+    assert any(r["copying_bits"] > 0 for r in out.values())
+    # routed commits moved every replica to the same epoch
+    assert all(r["epoch"] == 1 for k, r in out.items()
+               if "incremental" not in k)

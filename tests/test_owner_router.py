@@ -1,0 +1,279 @@
+"""Shard-owner router behavior (ISSUE 10, DESIGN.md §12).
+
+Covers the router-level contracts the subprocess equivalence matrix
+(tests/test_owner_modes.py) does not: fault handling when an owner replica
+dies mid-scan (one typed error, no partial merge, breaker-gated rejoin —
+satellite 3), owner-range-tagged WAL records and independent per-replica
+restore, and the unseal → rebalance → reseal operator drill end-to-end
+(satellite 2).
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.serving import (
+    DetectRequest,
+    DetectionService,
+    DurabilityOptions,
+    ReplicaRouter,
+)
+from repro.core.shardplan import (
+    ShardScanError,
+    ShardedCorpusStore,
+    make_shard_plan,
+)
+from repro.core.types import ClaimsDataset, CopyConfig
+from repro.core.wal import CommitLog, CommitRecord, RetractRecord, _encode_arrays
+
+from tests.faults import FakeClock
+
+
+def _corpus(S=64, D=32, V=5, seed=0):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, V, (S, D)).astype(np.int32)
+    vals[rng.random((S, D)) < 0.3] = -1
+    vals[8] = vals[3]                       # one certain copier pair
+    acc = rng.uniform(0.4, 0.9, S).astype(np.float32)
+    p = rng.uniform(0.3, 0.9, (S, D)).astype(np.float32)
+    return ClaimsDataset(values=vals, accuracy=acc), p
+
+
+def _query(ds, q=4, seed=1):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 5, (q, ds.n_items)).astype(np.int32)
+    vals[rng.random((q, ds.n_items)) < 0.3] = -1
+    vals[0] = ds.values[3]
+    acc = rng.uniform(0.4, 0.9, q).astype(np.float32)
+    p = rng.uniform(0.3, 0.9, (q, ds.n_items)).astype(np.float32)
+    return vals, acc, p
+
+
+def _serve_one(svc, req):
+    fut = svc.submit(req)
+    svc.flush()
+    return fut.result()
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: a dead owner replica mid-scan
+# ---------------------------------------------------------------------------
+
+def test_dead_owner_mid_scan_typed_error_then_rejoin():
+    ds, p = _corpus()
+    cfg = CopyConfig()
+    qv, qa, qp = _query(ds)
+    req = DetectRequest(rid=1, values=qv, accuracy=qa, p_claim=qp)
+
+    single = DetectionService(ds, p, cfg, mode="bucketed", tile=16)
+    ref = _serve_one(single, req)
+
+    clock = FakeClock()
+    router = ReplicaRouter(ds, p, cfg, shard_owners=2, mode="bucketed",
+                           tile=16, breaker_threshold=2,
+                           breaker_cooldown_s=5.0, breaker_clock=clock)
+    eng = router.replicas[0].engine
+    orig_partial = eng.detect_owner_partial
+    orig_finalize = eng.finalize_owner_partials
+    calls = {"partial": 0, "finalize": 0}
+
+    def dead_owner_1(ds_, p_, owner, index=None, ctx=None):
+        calls["partial"] += 1
+        if owner == 1:
+            raise RuntimeError("owner host 1 is unreachable")
+        return orig_partial(ds_, p_, owner, index=index, ctx=ctx)
+
+    def counting_finalize(*a, **kw):
+        calls["finalize"] += 1
+        return orig_finalize(*a, **kw)
+
+    eng.detect_owner_partial = dead_owner_1
+    eng.finalize_owner_partials = counting_finalize
+    try:
+        # ONE typed error carrying the owner id; no partial grids merged
+        with pytest.raises(ShardScanError) as ei:
+            router.submit(req).result()
+        assert ei.value.shard == 1
+        assert calls["finalize"] == 0
+        assert router.breakers[1].failures == 1
+
+        # second failure trips the breaker (threshold=2): the NEXT scan is
+        # refused fast — before the dead owner's partial is even attempted
+        with pytest.raises(ShardScanError):
+            router.submit(req).result()
+        assert router.breakers[1].state == "open"
+        seen = calls["partial"]
+        with pytest.raises(ShardScanError) as ei:
+            router.submit(req).result()
+        assert ei.value.shard == 1
+        assert "circuit-open" in str(ei.value)
+        assert calls["partial"] == seen + 1      # owner 0 probed, 1 skipped
+
+        # a write while owner 1 is down defers into its backlog; the
+        # healthy rest commits and the fleet epoch advances without it
+        infos = router.commit(qv[:2], qa[:2], qp[:2])
+        assert infos[1] is None and len(router._backlogs[1]) == 1
+        assert router._in_sync() == [0]
+    finally:
+        eng.detect_owner_partial = orig_partial
+        eng.finalize_owner_partials = orig_finalize
+
+    # rejoin: cooldown elapses, catch-up replays the backlog, the breaker
+    # closes, and fan-out reads serve again — bit-equal to single-host
+    clock.advance(6.0)
+    replayed = router.catch_up()
+    assert replayed[1] == 1 and not router._backlogs[1]
+    assert router.breakers[1].state == "closed"
+    assert router._in_sync() == [0, 1]
+    assert router.epoch == 1
+
+    single.commit(qv[:2], qa[:2], qp[:2])
+    req2 = DetectRequest(rid=2, values=qv, accuracy=qa, p_claim=qp)
+    got = _serve_one(router, req2)
+    want = _serve_one(single, req2)
+    assert np.array_equal(got.copying, want.copying)
+    assert np.array_equal(got.c_fwd, want.c_fwd)
+    assert ref.copying.shape == (4, 64)
+
+
+# ---------------------------------------------------------------------------
+# Owner-range-tagged WAL records, independent per-replica restore
+# ---------------------------------------------------------------------------
+
+def test_owner_range_in_wal_and_independent_restore(tmp_path):
+    ds, p = _corpus()
+    cfg = CopyConfig()
+    qv, qa, qp = _query(ds, q=6)
+    state = str(tmp_path / "fleet")
+    router = ReplicaRouter(
+        ds, p, cfg, shard_owners=2, mode="bucketed", tile=16,
+        durability=DurabilityOptions(state_dir=state, snapshot_every=0))
+    n0 = ds.n_sources
+    router.commit(qv[:4], qa[:4], qp[:4])
+    router.retract([1, 3])
+    router.commit(qv[4:6], qa[4:6], qp[4:6])
+    live_epoch = router.epoch
+    live_dense = router.replicas[0]._index.store.to_dense()
+
+    # every replica logged every record, each stamped with the owning range
+    for i in range(2):
+        records, _, _ = CommitLog.scan(
+            os.path.join(state, f"replica-{i}", "commits.wal"))
+        assert [type(r).__name__ for r in records] == [
+            "CommitRecord", "RetractRecord", "CommitRecord"]
+        assert (records[0].owner_lo, records[0].owner_hi) == (n0, n0 + 4)
+        assert (records[1].owner_lo, records[1].owner_hi) == (1, 4)
+        assert (records[2].owner_lo, records[2].owner_hi) == (n0 + 2, n0 + 4)
+        # the commit's rows belong to ONE owner under the plan
+        plan = router._owner_plan()
+        assert plan.owner_of_row(records[0].owner_lo) == plan.owner_of_row(
+            records[0].owner_hi - 1)
+
+    # replica-0 (the primary) restores alone and reproduces the index
+    primary = DetectionService.restore(os.path.join(state, "replica-0"))
+    assert primary.epoch == live_epoch
+    assert isinstance(primary._index.store, ShardedCorpusStore)
+    assert np.array_equal(primary._index.store.to_dense(), live_dense)
+
+    # replica-1 restores independently from ITS state dir, adopting the
+    # restored primary's index (its snapshot carries claims state only)
+    member = DetectionService.restore(os.path.join(state, "replica-1"),
+                                      _shared_index=primary._index)
+    assert member.epoch == live_epoch
+    assert member._index_shared
+    assert np.array_equal(
+        member.resident.values[:member.resident.n_corpus],
+        primary.resident.values[:primary.resident.n_corpus])
+
+
+def test_wal_owner_range_back_compat():
+    # a pre-§12 record (3-int / 2-int meta) decodes with an unscoped range
+    old_commit = _encode_arrays({
+        "values": np.zeros((1, 4), np.int32),
+        "accuracy": np.zeros(1, np.float32),
+        "p_claim": np.zeros((1, 4), np.float32),
+        "touched_keys": np.zeros(0, np.int64),
+        "meta": np.array([3, 1, 0], np.int64)})
+    rec = CommitRecord.from_payload(old_commit)
+    assert (rec.owner_lo, rec.owner_hi) == (-1, -1)
+    assert (rec.epoch, rec.compact, rec.compacted) == (3, True, False)
+    old_retract = _encode_arrays({
+        "row_ids": np.array([2], np.int64),
+        "touched_keys": np.zeros(0, np.int64),
+        "meta": np.array([4, 10], np.int64)})
+    rrec = RetractRecord.from_payload(old_retract)
+    assert (rrec.owner_lo, rrec.owner_hi) == (-1, -1)
+    assert (rrec.epoch, rrec.n_before) == (4, 10)
+    # round-trip of a scoped record keeps the range
+    rt = CommitRecord.from_payload(CommitRecord(
+        epoch=5, values=np.zeros((1, 4), np.int32),
+        accuracy=np.zeros(1, np.float32),
+        p_claim=np.zeros((1, 4), np.float32),
+        touched_keys=np.zeros(0, np.int64), compact=True, compacted=False,
+        owner_lo=64, owner_hi=68).payload())
+    assert (rt.owner_lo, rt.owner_hi) == (64, 68)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: unseal → rebalance → reseal through the router
+# ---------------------------------------------------------------------------
+
+def test_rebalance_drill_end_to_end():
+    ds, p = _corpus()
+    cfg = CopyConfig()
+    qv, qa, qp = _query(ds, q=40, seed=9)
+    router = ReplicaRouter(ds, p, cfg, shard_owners=2, mode="bucketed",
+                           tile=16)
+    store = router.replicas[0]._index.store
+    # growth lands in the tail owner's range — skew the placement
+    for k in range(0, 40, 8):
+        router.commit(qv[k:k + 8], qa[k:k + 8], qp[k:k + 8])
+    assert store.plan.imbalance() > 1.25
+
+    moved = router.rebalance(tolerance=0.25)
+    assert moved
+    n_rows = store.n_rows
+    fresh_plan = make_shard_plan(n_rows, 2)
+    assert np.array_equal(store.plan.bounds, fresh_plan.bounds)
+    assert np.array_equal(store.plan.sizes(), fresh_plan.sizes())
+    assert store.plan.imbalance() <= 1.25
+
+    # per-shard footprints match a freshly-planned build over the same
+    # corpus: same live rows per slice (entry COLUMN order differs — the
+    # live store carries delta chunks a fresh build folds in)
+    fresh = DetectionService(
+        ClaimsDataset(
+            values=router.replicas[0].resident.values[:n_rows].copy(),
+            accuracy=router.replicas[0].resident.accuracy[:n_rows].copy()),
+        router.replicas[0].resident.p_claim[:n_rows].copy(),
+        cfg, mode="bucketed", tile=16, n_shards=2)
+    assert np.array_equal(fresh._index.store.plan.sizes(),
+                          store.plan.sizes())
+
+    # decisions after the rebalance match the fresh plan bit-for-bit
+    req = DetectRequest(rid=7, values=qv[:4], accuracy=qa[:4],
+                        p_claim=qp[:4])
+    got = _serve_one(router, req)
+    want = _serve_one(fresh, req)
+    assert np.array_equal(got.copying, want.copying)
+    assert np.array_equal(got.c_fwd, want.c_fwd)
+    assert np.array_equal(got.pr_independent, want.pr_independent)
+
+    # the sealed drill: seal (bitpacked), rebalance again after more skew —
+    # the router unseals, re-splits, reseals; reads still work after
+    router.commit(qv[:8], qa[:8], qp[:8])
+    store.seal(pack=True)
+    moved2 = router.rebalance(tolerance=0.0)
+    assert moved2 and store.sealed
+    store.unseal()
+    got2 = _serve_one(router, DetectRequest(rid=8, values=qv[:2],
+                                            accuracy=qa[:2], p_claim=qp[:2]))
+    assert got2.copying.shape == (2, router.replicas[0].resident.n_corpus)
+
+
+def test_rebalance_requires_sharded_index():
+    ds, p = _corpus(S=32)
+    router = ReplicaRouter(ds, p, CopyConfig(), n_replicas=2,
+                           mode="bucketed", tile=16)
+    with pytest.raises(RuntimeError):
+        router.rebalance()

@@ -12,6 +12,7 @@ installed (tests/conftest.py).
 import tempfile
 
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (
@@ -22,6 +23,9 @@ from repro.core import (
     rebalance_plan,
     shard_store,
 )
+from repro.core.engine import DetectionEngine
+from repro.core.index import build_index
+from repro.core.types import ClaimsDataset, CopyConfig
 
 CE = 16  # chunk width (multiple of 8) — small, so stores are multi-chunk
 
@@ -152,3 +156,52 @@ def test_rebalance_plan_restores_balance(seed, n_rows, n_shards):
     balanced = make_shard_plan(n_rows, n_shards)
     assert np.array_equal(rebalance_plan(balanced, n_rows).bounds,
                           balanced.bounds)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 31 - 1), n_shards=st.integers(2, 5),
+       skew=st.booleans())
+def test_degenerate_owner_placements_bit_equal_decisions(seed, n_shards,
+                                                         skew):
+    """ISSUE 10 satellite: owner fan-out/merge under empty shards,
+    single-row ranges, and ~1.25×-skew plans is bit-equal to single-host
+    decisions — and a missing owner refuses the merge instead of
+    silently merging a partial fleet."""
+    rng = np.random.default_rng(seed)
+    S, D, V = int(rng.integers(16, 49)), 24, 4
+    vals = rng.integers(0, V, (S, D)).astype(np.int32)
+    vals[rng.random((S, D)) < 0.3] = -1
+    vals[S // 2] = vals[1]                  # one certain copier pair
+    ds = ClaimsDataset(
+        values=vals, accuracy=rng.uniform(0.4, 0.9, S).astype(np.float32))
+    p = rng.uniform(0.3, 0.9, (S, D)).astype(np.float32)
+    cfg = CopyConfig(alpha=0.1, s=0.8, n=50.0)
+
+    idx_ref = build_index(ds, p, cfg)
+    ref = DetectionEngine(cfg, mode="bucketed", tile=16).detect(
+        ds, p, index=idx_ref)
+
+    if skew:
+        # ~1.25×-skew placement: one fat owner, the rest balanced
+        big = min(S - 1, max(1, int(round(1.25 * S / n_shards))))
+        rest = make_shard_plan(S - big, n_shards - 1)
+        plan = ShardPlan(bounds=np.concatenate(([0], big + rest.bounds)))
+    else:
+        # random cuts: uneven, EMPTY, and single-row owner ranges
+        plan = _random_plan(rng, S, n_shards)
+
+    idx = build_index(ds, p, cfg)
+    idx.store = shard_store(idx.store, plan)
+    eng = DetectionEngine(cfg, mode="bucketed", tile=16)
+    ctx = eng.owner_scan_context(ds, p, index=idx)
+    partials = [eng.detect_owner_partial(ds, p, s, ctx=ctx)
+                for s in range(plan.n_shards)]
+    # the merge is owner-keyed: arrival order must not matter
+    partials = [partials[i] for i in rng.permutation(len(partials))]
+    res = eng.finalize_owner_partials(ds, p, ctx, partials)
+    assert np.array_equal(res.copying, ref.copying)
+    assert np.array_equal(res.c_fwd, ref.c_fwd)
+    assert np.array_equal(res.pr_independent, ref.pr_independent)
+    # a fleet missing one owner must refuse, never partial-merge
+    with pytest.raises(ValueError):
+        eng.finalize_owner_partials(ds, p, ctx, partials[:-1])
